@@ -1,0 +1,88 @@
+"""Per-kernel microbench: interpret-mode wall time (CPU correctness path)
+vs the pure-jnp oracle, plus the kernel's analytic FLOPs and VMEM tile
+footprint for the TPU target."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd.kernel import ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def _t(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> List[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: B1 H8/KV2 S512 D64, blocks 128x128
+    B, H, KV, S, D = 1, 8, 2, 512, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, D), jnp.float32)
+    t_kern = _t(jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, causal=True, interpret=True)), q, k, v)
+    t_ref = _t(jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True)),
+               q, k, v)
+    flops = 4 * B * H * S * S * D // 2  # causal
+    vmem = (128 * D + 128 * D * 2 + 128 * D + 128 * 2) * 4
+    rows.append(f"kernel_flash_interpret,{t_kern:.0f},"
+                f"ref_us={t_ref:.0f};flops={flops};tile_vmem_B={vmem}")
+
+    # decode attention: B4 H16/KV8 S4096 D128
+    B, H, KV, S, D = 4, 16, 8, 4096, 128
+    ks = jax.random.split(key, 4)
+    q1 = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    lens = jnp.full((B,), S, jnp.int32)
+    t_kern = _t(jax.jit(lambda a, b, c, l: decode_attention(
+        a, b, c, l, interpret=True)), q1, kc, vc, lens)
+    t_ref = _t(jax.jit(decode_ref), q1, kc, vc, lens)
+    hbm = 2 * B * S * KV * D * 4
+    rows.append(f"kernel_decode_interpret,{t_kern:.0f},"
+                f"ref_us={t_ref:.0f};kv_bytes={hbm}")
+
+    # ssd: BH8 L1024 P64 N64 chunk 128
+    BH, L, P, N = 8, 1024, 64, 64
+    ks = jax.random.split(key, 4)
+    xdt = jax.random.normal(ks[0], (BH, L, P)) * 0.5
+    dA = -jnp.abs(jax.random.normal(ks[1], (BH, L))) * 0.1
+    Bm = jax.random.normal(ks[2], (BH, L, N)) * 0.3
+    Cm = jax.random.normal(ks[3], (BH, L, N)) * 0.3
+    t_kern = _t(jax.jit(lambda a, b, c, d: ssd_scan(
+        a, b, c, d, chunk=128, interpret=True)), xdt, dA, Bm, Cm)
+    t_ref = _t(jax.jit(ssd_ref), xdt, dA, Bm, Cm)
+    rows.append(f"kernel_ssd_interpret,{t_kern:.0f},ref_us={t_ref:.0f};"
+                f"chunk=128")
+
+    # rmsnorm: 8192 x 1024
+    x = jax.random.normal(key, (8192, 1024), jnp.float32)
+    w = jnp.ones((1024,))
+    t_kern = _t(jax.jit(lambda x, w: rmsnorm(x, w, interpret=True)), x, w)
+    t_ref = _t(jax.jit(rmsnorm_ref), x, w)
+    rows.append(f"kernel_rmsnorm_interpret,{t_kern:.0f},ref_us={t_ref:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,58 @@
+"""Roofline table: reads the dry-run result cache and emits one row per
+(arch x shape x mesh) with the three terms + bottleneck (§Roofline source
+of truth for EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def rows(tag: str = "") -> List[dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        r = json.load(open(fn))
+        if r.get("tag", "") != tag or r.get("status") != "ok":
+            continue
+        out.append(r)
+    return out
+
+
+def run() -> List[str]:
+    lines = []
+    for tag, label in (("", "baseline"), ("final", "optimized")):
+        for r in rows(tag):
+            ro = r["roofline"]
+            name = f"{r['arch']}|{r['shape']}|{r['mesh']}|{label}"
+            lines.append(
+                f"roofline_{name},{ro['step_time_bound_s'] * 1e6:.0f},"
+                f"bound={ro['bound']};t_comp={ro['t_compute_s']:.4f};"
+                f"t_mem={ro['t_memory_s']:.4f};"
+                f"t_coll={ro['t_collective_s']:.4f};"
+                f"useful={ro['useful_flops_ratio']:.3f}")
+    if not lines:
+        lines.append("roofline_missing,0,run repro.launch.dryrun first")
+    return lines
+
+
+def markdown_table(tag: str = "") -> str:
+    hdr = ("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bound | step bound | useful FLOPs |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    body = []
+    for r in rows(tag):
+        ro = r["roofline"]
+        body.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['t_compute_s']:.3f}s | {ro['t_memory_s']:.3f}s "
+            f"| {ro['t_collective_s']:.3f}s | **{ro['bound']}** "
+            f"| {ro['step_time_bound_s']:.3f}s "
+            f"| {ro['useful_flops_ratio']:.2f} |")
+    return "\n".join([hdr] + body)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

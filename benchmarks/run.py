@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Heavy roofline data comes from
+the dry-run cache (``python -m repro.launch.dryrun --all``); everything
+else runs at CPU-tiny scale here.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (inference_metrics, kernels_bench,
+                            roofline_report, table1_ddp, throughput)
+    print("name,us_per_call,derived")
+    sections = [
+        ("table1", table1_ddp.run),
+        ("inference", inference_metrics.run),
+        ("throughput", throughput.run),
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline_report.run),
+    ]
+    failures = 0
+    for name, fn in sections:
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

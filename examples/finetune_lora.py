@@ -1,0 +1,83 @@
+"""The "one-click" fine-tuning flow (paper §4.3): a service-plane client
+picks a curated recipe from the catalog, the FirecREST-style bridge
+submits it to the batch plane, and the capability guard gates the result.
+
+    PYTHONPATH=src python examples/finetune_lora.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, scaled_down
+from repro.core.bridge import PlaneBridge
+from repro.core.cluster import Cluster, NodeKind
+from repro.core.planes import BatchPlane
+from repro.data.pipeline import DataConfig, SFTDataset, SyntheticLM
+from repro.finetune.evals import CapabilityGuard
+from repro.finetune.lora import lora_init, lora_merge, lora_param_count
+from repro.finetune.recipes import CATALOG, resolve
+from repro.finetune.sft import make_lora_sft_step
+from repro.models import model as M
+from repro.training.optimizer import opt_init
+
+
+def main():
+    cfg = scaled_down(get_config("qwen1.5-4b"), num_layers=2, d_model=64,
+                      d_ff=128, vocab_size=128, num_heads=4,
+                      num_kv_heads=2, head_dim=16)
+    base = M.init(cfg, jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    guard = CapabilityGuard(cfg, SyntheticLM(dc), tolerance=0.5, steps=2)
+    guard.snapshot(base)
+
+    print("== recipe catalog ==")
+    for name, r in CATALOG.items():
+        print(f"  {name:18s} [{r.tier:9s}] {r.description}")
+
+    def recipe_runner(script, params, job):
+        recipe, lcfg, opt, extra = resolve(script, cfg, params)
+        import dataclasses
+        opt = dataclasses.replace(opt, lr=3e-3)  # tiny-model scale
+        ad = lora_init(base, lcfg, jax.random.PRNGKey(1))
+        print(f"  [batch-plane] {job.name}: LoRA r={lcfg.rank} "
+              f"targets={sorted(lcfg.targets)} "
+              f"({lora_param_count(ad):,} adapter params)")
+        step = jax.jit(make_lora_sft_step(cfg, opt, base, lcfg))
+        st = opt_init(opt, ad)
+        sft = SFTDataset(dc, prompt_len=8)
+        for i in range(int(extra.get("steps", 20))):
+            b = {k: jnp.asarray(v) for k, v in sft.batch(i).items()}
+            ad, st, m = step(ad, st, b)
+        merged = lora_merge(base, ad, lcfg)
+        check = guard.check(merged)
+        return {"final_loss": float(m["loss"]), "guard": check}
+
+    cluster = Cluster()
+    cluster.add_nodes("nid", 2, NodeKind.HPC)
+    batch = BatchPlane(cluster)
+    bridge = PlaneBridge(batch, recipe_runner,
+                         allowed_scripts=[n for n, r in CATALOG.items()
+                                          if r.tier == "one-click"])
+
+    print("== one-click submission via bridge ==")
+    resp = bridge.submit(script="sft_lora_safe",
+                         params={"rank": 8, "steps": 25}, nodes=1,
+                         tenant="sme-weather")
+    batch.tick()
+    status = bridge.status(resp.job_id)
+    result = bridge.result(resp.job_id)
+    print(f"  job {resp.job_id}: {status['state']}")
+    print(f"  final SFT loss: {result['final_loss']:.3f}")
+    g = result["guard"]
+    print(f"  capability guard: regression={g['ppl_regression']:+.3%} "
+          f"passed={g['passed']}")
+
+    print("== expert script outside the catalog is rejected ==")
+    try:
+        bridge.submit(script="sft_full_expert", params={}, nodes=1,
+                      tenant="sme-weather")
+    except PermissionError as e:
+        print(f"  rejected: {e}")
+
+
+if __name__ == "__main__":
+    main()

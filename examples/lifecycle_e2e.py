@@ -1,0 +1,210 @@
+"""End-to-end driver for the paper's Fig. 1 lifecycle:
+
+  data prep -> pre-train (batch plane, a few hundred steps, with a mid-run
+  simulated node failure + checkpoint/restart) -> SFT (LoRA recipe) ->
+  alignment (LoRA-DPO) -> capability/safety eval gates -> release
+  optimization (int8) -> publish to registry -> deploy on the service
+  plane -> serve through the governed gateway.
+
+    PYTHONPATH=src python examples/lifecycle_e2e.py
+"""
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, scaled_down
+from repro.core.cluster import Cluster, NodeKind
+from repro.core.gateway import Gateway, ModelEntry
+from repro.core.lifecycle import LifecyclePipeline, Stage, StageResult
+from repro.core.planes import DeploymentSpec, ServicePlane
+from repro.core.registry import ArtifactRegistry
+from repro.data.mixtures import Mixture, SourceSpec
+from repro.data.pipeline import (DataConfig, PreferenceDataset, SFTDataset,
+                                 SyntheticLM)
+from repro.finetune.dpo import make_lora_dpo_step
+from repro.finetune.evals import CapabilityGuard, evaluate
+from repro.finetune.lora import lora_init, lora_merge
+from repro.finetune.quantize import dequantize_tree, quantize_tree, quantized_bytes
+from repro.finetune.recipes import resolve
+from repro.finetune.sft import make_lora_sft_step
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine
+from repro.training.optimizer import OptConfig, opt_init
+from repro.training.trainer import (SimulatedNodeFailure, Trainer,
+                                    TrainerConfig)
+
+CKPT = "/tmp/repro_lifecycle"
+PRETRAIN_STEPS = 200
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = scaled_down(get_config("apertus-8b"), num_layers=4, d_model=128,
+                      d_ff=256, vocab_size=512, num_heads=4,
+                      num_kv_heads=2, head_dim=32)
+    print(f"model: {cfg.name}-tiny, {cfg.param_count():,} params")
+    registry = ArtifactRegistry()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=16)
+    guard = CapabilityGuard(cfg, SyntheticLM(dc), tolerance=0.5, steps=2)
+
+    def stage_data(ctx):
+        mix = Mixture([(SourceSpec("web", 0.8, "dedup_rows"),
+                        SyntheticLM(dc)),
+                       (SourceSpec("curated", 0.2), SyntheticLM(dc))],
+                      seed=3)
+        ctx.state["mixture"] = mix
+        aid = ctx.register("data", "dataset",
+                           f"mixture:{mix.recipe_hash()}")
+        return StageResult("data", aid, {"hash": mix.recipe_hash()})
+
+    def stage_pretrain(ctx):
+        fails = {77}  # a node dies mid-run; requeue + restore handles it
+
+        def inject(step):
+            if step in fails:
+                fails.discard(step)
+                raise SimulatedNodeFailure(step)
+
+        tr = Trainer(cfg, OptConfig(lr=3e-3), ctx.state["mixture"],
+                     TrainerConfig(num_steps=PRETRAIN_STEPS, ckpt_every=50,
+                                   ckpt_dir=CKPT, log_every=50),
+                     failure_injector=inject)
+        res = tr.run()
+        print(f"  pretrain: {PRETRAIN_STEPS} steps, "
+              f"{res['restarts']} restart(s), "
+              f"loss {res['log'][0]['loss']:.3f} -> "
+              f"{res['log'][-1]['loss']:.3f}")
+        ctx.state["base"] = tr.params
+        guard.snapshot(tr.params)
+        aid = ctx.register("pretrain", "checkpoint", CKPT,
+                           parent_stages=["data"], size_bytes=1 << 20)
+        return StageResult("pretrain", aid,
+                           {"restarts": res["restarts"]},
+                           passed=res["log"][-1]["loss"]
+                           < res["log"][0]["loss"])
+
+    def stage_sft(ctx):
+        base = ctx.state["base"]
+        _, lcfg, opt, extra = resolve("sft_lora_safe", cfg, {"rank": 8})
+        import dataclasses
+        opt = dataclasses.replace(opt, lr=1.5e-3)
+        ad = lora_init(base, lcfg, jax.random.PRNGKey(1))
+        step = jax.jit(make_lora_sft_step(cfg, opt, base, lcfg))
+        st = opt_init(opt, ad)
+        # "safe-by-default" anti-forgetting: interleave base-distribution
+        # replay batches with the SFT stream (3:2), exactly the recipe
+        # calibration §4.3 motivates — without it this stage pushes base
+        # perplexity up >100x and the eval gate aborts the pipeline.
+        sft = SFTDataset(dc, prompt_len=8)
+        replay = SyntheticLM(dc)
+        first = last = None
+        for i in range(40):
+            src = sft if i % 5 < 3 else replay
+            off = 0 if src is sft else 500_000
+            b = {k: jnp.asarray(v) for k, v in src.batch(i + off).items()}
+            ad, st, m = step(ad, st, b)
+            if src is sft:
+                first = first if first is not None else float(m["loss"])
+                last = float(m["loss"])
+        print(f"  sft (with replay): style loss {first:.3f} -> {last:.3f}")
+        ctx.state["sft_adapters"], ctx.state["lcfg"] = ad, lcfg
+        aid = ctx.register("sft", "adapter", "adapters/sft-v1",
+                           parent_stages=["pretrain"])
+        return StageResult("sft", aid, {"loss": last}, passed=last < first)
+
+    def stage_align(ctx):
+        base = ctx.state["base"]
+        lcfg = ctx.state["lcfg"]
+        opt = OptConfig(lr=3e-4, weight_decay=0.0)
+        # continue from the SFT adapters
+        ad = ctx.state["sft_adapters"]
+        step = jax.jit(make_lora_dpo_step(cfg, opt, base, lcfg))
+        st = opt_init(opt, ad)
+        pref = PreferenceDataset(dc, prompt_len=8)
+        acc = 0.0
+        for i in range(12):
+            pb = pref.batch(i)
+            pb = {kk: {k: jnp.asarray(v) for k, v in d.items()}
+                  for kk, d in pb.items()}
+            ad, st, m = step(ad, st, pb)
+            acc = float(m["preference_accuracy"])
+        print(f"  align (DPO): preference accuracy {acc:.2f}")
+        ctx.state["aligned"] = lora_merge(base, ad, lcfg)
+        aid = ctx.register("align", "adapter", "adapters/dpo-v1",
+                           parent_stages=["sft"])
+        return StageResult("align", aid, {"pref_acc": acc},
+                           passed=acc >= 0.75)
+
+    def stage_eval(ctx):
+        check = guard.check(ctx.state["aligned"])
+        print(f"  eval gate: base-ppl regression {check['ppl_regression']:+.2%} "
+              f"(tolerance 50%) passed={check['passed']}")
+        aid = ctx.register("eval", "eval", "evals/guard-v1",
+                           parent_stages=["align"])
+        return StageResult("eval", aid, check, passed=check["passed"])
+
+    def stage_release(ctx):
+        q = quantize_tree(ctx.state["aligned"])
+        released = dequantize_tree(q, jnp.float32)
+        before = sum(x.size * 4 for x in jax.tree.leaves(
+            ctx.state["aligned"]))
+        after = quantized_bytes(q)
+        print(f"  release: int8 quantization {before/1e6:.1f}MB -> "
+              f"{after/1e6:.1f}MB")
+        ctx.state["released"] = released
+        aid = ctx.register("release", "model", "models/tiny-v1-int8",
+                           parent_stages=["align", "eval"],
+                           size_bytes=after)
+        ctx.registry.pin(aid)
+        return StageResult("release", aid,
+                           {"compression": before / after})
+
+    def stage_deploy(ctx):
+        cluster = Cluster()
+        cluster.add_nodes("nid", 2, NodeKind.HPC)
+        cluster.add_nodes("vm", 1, NodeKind.COMMODITY)
+        sp = ServicePlane(cluster)
+        engines = []
+
+        def factory(node):
+            e = InferenceEngine(cfg, ctx.state["released"], max_batch=2,
+                                capacity=96, name=f"eng-{node}")
+            engines.append(e)
+            return e
+
+        sp.apply(DeploymentSpec("tiny-v1", 1, NodeKind.HPC,
+                                factory=factory))
+        sp.reconcile()
+        gw = Gateway()
+        gw.vet_model(ModelEntry("tiny-v1", cfg.name, 0.1, 0.3), cfg)
+        gw.bind_endpoints("tiny-v1", engines)
+        key = gw.mint_key("pilot-user", budget_usd=1.0)
+        out = gw.completion(api_key=key.key, model="tiny-v1",
+                            prompt=[3, 5, 7, 11], max_tokens=12)
+        print(f"  deployed + served: {out['tokens']}")
+        aid = ctx.register("deploy", "model", "endpoints/tiny-v1",
+                           parent_stages=["release"])
+        return StageResult("deploy", aid,
+                           {"served": len(out["tokens"])},
+                           passed=len(out["tokens"]) == 12)
+
+    pipe = LifecyclePipeline(
+        [Stage("data", stage_data), Stage("pretrain", stage_pretrain),
+         Stage("sft", stage_sft), Stage("align", stage_align),
+         Stage("eval", stage_eval), Stage("release", stage_release),
+         Stage("deploy", stage_deploy)], registry)
+    history = pipe.run()
+
+    print("\n== lifecycle summary ==")
+    for h in history:
+        print(f"  {h.stage:9s} artifact={h.artifact_id} passed={h.passed}")
+    deploy_id = pipe.ctx.artifacts["deploy"]
+    chain = " -> ".join(a.artifact_id
+                        for a in registry.lineage(deploy_id))
+    print(f"  provenance: {chain} -> {deploy_id}")
+    print(f"  storage by kind: {registry.storage_by_kind()}")
+
+
+if __name__ == "__main__":
+    main()

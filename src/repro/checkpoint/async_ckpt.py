@@ -1,0 +1,54 @@
+"""Async checkpointing: device->host copy happens synchronously (cheap),
+serialization/IO happens on a background thread so the train loop keeps
+stepping.  Double-buffered: at most one save in flight; a new save waits
+for the previous one (bounds host memory at one checkpoint)."""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.checkpoint import ckpt
+
+
+class AsyncCheckpointer:
+    def __init__(self, root: str, keep_last: int = 3, keep_every: int = 0):
+        self.root = root
+        self.keep_last = keep_last
+        self.keep_every = keep_every
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.saved_steps = []
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree, extra_meta: Optional[Dict] = None):
+        self.wait()
+        # snapshot to host while the device keeps running the next steps
+        host_tree = jax.tree.map(jax.device_get, tree)
+
+        def work():
+            try:
+                ckpt.save(self.root, step, host_tree, extra_meta)
+                self.saved_steps.append(step)
+                ckpt.gc(self.root, self.keep_last, self.keep_every)
+            except BaseException as e:  # noqa: BLE001 - surfaced on wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save_sync(self, step: int, tree, extra_meta=None):
+        self.wait()
+        d = ckpt.save(self.root, step, jax.tree.map(jax.device_get, tree),
+                      extra_meta)
+        self.saved_steps.append(step)
+        ckpt.gc(self.root, self.keep_last, self.keep_every)
+        return d

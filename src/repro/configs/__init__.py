@@ -1,0 +1,7 @@
+from repro.configs.base import ModelConfig, get_config, list_archs, register, scaled_down
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, cells
+
+__all__ = [
+    "ModelConfig", "get_config", "list_archs", "register", "scaled_down",
+    "SHAPES", "ShapeSpec", "applicable", "cells",
+]

@@ -1,0 +1,27 @@
+"""Import side-effects: populate the arch registry."""
+import repro.configs.granite_moe_3b_a800m  # noqa: F401
+import repro.configs.deepseek_v2_lite_16b  # noqa: F401
+import repro.configs.yi_34b                # noqa: F401
+import repro.configs.qwen2_5_32b           # noqa: F401
+import repro.configs.qwen1_5_4b            # noqa: F401
+import repro.configs.glm4_9b               # noqa: F401
+import repro.configs.mamba2_1_3b           # noqa: F401
+import repro.configs.internvl2_1b          # noqa: F401
+import repro.configs.jamba_v0_1_52b        # noqa: F401
+import repro.configs.whisper_small         # noqa: F401
+import repro.configs.apertus_8b            # noqa: F401
+import repro.configs.apertus_70b           # noqa: F401
+
+ASSIGNED = [
+    "granite-moe-3b-a800m",
+    "deepseek-v2-lite-16b",
+    "yi-34b",
+    "qwen2.5-32b",
+    "qwen1.5-4b",
+    "glm4-9b",
+    "mamba2-1.3b",
+    "internvl2-1b",
+    "jamba-v0.1-52b",
+    "whisper-small",
+]
+PAPER_OWN = ["apertus-8b", "apertus-70b"]

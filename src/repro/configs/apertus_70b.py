@@ -1,0 +1,24 @@
+"""apertus-70b — the paper's own served model (§5.2 Apertus-70B metrics).
+[arXiv:2509.14233; swiss-ai/Apertus-70B]
+
+Llama-3-70B-class geometry: 80L d_model=8192 64H (GQA kv=8) d_ff=28672,
+vocab=131072.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("apertus-70b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="apertus-70b",
+        family="dense",
+        num_layers=80,
+        d_model=8192,
+        d_ff=28672,
+        vocab_size=131072,
+        attention="gqa",
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        rope_theta=500_000.0,
+    )

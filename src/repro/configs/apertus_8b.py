@@ -1,0 +1,25 @@
+"""apertus-8b — the paper's own served model (§5.2 Apertus-8B metrics).
+[arXiv:2509.14233; swiss-ai/Apertus-8B]
+
+Llama-3-class geometry: 32L d_model=4096 32H (GQA kv=8) d_ff=14336,
+vocab=131072.  (Apertus uses xIELU + QK-norm; we use the SiLU-gated MLP of
+the same shape — the serving/roofline characteristics are unchanged.)
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("apertus-8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="apertus-8b",
+        family="dense",
+        num_layers=32,
+        d_model=4096,
+        d_ff=14336,
+        vocab_size=131072,
+        attention="gqa",
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        rope_theta=500_000.0,
+    )

@@ -1,0 +1,36 @@
+"""deepseek-v2-lite-16b  [moe]
+
+27L d_model=2048 16H, MLA with kv_lora_rank=512 (qk_nope 128 + qk_rope 64,
+v_head 128), vocab=102400.  MoE: 64 routed experts top-6 + 2 shared experts,
+expert d_ff=1408, first layer dense (d_ff=10944).  [arXiv:2405.04434; hf]
+
+Note: the assignment line reads "2 shared+160 routed"; 160 routed is the
+full DeepSeek-V2 — the *Lite* model (which the 27L/2048d geometry matches)
+has 64 routed experts, which we follow.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("deepseek-v2-lite-16b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b",
+        family="moe",
+        num_layers=27,
+        d_model=2048,
+        d_ff=10944,              # dense MLP of layer 0 (first_k_dense)
+        vocab_size=102400,
+        attention="mla",
+        num_heads=16,
+        kv_lora_rank=512,
+        q_lora_rank=0,           # lite has no q compression
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+        num_experts=64,
+        num_shared_experts=2,
+        moe_top_k=6,
+        moe_d_ff=1408,
+        first_k_dense=1,
+        rope_theta=10_000.0,
+    )

@@ -1,0 +1,24 @@
+"""glm4-9b  [dense] — GQA kv=2, partial RoPE, QKV bias.  [hf:THUDM/glm-4-9b; hf]
+
+40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("glm4-9b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="glm4-9b",
+        family="dense",
+        num_layers=40,
+        d_model=4096,
+        d_ff=13696,
+        vocab_size=151552,
+        attention="gqa",
+        num_heads=32,
+        num_kv_heads=2,
+        head_dim=128,
+        qkv_bias=True,
+        rope_fraction=0.5,
+        rope_theta=10_000.0,
+    )

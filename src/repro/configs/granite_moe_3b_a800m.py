@@ -1,0 +1,28 @@
+"""granite-moe-3b-a800m  [moe]
+
+32L d_model=1536 24H (GQA kv=8) vocab=49155, MoE 40 experts top-8 with
+expert d_ff=512 (every layer MoE, no shared experts).
+[hf:ibm-granite/granite-3.0-1b-a400m-base family; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("granite-moe-3b-a800m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        num_layers=32,
+        d_model=1536,
+        d_ff=0,                  # all layers are MoE
+        vocab_size=49155,
+        attention="gqa",
+        num_heads=24,
+        num_kv_heads=8,
+        head_dim=64,             # 1536 / 24
+        num_experts=40,
+        moe_top_k=8,
+        moe_d_ff=512,
+        moe_layer_period=1,
+        rope_theta=10_000.0,
+    )

@@ -1,0 +1,31 @@
+"""internvl2-1b  [vlm] — InternViT frontend (STUB) + Qwen2-0.5B-class LM
+backbone.  [arXiv:2404.16821; hf]
+
+Backbone: 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+The vision frontend is a stub per the assignment: ``input_specs()``
+provides precomputed patch embeddings (256 tokens, 1024-d) which the model
+projects into the backbone width.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("internvl2-1b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b",
+        family="vlm",
+        num_layers=24,
+        d_model=896,
+        d_ff=4864,
+        vocab_size=151655,
+        attention="gqa",
+        num_heads=14,
+        num_kv_heads=2,
+        head_dim=64,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        frontend="vision",
+        frontend_tokens=256,
+        frontend_dim=1024,
+        tie_embeddings=True,
+    )

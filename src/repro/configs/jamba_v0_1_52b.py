@@ -1,0 +1,43 @@
+"""jamba-v0.1-52b  [hybrid] — Mamba + attention 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887; hf]
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536.  Period-8
+super-blocks: attention at position 4, mamba elsewhere; MoE every 2nd layer
+(offset 1), 16 experts top-2 with expert d_ff = 14336.
+
+Hardware adaptation note (see DESIGN.md): Jamba v0.1 uses Mamba-1 selective
+scan (d_state=16); we realize its mamba layers with the Mamba2/SSD
+formulation of the same state-space family because SSD's chunked matmul
+structure maps onto the TPU MXU, whereas Mamba-1's elementwise diagonal
+recurrence does not.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("jamba-v0.1-52b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b",
+        family="hybrid",
+        num_layers=32,
+        d_model=4096,
+        d_ff=14336,
+        vocab_size=65536,
+        attention="gqa",
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        pos_emb="none",          # jamba uses no positional encoding
+        num_experts=16,
+        moe_top_k=2,
+        moe_d_ff=14336,
+        moe_layer_period=2,
+        moe_layer_offset=1,
+        ssm_state=16,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ssm_chunk=256,
+        block_period=8,
+        attn_positions=(4,),
+    )

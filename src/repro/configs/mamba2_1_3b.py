@@ -1,0 +1,27 @@
+"""mamba2-1.3b  [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060]
+
+48L d_model=2048, ssm_state=128, expand=2 (d_inner=4096, 64 heads of 64),
+conv_width=4, vocab=50280.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("mamba2-1.3b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b",
+        family="ssm",
+        num_layers=48,
+        d_model=2048,
+        d_ff=0,                  # attn-free, MLP-free (mamba block only)
+        vocab_size=50280,
+        attention="none",
+        pos_emb="none",
+        ssm_state=128,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ssm_chunk=256,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,23 @@
+"""qwen2.5-32b  [dense] — GQA with QKV bias.  [hf:Qwen/Qwen2.5 family; hf]
+
+64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("qwen2.5-32b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-32b",
+        family="dense",
+        num_layers=64,
+        d_model=5120,
+        d_ff=27648,
+        vocab_size=152064,
+        attention="gqa",
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+    )

@@ -1,0 +1,55 @@
+"""Assigned input shapes and (arch × shape) applicability.
+
+LM transformer shapes are seq_len × global_batch.  ``decode_*``/``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len capacity),
+not ``train_step``.  ``long_500k`` requires sub-quadratic attention and is
+skipped for pure full-attention archs (noted in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# Whisper's encoder consumes a fixed ~30 s mel window (1500 frames; padded
+# to 1536 so the TP-sharded cross-KV divides the 16-way model axis); longer
+# "contexts" live in the decoder, which is how the assigned shapes are
+# applied to the enc-dec backbone.
+WHISPER_ENCODER_FRAMES = 1536
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.is_sub_quadratic:
+        return False, (
+            "long_500k skipped: pure full-attention arch (quadratic); run "
+            "only for SSM/hybrid per assignment")
+    return True, ""
+
+
+def cells(arch_ids, shape_names=None):
+    """Yield every applicable (arch_id, shape_name) cell."""
+    from repro.configs.base import get_config
+    shape_names = shape_names or list(SHAPES)
+    for a in arch_ids:
+        cfg = get_config(a)
+        for s in shape_names:
+            ok, _ = applicable(cfg, SHAPES[s])
+            if ok:
+                yield a, s

@@ -1,0 +1,33 @@
+"""whisper-small  [audio] — encoder-decoder with conv frontend (STUB).
+[arXiv:2212.04356]
+
+12L encoder + 12L decoder, d_model=768 12H (kv=12) d_ff=3072 vocab=51865,
+learned positional embeddings, LayerNorm, GELU.  The conv frontend is a
+stub per the assignment: ``input_specs()`` provides precomputed frame
+embeddings (mel frames already strided/conved into d_model-sized frames).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("whisper-small")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        family="audio",
+        num_layers=12,           # decoder layers
+        num_encoder_layers=12,
+        is_encoder_decoder=True,
+        d_model=768,
+        d_ff=3072,
+        vocab_size=51865,
+        attention="gqa",
+        num_heads=12,
+        num_kv_heads=12,
+        head_dim=64,
+        pos_emb="learned",
+        act="gelu",
+        norm="layernorm",
+        frontend="audio",
+        frontend_dim=768,        # stub frame embeddings arrive at d_model
+        max_position=1 << 16,
+    )

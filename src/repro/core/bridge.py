@@ -1,0 +1,71 @@
+"""FirecREST-style bridge (paper §4.3.2): the service plane's control
+logic programmatically submits and monitors *execution-plane* (batch) jobs
+through a narrow, typed API — never by sharing schedulers.
+
+Each submission references a curated *recipe* (script) from the catalog
+(repro.finetune.recipes); free-form scripts are rejected for non-expert
+tenants, which is how the "safe-by-default" blueprint guarantee is
+enforced at the boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.planes import BatchJob, BatchPlane, JobState
+
+
+@dataclasses.dataclass
+class SubmitResponse:
+    job_id: str
+    status: str
+
+
+class PlaneBridge:
+    def __init__(self, batch: BatchPlane,
+                 recipe_runner: Optional[Callable] = None,
+                 allowed_scripts: Optional[List[str]] = None):
+        self.batch = batch
+        self.recipe_runner = recipe_runner
+        self.allowed_scripts = allowed_scripts
+        self.audit_log: List[Dict[str, Any]] = []
+
+    # ---- REST-shaped surface -----------------------------------------
+    def submit(self, *, script: str, params: Dict[str, Any],
+               nodes: int = 1, priority: int = 0,
+               tenant: str = "default") -> SubmitResponse:
+        if self.allowed_scripts is not None \
+                and script not in self.allowed_scripts:
+            self.audit_log.append({"tenant": tenant, "script": script,
+                                   "action": "rejected"})
+            raise PermissionError(
+                f"script {script!r} is not in the curated catalog")
+
+        def run(job: BatchJob):
+            if self.recipe_runner is None:
+                return None
+            return self.recipe_runner(script, dict(params), job)
+
+        job = BatchJob(name=f"{tenant}:{script}", nodes_needed=nodes,
+                       run_fn=run, priority=priority, script=script,
+                       params=dict(params))
+        jid = self.batch.submit(job)
+        self.audit_log.append({"tenant": tenant, "script": script,
+                               "action": "submitted", "job_id": jid})
+        return SubmitResponse(jid, JobState.PENDING.value)
+
+    def status(self, job_id: str) -> Dict[str, Any]:
+        j = self.batch.jobs[job_id]
+        return {"job_id": job_id, "state": j.state.value,
+                "requeues": j.requeues, "error": j.error,
+                "nodes": list(j.assigned)}
+
+    def cancel(self, job_id: str) -> Dict[str, Any]:
+        self.batch.cancel(job_id)
+        return self.status(job_id)
+
+    def result(self, job_id: str) -> Any:
+        j = self.batch.jobs[job_id]
+        if j.state != JobState.DONE:
+            raise RuntimeError(f"job {job_id} is {j.state.value}")
+        return j.result

@@ -1,0 +1,101 @@
+"""Cluster model: heterogeneous node pools with diskless-HPC semantics.
+
+Mirrors the paper's Alpernetes substrate (§4.1): *hpc* nodes (Alps Cray EX
+— diskless, any node attachable to any plane, state lost on reboot) and
+*commodity* nodes (VMs — persistent, host control planes and lightweight
+services).  Planes (repro.core.planes) acquire nodes from here; the
+elastic controller (§6.2) moves delta-pool nodes between planes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+
+class NodeKind(str, enum.Enum):
+    HPC = "hpc"              # diskless Cray EX (GPU/TPU pod member)
+    COMMODITY = "commodity"  # VM on virtualization stack
+
+
+class NodeState(str, enum.Enum):
+    FREE = "free"
+    BATCH = "batch"          # attached to the batch plane (Slurm role)
+    SERVICE = "service"      # attached to the service plane (K8s role)
+    DOWN = "down"
+
+
+@dataclasses.dataclass
+class Node:
+    name: str
+    kind: NodeKind
+    chips: int = 4
+    memory_gb: int = 96
+    labels: Dict[str, str] = dataclasses.field(default_factory=dict)
+    state: NodeState = NodeState.FREE
+    # diskless semantics: everything here is lost on reboot/failure
+    ephemeral: Dict[str, object] = dataclasses.field(default_factory=dict)
+    boot_count: int = 0
+
+    def reboot(self):
+        """Diskless node: a reboot recreates the node from a clean state."""
+        self.ephemeral = {}
+        self.boot_count += 1
+        if self.state == NodeState.DOWN:
+            self.state = NodeState.FREE
+
+
+class Cluster:
+    def __init__(self, name: str = "alps"):
+        self.name = name
+        self.nodes: Dict[str, Node] = {}
+        self.vclusters: Dict[str, List[str]] = {}
+
+    # ---------------------------------------------------------- inventory
+    def add_nodes(self, prefix: str, n: int, kind: NodeKind, **kw) -> List[str]:
+        names = []
+        for i in range(n):
+            name = f"{prefix}{i:04d}"
+            self.nodes[name] = Node(name, kind, **kw)
+            names.append(name)
+        return names
+
+    def define_vcluster(self, name: str, node_names: List[str]):
+        """A vCluster is a logical partition of the machine (§4.1.4)."""
+        for n in node_names:
+            assert n in self.nodes, n
+        self.vclusters[name] = list(node_names)
+
+    def free_nodes(self, kind: Optional[NodeKind] = None,
+                   vcluster: Optional[str] = None) -> List[Node]:
+        pool = (self.vclusters[vcluster] if vcluster else self.nodes)
+        out = [self.nodes[n] for n in pool]
+        return [n for n in out if n.state == NodeState.FREE
+                and (kind is None or n.kind == kind)]
+
+    # ---------------------------------------------------------- lifecycle
+    def attach(self, name: str, plane: NodeState) -> Node:
+        """Any HPC node can attach to any plane (paper §4.1.4), provided
+        it is free.  Attaching clears node-local state (diskless)."""
+        node = self.nodes[name]
+        if node.state != NodeState.FREE:
+            raise RuntimeError(f"{name} is {node.state}, not free")
+        node.ephemeral = {}
+        node.state = plane
+        return node
+
+    def detach(self, name: str) -> Node:
+        node = self.nodes[name]
+        node.state = NodeState.FREE
+        node.ephemeral = {}
+        return node
+
+    def fail(self, name: str) -> Node:
+        node = self.nodes[name]
+        node.state = NodeState.DOWN
+        node.ephemeral = {}
+        return node
+
+    def nodes_in(self, plane: NodeState, kind: Optional[NodeKind] = None):
+        return [n for n in self.nodes.values() if n.state == plane
+                and (kind is None or n.kind == kind)]

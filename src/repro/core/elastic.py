@@ -1,0 +1,77 @@
+"""Elastic resource management (paper §6.2): a fixed *baseline* of nodes
+stays with the inference service; a *delta* pool moves between the batch
+and service planes under observed demand.
+
+Scaling policy: scale OUT when queue pressure exceeds ``hi`` for
+``patience`` consecutive ticks (claim a delta node from batch/free),
+scale IN when utilization stays under ``lo`` (return the node).  Node
+transitions respect diskless semantics — a node moving planes arrives
+clean and its engine is rebuilt by the deployment factory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core.cluster import Cluster, NodeKind, NodeState
+from repro.core.planes import BatchPlane, DeploymentSpec, ServicePlane
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    hi_queue_per_replica: float = 4.0   # scale out above this
+    lo_util: float = 0.25               # scale in below this
+    patience: int = 3
+    min_replicas: int = 1               # baseline ("hot" models stay up)
+    max_replicas: int = 8
+
+
+class ElasticController:
+    def __init__(self, cluster: Cluster, service: ServicePlane,
+                 deployment: str, policy: ElasticPolicy,
+                 load_fn: Callable[[], Dict[str, float]]):
+        """load_fn returns {"queue": waiting requests, "active": running
+        requests, "capacity": per-replica concurrent slots}."""
+        self.cluster = cluster
+        self.service = service
+        self.deployment = deployment
+        self.policy = policy
+        self.load_fn = load_fn
+        self.hot_ticks = 0
+        self.cold_ticks = 0
+        self.decisions: List[str] = []
+
+    def tick(self) -> Optional[str]:
+        spec = self.service.specs[self.deployment]
+        n = max(len(self.service.endpoints(self.deployment)), 1)
+        load = self.load_fn()
+        queue_pr = load["queue"] / n
+        util = load["active"] / max(n * load["capacity"], 1e-9)
+
+        decision = None
+        if queue_pr > self.policy.hi_queue_per_replica:
+            self.hot_ticks += 1
+            self.cold_ticks = 0
+            if (self.hot_ticks >= self.policy.patience
+                    and spec.replicas < self.policy.max_replicas
+                    and self._delta_available()):
+                spec.replicas += 1
+                decision = f"scale-out -> {spec.replicas}"
+                self.hot_ticks = 0
+        elif util < self.policy.lo_util:
+            self.cold_ticks += 1
+            self.hot_ticks = 0
+            if (self.cold_ticks >= self.policy.patience
+                    and spec.replicas > self.policy.min_replicas):
+                spec.replicas -= 1
+                decision = f"scale-in -> {spec.replicas}"
+                self.cold_ticks = 0
+        else:
+            self.hot_ticks = self.cold_ticks = 0
+        if decision:
+            self.decisions.append(decision)
+            self.service.reconcile()
+        return decision
+
+    def _delta_available(self) -> bool:
+        return bool(self.cluster.free_nodes(NodeKind.HPC))

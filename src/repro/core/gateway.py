@@ -1,0 +1,154 @@
+"""Inference gateway + governance (paper §4.4): the LiteLLM/Waldur layer.
+
+- API keys are minted per project with budgets, rate limits, and model
+  ACLs (Waldur's role).
+- The gateway routes to the least-loaded healthy replica of the model's
+  deployment (LiteLLM's role), meters per-key token usage and cost, and
+  rejects over-budget / over-rate / unauthorized calls.
+- Model onboarding is declarative and passes a vetting step that checks
+  the projected footprint and reserves failover capacity for hot models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.serving.engine import InferenceEngine, Request
+
+
+class GatewayError(RuntimeError):
+    pass
+
+
+class RateLimited(GatewayError):
+    pass
+
+
+class OverBudget(GatewayError):
+    pass
+
+
+class Unauthorized(GatewayError):
+    pass
+
+
+@dataclasses.dataclass
+class ApiKey:
+    key: str
+    project: str
+    budget_usd: float = 10.0
+    rate_limit_per_min: int = 600
+    allowed_models: Optional[List[str]] = None  # None = all
+    spent_usd: float = 0.0
+
+
+@dataclasses.dataclass
+class ModelEntry:
+    name: str
+    arch: str
+    usd_per_1k_prompt: float
+    usd_per_1k_completion: float
+    hot: bool = False                     # requires reserved failover capacity
+    deployment: str = ""
+    vetted: bool = False
+    footprint_gb: float = 0.0
+
+
+class Gateway:
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.keys: Dict[str, ApiKey] = {}
+        self.models: Dict[str, ModelEntry] = {}
+        self.endpoints: Dict[str, List[InferenceEngine]] = {}
+        self._windows: Dict[str, deque] = {}
+        self.usage_log: List[Dict[str, Any]] = []
+        self._ids = itertools.count(1)
+
+    # ----------------------------------------------------------- admin
+    def mint_key(self, project: str, **kw) -> ApiKey:
+        k = ApiKey(key=f"sk-{project}-{next(self._ids):06d}",
+                   project=project, **kw)
+        self.keys[k.key] = k
+        self._windows[k.key] = deque()
+        return k
+
+    def vet_model(self, entry: ModelEntry, cfg: ModelConfig,
+                  reserved_failover_gb: float = 0.0) -> ModelEntry:
+        """Onboarding vetting (§4.4): compute footprint & cost basis; hot
+        models must have failover capacity reserved."""
+        entry.footprint_gb = cfg.param_count() * 2 / 1e9  # bf16 weights
+        if entry.hot and reserved_failover_gb < entry.footprint_gb:
+            raise GatewayError(
+                f"hot model {entry.name} needs >= {entry.footprint_gb:.1f}"
+                f" GB reserved at the secondary site")
+        entry.vetted = True
+        self.models[entry.name] = entry
+        return entry
+
+    def bind_endpoints(self, model: str, engines: List[InferenceEngine]):
+        self.endpoints[model] = list(engines)
+
+    # ----------------------------------------------------------- checks
+    def _check(self, key: str, model: str) -> ApiKey:
+        if key not in self.keys:
+            raise Unauthorized("unknown api key")
+        k = self.keys[key]
+        if model not in self.models or not self.models[model].vetted:
+            raise Unauthorized(f"model {model} not onboarded")
+        if k.allowed_models is not None and model not in k.allowed_models:
+            raise Unauthorized(f"key not allowed on {model}")
+        if k.spent_usd >= k.budget_usd:
+            raise OverBudget(f"budget exhausted ({k.spent_usd:.4f} USD)")
+        now = self.clock()
+        w = self._windows[key]
+        while w and now - w[0] > 60.0:
+            w.popleft()
+        if len(w) >= k.rate_limit_per_min:
+            raise RateLimited("rate limit exceeded")
+        w.append(now)
+        return k
+
+    def _pick(self, model: str) -> InferenceEngine:
+        engines = [e for e in self.endpoints.get(model, []) if e.healthy]
+        if not engines:
+            raise GatewayError(f"no healthy endpoint for {model}")
+        return min(engines, key=lambda e: e.num_active)
+
+    # ----------------------------------------------------------- serve
+    def completion(self, *, api_key: str, model: str, prompt: List[int],
+                   max_tokens: int = 16, temperature: float = 0.0,
+                   run: bool = True) -> Dict[str, Any]:
+        k = self._check(api_key, model)
+        eng = self._pick(model)
+        req = Request(prompt=list(prompt), max_new_tokens=max_tokens,
+                      temperature=temperature)
+        rid = eng.submit(req)
+        if run:
+            eng.run_until_idle()
+        me = self.models[model]
+        cost = (len(prompt) * me.usd_per_1k_prompt
+                + len(req.generated) * me.usd_per_1k_completion) / 1000.0
+        k.spent_usd += cost
+        rec = {"request_id": rid, "project": k.project, "model": model,
+               "prompt_tokens": len(prompt),
+               "completion_tokens": len(req.generated),
+               "cost_usd": cost, "engine": eng.name}
+        self.usage_log.append(rec)
+        return {"id": rid, "tokens": req.generated, "usage": rec}
+
+    # ----------------------------------------------------------- reports
+    def usage_by_project(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for rec in self.usage_log:
+            d = out.setdefault(rec["project"],
+                               {"requests": 0, "prompt_tokens": 0,
+                                "completion_tokens": 0, "cost_usd": 0.0})
+            d["requests"] += 1
+            d["prompt_tokens"] += rec["prompt_tokens"]
+            d["completion_tokens"] += rec["completion_tokens"]
+            d["cost_usd"] += rec["cost_usd"]
+        return out

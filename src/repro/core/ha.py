@@ -1,0 +1,87 @@
+"""Active-active high availability (paper §6.3).
+
+Multiple *sites* serve production traffic concurrently; a cluster-mesh
+router health-gates endpoints, redistributes traffic in near real time,
+and fences split-brain with monotonic configuration epochs: control-plane
+writes carry the epoch, and a site that was partitioned (and therefore
+missed epochs) refuses stale writes until it re-syncs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Site:
+    name: str
+    endpoints: List[Any] = dataclasses.field(default_factory=list)
+    healthy: bool = True
+    partitioned: bool = False
+    epoch: int = 0                 # last config epoch this site has seen
+
+
+class SplitBrainError(RuntimeError):
+    pass
+
+
+class ClusterMesh:
+    """Cross-site service discovery + global load balancing + fencing."""
+
+    def __init__(self, sites: List[Site]):
+        self.sites = {s.name: s for s in sites}
+        self.epoch = max((s.epoch for s in sites), default=0)
+        self.routed: Dict[str, int] = {s.name: 0 for s in sites}
+
+    # ------------------------------------------------------------ health
+    def probe(self):
+        for s in self.sites.values():
+            s.healthy = (not s.partitioned) and any(
+                getattr(e, "healthy", True) for e in s.endpoints)
+
+    def partition(self, name: str):
+        self.sites[name].partitioned = True
+        self.probe()
+
+    def heal(self, name: str):
+        s = self.sites[name]
+        s.partitioned = False
+        s.epoch = self.epoch      # re-sync config before serving writes
+        self.probe()
+
+    # ------------------------------------------------------------ control
+    def propose_config(self, site_name: str) -> int:
+        """A control-plane write from a site.  Stale-epoch sites (healed
+        from a partition without re-sync, or still partitioned) are fenced."""
+        s = self.sites[site_name]
+        if s.partitioned:
+            raise SplitBrainError(
+                f"{site_name} is partitioned; write fenced")
+        if s.epoch < self.epoch:
+            raise SplitBrainError(
+                f"{site_name} at epoch {s.epoch} < mesh epoch "
+                f"{self.epoch}; must re-sync")
+        self.epoch += 1
+        for other in self.sites.values():
+            if not other.partitioned:
+                other.epoch = self.epoch
+        return self.epoch
+
+    # ------------------------------------------------------------ routing
+    def route(self, prefer: Optional[str] = None):
+        """Pick the healthiest/least-loaded endpoint across sites; failing
+        sites are skipped in near real time (active-active failover)."""
+        self.probe()
+        order = sorted(
+            (s for s in self.sites.values() if s.healthy),
+            key=lambda s: (0 if s.name == prefer else 1,
+                           self.routed[s.name]))
+        for site in order:
+            live = [e for e in site.endpoints
+                    if getattr(e, "healthy", True)]
+            if live:
+                self.routed[site.name] += 1
+                eng = min(live, key=lambda e: getattr(e, "num_active", 0))
+                return site, eng
+        raise RuntimeError("no healthy site available")

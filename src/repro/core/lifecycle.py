@@ -1,0 +1,71 @@
+"""The full FM lifecycle (paper Fig. 1) as an executable pipeline:
+
+  data prep -> pre-train -> SFT -> alignment -> safety/capability eval
+  -> release optimization (quantize) -> publish -> deploy (serve)
+
+Every stage consumes/produces registry artifacts with full lineage, runs
+on the correct plane (training stages through the bridge onto the batch
+plane; deployment onto the service plane), and evaluation is interleaved
+between stages with gates — exactly the iterative post-training loop the
+paper operationalizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.registry import ArtifactRegistry
+
+
+@dataclasses.dataclass
+class StageResult:
+    stage: str
+    artifact_id: Optional[str]
+    metrics: Dict[str, Any]
+    passed: bool = True
+
+
+@dataclasses.dataclass
+class Stage:
+    name: str
+    run: Callable[["LifecycleContext"], StageResult]
+    gate: Optional[Callable[[StageResult], bool]] = None
+
+
+class LifecycleError(RuntimeError):
+    pass
+
+
+class LifecycleContext:
+    """Mutable state threaded through stages (params, adapters, data…)."""
+
+    def __init__(self, registry: ArtifactRegistry):
+        self.registry = registry
+        self.state: Dict[str, Any] = {}
+        self.artifacts: Dict[str, str] = {}   # stage -> artifact id
+        self.history: List[StageResult] = []
+
+    def register(self, stage: str, kind: str, uri: str,
+                 parent_stages: List[str] = (), **meta) -> str:
+        parents = [self.artifacts[s] for s in parent_stages
+                   if s in self.artifacts]
+        a = self.registry.register(kind, uri, parents=parents, **meta)
+        self.artifacts[stage] = a.artifact_id
+        return a.artifact_id
+
+
+class LifecyclePipeline:
+    def __init__(self, stages: List[Stage], registry: ArtifactRegistry):
+        self.stages = stages
+        self.ctx = LifecycleContext(registry)
+
+    def run(self, stop_on_gate_failure: bool = True) -> List[StageResult]:
+        for stage in self.stages:
+            res = stage.run(self.ctx)
+            if stage.gate is not None:
+                res.passed = bool(stage.gate(res))
+            self.ctx.history.append(res)
+            if not res.passed and stop_on_gate_failure:
+                raise LifecycleError(
+                    f"stage {stage.name!r} failed its gate: {res.metrics}")
+        return self.ctx.history

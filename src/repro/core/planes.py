@@ -1,0 +1,226 @@
+"""The bifurcated orchestration planes (paper §4.3.2, Fig. 2).
+
+- ``BatchPlane``: Slurm-role — gang-scheduled jobs with priorities,
+  preemption, and requeue-on-failure.  Pre-training and heavy fine-tuning
+  execute here (checkpoint/restart comes from repro.training.trainer).
+- ``ServicePlane``: Kubernetes-role — declarative Deployments reconciled
+  against actual replica state (GitOps-style), health probes, node
+  selectors ("hpc=true" for engines, commodity for control services), and
+  the §5.3.1 property: commodity-hosted services survive HPC maintenance.
+
+Both planes draw nodes from one ``Cluster``; the elastic controller moves
+delta capacity between them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.cluster import Cluster, Node, NodeKind, NodeState
+
+
+class JobState(str, enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass
+class BatchJob:
+    name: str
+    nodes_needed: int
+    run_fn: Optional[Callable[["BatchJob"], Any]] = None
+    priority: int = 0
+    max_requeues: int = 3
+    job_id: str = ""
+    state: JobState = JobState.PENDING
+    assigned: List[str] = dataclasses.field(default_factory=list)
+    requeues: int = 0
+    result: Any = None
+    error: str = ""
+    script: str = ""            # recipe name (for bridge-submitted jobs)
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class BatchPlane:
+    """Gang scheduler over the cluster's batch partition."""
+
+    def __init__(self, cluster: Cluster, vcluster: Optional[str] = None):
+        self.cluster = cluster
+        self.vcluster = vcluster
+        self.queue: List[BatchJob] = []
+        self.jobs: Dict[str, BatchJob] = {}
+        self._ids = itertools.count(1)
+
+    def submit(self, job: BatchJob) -> str:
+        job.job_id = f"job-{next(self._ids)}"
+        self.jobs[job.job_id] = job
+        self.queue.append(job)
+        self.queue.sort(key=lambda j: -j.priority)
+        return job.job_id
+
+    def cancel(self, job_id: str):
+        job = self.jobs[job_id]
+        if job.state == JobState.RUNNING:
+            self._release(job)
+        job.state = JobState.CANCELLED
+        if job in self.queue:
+            self.queue.remove(job)
+
+    def _release(self, job: BatchJob):
+        for n in job.assigned:
+            if self.cluster.nodes[n].state == NodeState.BATCH:
+                self.cluster.detach(n)
+        job.assigned = []
+
+    def tick(self) -> List[str]:
+        """One scheduler pass: start pending jobs that fit.  Returns ids
+        of jobs that changed state."""
+        changed = []
+        for job in list(self.queue):
+            free = self.cluster.free_nodes(NodeKind.HPC, self.vcluster)
+            if len(free) < job.nodes_needed:
+                continue
+            take = [n.name for n in free[:job.nodes_needed]]
+            for n in take:
+                self.cluster.attach(n, NodeState.BATCH)
+            job.assigned = take
+            job.state = JobState.RUNNING
+            self.queue.remove(job)
+            changed.append(job.job_id)
+            if job.run_fn is not None:
+                try:
+                    job.result = job.run_fn(job)
+                    job.state = JobState.DONE
+                except Exception as e:  # noqa: BLE001
+                    job.error = f"{type(e).__name__}: {e}"
+                    self._on_failure(job)
+                finally:
+                    self._release(job)
+        return changed
+
+    def _on_failure(self, job: BatchJob):
+        """Node failure / job crash: requeue (checkpoint/restart picks up
+        from the last published step)."""
+        if job.requeues < job.max_requeues:
+            job.requeues += 1
+            job.state = JobState.PENDING
+            self.queue.append(job)
+            self.queue.sort(key=lambda j: -j.priority)
+        else:
+            job.state = JobState.FAILED
+
+    def handle_node_failure(self, node_name: str):
+        """A batch node died: fail the node, requeue any job using it."""
+        self.cluster.fail(node_name)
+        for job in self.jobs.values():
+            if job.state == JobState.RUNNING and node_name in job.assigned:
+                for n in job.assigned:
+                    if n != node_name:
+                        self.cluster.detach(n)
+                job.assigned = []
+                self._on_failure(job)
+
+
+# ===================================================================== #
+@dataclasses.dataclass
+class DeploymentSpec:
+    """Declarative deployment (the YAML-onboarding analogue, §4.4)."""
+    name: str
+    replicas: int
+    node_selector: NodeKind = NodeKind.HPC
+    factory: Optional[Callable[[str], Any]] = None  # node -> engine/handler
+    version: int = 1
+
+
+@dataclasses.dataclass
+class Replica:
+    deployment: str
+    node: str
+    handler: Any
+    version: int
+    healthy: bool = True
+
+
+class ServicePlane:
+    """Declarative reconciler over service nodes (K8s role)."""
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self.specs: Dict[str, DeploymentSpec] = {}
+        self.replicas: Dict[str, List[Replica]] = {}
+        self.events: List[str] = []
+
+    def apply(self, spec: DeploymentSpec):
+        """Declare desired state (GitOps commit)."""
+        self.specs[spec.name] = spec
+        self.replicas.setdefault(spec.name, [])
+
+    def delete(self, name: str):
+        for r in self.replicas.get(name, []):
+            self._teardown(r)
+        self.replicas.pop(name, None)
+        self.specs.pop(name, None)
+
+    def _teardown(self, r: Replica):
+        node = self.cluster.nodes.get(r.node)
+        if node and node.state == NodeState.SERVICE:
+            # only detach if no other replica uses this node
+            others = [x for rs in self.replicas.values() for x in rs
+                      if x is not r and x.node == r.node]
+            if not others:
+                self.cluster.detach(r.node)
+        self.events.append(f"teardown {r.deployment}@{r.node}")
+
+    def reconcile(self) -> List[str]:
+        """Drive actual state toward desired state.  Returns events."""
+        start = len(self.events)
+        for name, spec in self.specs.items():
+            reps = self.replicas[name]
+            # remove unhealthy / outdated replicas
+            for r in list(reps):
+                node = self.cluster.nodes.get(r.node)
+                node_ok = node is not None and node.state == NodeState.SERVICE
+                if not r.healthy or not node_ok or r.version != spec.version:
+                    self._teardown(r)
+                    reps.remove(r)
+            # scale down
+            while len(reps) > spec.replicas:
+                self._teardown(reps.pop())
+            # scale up
+            while len(reps) < spec.replicas:
+                node = self._acquire(spec.node_selector)
+                if node is None:
+                    self.events.append(f"pending {name}: no {spec.node_selector} node")
+                    break
+                handler = spec.factory(node.name) if spec.factory else None
+                reps.append(Replica(name, node.name, handler, spec.version))
+                self.events.append(f"start {name}@{node.name} v{spec.version}")
+        return self.events[start:]
+
+    def _acquire(self, kind: NodeKind) -> Optional[Node]:
+        free = self.cluster.free_nodes(kind)
+        if not free:
+            return None
+        return self.cluster.attach(free[0].name, NodeState.SERVICE)
+
+    def endpoints(self, name: str) -> List[Replica]:
+        return [r for r in self.replicas.get(name, []) if r.healthy]
+
+    def handle_node_failure(self, node_name: str):
+        """HPC node lost: mark replicas unhealthy; commodity-hosted
+        services are unaffected (the §5.3.1 uptime argument)."""
+        self.cluster.fail(node_name)
+        for reps in self.replicas.values():
+            for r in reps:
+                if r.node == node_name:
+                    r.healthy = False
+                    if r.handler is not None and hasattr(r.handler, "healthy"):
+                        r.handler.healthy = False
+
+    def rolling_update(self, name: str):
+        self.specs[name].version += 1

@@ -1,0 +1,127 @@
+"""Artifact registry with provenance + retention (paper §6.6).
+
+Tracks checkpoints, datasets/mixtures, adapters, and released models as a
+lineage DAG, so "which data produced this model" is answerable and GC can
+reclaim storage without destroying reproducibility: an artifact is
+collectible only if it is unpinned, past retention, not among the newest
+of its kind, and not the *direct* provenance of a pinned artifact (deeper
+ancestors are reproducible from the retained intermediate, so they may
+age out — this is what keeps "checkpoint explosion" bounded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Set
+
+
+@dataclasses.dataclass
+class Artifact:
+    artifact_id: str
+    kind: str                   # checkpoint | dataset | adapter | model | eval
+    uri: str
+    size_bytes: int = 0
+    parents: List[str] = dataclasses.field(default_factory=list)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    created: float = 0.0
+    pinned: bool = False
+    deleted: bool = False
+
+
+@dataclasses.dataclass
+class RetentionPolicy:
+    max_age_s: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {"checkpoint": 7 * 86400.0})
+    keep_last_per_kind: int = 2
+
+
+class ArtifactRegistry:
+    def __init__(self, clock=time.time):
+        self.clock = clock
+        self.artifacts: Dict[str, Artifact] = {}
+        self._ids = itertools.count(1)
+
+    def register(self, kind: str, uri: str, *, parents: Optional[List[str]] = None,
+                 size_bytes: int = 0, pinned: bool = False,
+                 **meta) -> Artifact:
+        for p in (parents or []):
+            if p not in self.artifacts:
+                raise KeyError(f"unknown parent artifact {p}")
+        a = Artifact(f"{kind}-{next(self._ids):05d}", kind, uri,
+                     size_bytes, list(parents or []), dict(meta),
+                     created=self.clock(), pinned=pinned)
+        self.artifacts[a.artifact_id] = a
+        return a
+
+    def pin(self, artifact_id: str, value: bool = True):
+        self.artifacts[artifact_id].pinned = value
+
+    # ------------------------------------------------------------ lineage
+    def lineage(self, artifact_id: str) -> List[Artifact]:
+        """All ancestors (provenance chain) oldest-first."""
+        seen: Set[str] = set()
+        order: List[Artifact] = []
+
+        def walk(aid: str):
+            a = self.artifacts[aid]
+            for p in a.parents:
+                if p not in seen:
+                    seen.add(p)
+                    walk(p)
+                    order.append(self.artifacts[p])
+
+        walk(artifact_id)
+        return order
+
+    def descendants(self, artifact_id: str) -> List[Artifact]:
+        out = []
+        for a in self.artifacts.values():
+            if artifact_id in a.parents:
+                out.append(a)
+                out.extend(self.descendants(a.artifact_id))
+        dedup = {a.artifact_id: a for a in out}
+        return list(dedup.values())
+
+    # ------------------------------------------------------------ GC
+    def collectible(self, policy: RetentionPolicy) -> List[Artifact]:
+        now = self.clock()
+        by_kind: Dict[str, List[Artifact]] = {}
+        for a in self.artifacts.values():
+            if not a.deleted:
+                by_kind.setdefault(a.kind, []).append(a)
+        keep_new: Set[str] = set()
+        for kind, arts in by_kind.items():
+            arts.sort(key=lambda a: a.created)
+            for a in arts[-policy.keep_last_per_kind:]:
+                keep_new.add(a.artifact_id)
+
+        out = []
+        for a in self.artifacts.values():
+            if a.deleted or a.pinned or a.artifact_id in keep_new:
+                continue
+            max_age = policy.max_age_s.get(a.kind)
+            if max_age is not None and now - a.created < max_age:
+                continue
+            # direct provenance of a pinned artifact is protected; deeper
+            # ancestors can be re-derived from the retained intermediate
+            children = [c for c in self.artifacts.values()
+                        if a.artifact_id in c.parents]
+            if any(c.pinned for c in children):
+                continue
+            out.append(a)
+        return out
+
+    def gc(self, policy: RetentionPolicy) -> int:
+        freed = 0
+        for a in self.collectible(policy):
+            a.deleted = True
+            freed += a.size_bytes
+        return freed
+
+    def storage_by_kind(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for a in self.artifacts.values():
+            if not a.deleted:
+                out[a.kind] = out.get(a.kind, 0) + a.size_bytes
+        return out

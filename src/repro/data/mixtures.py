@@ -1,0 +1,76 @@
+"""Dataset mixtures and filtering — the data-preparation stage of the
+lifecycle (Fig. 1: "datasets preparation ... data mixtures").
+
+A ``Mixture`` is a versioned, deterministic weighted blend of sources;
+its recipe (weights + filters) is hashable so the artifact registry can
+track which mixture produced which checkpoint (provenance, §6.6)."""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceSpec:
+    name: str
+    weight: float
+    filter_name: str = "none"   # none | dedup_rows | max_token
+
+
+FILTERS: Dict[str, Callable] = {
+    "none": lambda b: b,
+}
+
+
+def register_filter(name: str):
+    def deco(fn):
+        FILTERS[name] = fn
+        return fn
+    return deco
+
+
+@register_filter("dedup_rows")
+def _dedup_rows(batch):
+    """Drop duplicate rows (zero their mask) within the batch."""
+    toks = batch["tokens"]
+    _, first_idx = np.unique(toks, axis=0, return_index=True)
+    keep = np.zeros(toks.shape[0], bool)
+    keep[first_idx] = True
+    out = dict(batch)
+    out["mask"] = batch["mask"] * keep[:, None]
+    return out
+
+
+@register_filter("max_token")
+def _max_token(batch, limit: int = 1 << 30):
+    out = dict(batch)
+    out["mask"] = batch["mask"] * (batch["targets"] < limit)
+    return out
+
+
+class Mixture:
+    def __init__(self, sources: Sequence[Tuple[SourceSpec, object]],
+                 seed: int = 0):
+        self.sources = list(sources)
+        self.seed = seed
+        total = sum(s.weight for s, _ in self.sources)
+        self.probs = np.array([s.weight / total for s, _ in self.sources])
+
+    def recipe_hash(self) -> str:
+        doc = json.dumps([dataclasses.asdict(s) for s, _ in self.sources],
+                         sort_keys=True)
+        return hashlib.sha256(doc.encode()).hexdigest()[:16]
+
+    def batch(self, step: int, shard: int = 0, num_shards: int = 1):
+        rng = np.random.Generator(np.random.Philox(
+            key=self.seed + 3, counter=[step, shard, 0, 0]))
+        i = int(rng.choice(len(self.sources), p=self.probs))
+        spec, ds = self.sources[i]
+        b = ds.batch(step, shard, num_shards)
+        b = FILTERS[spec.filter_name](b)
+        b["source"] = spec.name
+        return b

@@ -1,0 +1,135 @@
+"""Deterministic, resumable, sharded data pipeline.
+
+Every batch is a pure function of (seed, step, shard) via counter-based
+Philox keys — so restart-from-checkpoint resumes the exact token stream
+with zero pipeline state, and elastic resharding (different shard count)
+keeps determinism per (step, global_index).
+
+The synthetic corpus is a fixed random bigram chain over the vocab, so
+small models measurably learn (loss drops below unigram entropy) in the
+end-to-end examples — a stand-in for the tokenized web corpora the paper's
+pre-training jobs consume from the parallel filesystem.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    branching: int = 8          # bigram successors per token
+    kind: str = "bigram"        # bigram | uniform
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM stream."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.Generator(np.random.Philox(key=cfg.seed))
+        v = cfg.vocab_size
+        # fixed bigram table: token t can be followed by branching tokens
+        self.successors = rng.integers(0, v, size=(v, cfg.branching),
+                                       dtype=np.int32)
+
+    def _tokens(self, step: int, shard: int, n_rows: int) -> np.ndarray:
+        c = self.cfg
+        rng = np.random.Generator(np.random.Philox(
+            key=c.seed + 1, counter=[step, shard, 0, 0]))
+        if c.kind == "uniform":
+            return rng.integers(0, c.vocab_size,
+                                size=(n_rows, c.seq_len + 1), dtype=np.int32)
+        out = np.empty((n_rows, c.seq_len + 1), np.int32)
+        out[:, 0] = rng.integers(0, c.vocab_size, size=n_rows)
+        choices = rng.integers(0, c.branching,
+                               size=(n_rows, c.seq_len)).astype(np.int32)
+        for t in range(c.seq_len):
+            out[:, t + 1] = self.successors[out[:, t], choices[:, t]]
+        return out
+
+    def batch(self, step: int, shard: int = 0,
+              num_shards: int = 1) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        assert c.global_batch % num_shards == 0
+        rows = c.global_batch // num_shards
+        toks = self._tokens(step, shard, rows)
+        return {
+            "tokens": toks[:, :-1],
+            "targets": toks[:, 1:],
+            "mask": np.ones((rows, c.seq_len), np.float32),
+        }
+
+    def iterate(self, start_step: int = 0, shard: int = 0,
+                num_shards: int = 1) -> Iterator[Dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch(step, shard, num_shards)
+            step += 1
+
+
+class SFTDataset:
+    """Synthetic (prompt, response) pairs with loss masked to the response —
+    the supervised fine-tuning stage of the lifecycle.
+
+    The "instruction style" is a low-rank behaviour: responses cycle
+    through a fixed token pattern (period ``style_period`` starting at
+    ``style_base``), so LoRA-rank adapters can provably express it — the
+    test signal is a steep response-loss drop."""
+
+    def __init__(self, cfg: DataConfig, prompt_len: int = 16,
+                 style_base: int = 7, style_period: int = 4):
+        self.cfg = cfg
+        self.prompt_len = prompt_len
+        self.style_base = style_base
+        self.style_period = style_period
+        self.base = SyntheticLM(cfg)
+
+    def batch(self, step: int, shard: int = 0, num_shards: int = 1):
+        b = self.base.batch(step + 100_000, shard, num_shards)
+        c = self.cfg
+        P = self.prompt_len
+        pos = np.arange(c.seq_len)
+        resp_row = (self.style_base
+                    + (pos % self.style_period)) % c.vocab_size
+        resp = np.broadcast_to(resp_row, b["tokens"].shape).astype(np.int32)
+        tokens = b["tokens"].copy()
+        targets = b["targets"].copy()
+        tokens[:, P:] = resp[:, P - 1:-1]
+        targets[:, P - 1:] = resp[:, P - 1:]
+        mask = np.zeros_like(b["mask"])
+        mask[:, P - 1:] = 1.0  # loss only on the response
+        return {"tokens": tokens, "targets": targets, "mask": mask}
+
+
+class PreferenceDataset:
+    """Synthetic preference pairs (chosen/rejected) for DPO alignment."""
+
+    def __init__(self, cfg: DataConfig, prompt_len: int = 16):
+        self.cfg = cfg
+        self.prompt_len = prompt_len
+        self.sft = SFTDataset(cfg, prompt_len)
+
+    def batch(self, step: int, shard: int = 0, num_shards: int = 1):
+        good = self.sft.batch(step, shard, num_shards)
+        rng = np.random.Generator(np.random.Philox(
+            key=self.cfg.seed + 9, counter=[step, shard, 0, 0]))
+        P = self.prompt_len
+        bad_resp = rng.integers(0, self.cfg.vocab_size,
+                                size=good["tokens"].shape, dtype=np.int32)
+        bad_tokens = good["tokens"].copy()
+        bad_targets = good["targets"].copy()
+        bad_tokens[:, P:] = bad_resp[:, P:]
+        bad_targets[:, P - 1:-1] = bad_resp[:, P:]
+        bad_targets[:, -1] = bad_resp[:, -1]
+        return {
+            "chosen": good,
+            "rejected": {"tokens": bad_tokens, "targets": bad_targets,
+                         "mask": good["mask"]},
+        }

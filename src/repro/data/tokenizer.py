@@ -1,0 +1,31 @@
+"""Byte-level tokenizer (stub for the data-prep stage).
+
+Real deployments plug in a trained BPE vocabulary; every interface the
+framework relies on (encode/decode/vocab_size/special ids) is here, and
+synthetic pipelines bypass tokenization entirely."""
+from __future__ import annotations
+
+from typing import List
+
+
+class ByteTokenizer:
+    """256 byte tokens + specials; ids are stable and reversible."""
+
+    PAD, BOS, EOS = 256, 257, 258
+
+    @property
+    def vocab_size(self) -> int:
+        return 259
+
+    def encode(self, text: str, *, bos: bool = True,
+               eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def decode(self, ids: List[int]) -> str:
+        return bytes(i for i in ids if i < 256).decode("utf-8",
+                                                       errors="replace")

@@ -1,0 +1,56 @@
+"""Direct Preference Optimization — the alignment stage of the lifecycle
+(Fig. 1 "alignment"; RL-free preference tuning suits the one-click tier)."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.finetune.lora import LoraConfig, lora_merge
+from repro.models import model as M
+from repro.models.param import cast_tree
+from repro.training.optimizer import OptConfig, clip_by_global_norm, opt_update
+
+
+def dpo_loss(cfg: ModelConfig, policy_params, ref_params, batch,
+             beta: float = 0.1):
+    """batch: {"chosen": lm-batch, "rejected": lm-batch}."""
+    lp_c = M.sequence_logprob(cfg, policy_params, batch["chosen"])
+    lp_r = M.sequence_logprob(cfg, policy_params, batch["rejected"])
+    ref_c = jax.lax.stop_gradient(
+        M.sequence_logprob(cfg, ref_params, batch["chosen"]))
+    ref_r = jax.lax.stop_gradient(
+        M.sequence_logprob(cfg, ref_params, batch["rejected"]))
+    margin = beta * ((lp_c - ref_c) - (lp_r - ref_r))
+    loss = -jnp.mean(jax.nn.log_sigmoid(margin))
+    acc = jnp.mean((margin > 0).astype(jnp.float32))
+    return loss, {"dpo_loss": loss, "preference_accuracy": acc,
+                  "margin": jnp.mean(margin)}
+
+
+def make_lora_dpo_step(cfg: ModelConfig, opt_cfg: OptConfig, base_params,
+                       lcfg: LoraConfig, beta: float = 0.1,
+                       schedule_fn: Optional[Callable] = None,
+                       compute_dtype=jnp.bfloat16):
+    """LoRA-DPO: the frozen base doubles as the reference policy, so no
+    second model copy is materialized (memory-safe for the service tier)."""
+    base_c = cast_tree(base_params, compute_dtype)
+
+    def step(adapters, opt_state, batch):
+        lr = (schedule_fn(opt_state["step"]) if schedule_fn
+              else jnp.asarray(opt_cfg.lr, jnp.float32))
+
+        def loss_fn(ad):
+            merged = lora_merge(base_c, ad, lcfg, compute_dtype)
+            return dpo_loss(cfg, merged, base_c, batch, beta)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(adapters)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        adapters, opt_state = opt_update(opt_cfg, grads, opt_state,
+                                         adapters, lr)
+        return adapters, opt_state, dict(metrics, grad_norm=gnorm, lr=lr)
+
+    return step

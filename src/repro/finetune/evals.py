@@ -1,0 +1,59 @@
+"""Interleaved evaluation (Fig. 1: "evaluation is not a terminal step").
+
+Perplexity + next-token accuracy on held-out streams; the capability
+guard compares base-distribution perplexity before/after adaptation to
+catch catastrophic forgetting (§4.3.1)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.param import cast_tree
+
+
+def evaluate(cfg: ModelConfig, params, data, *, steps: int = 4,
+             start_step: int = 1_000_000,
+             compute_dtype=jnp.bfloat16) -> Dict[str, float]:
+    pc = cast_tree(params, compute_dtype)
+    loss_fn = jax.jit(lambda p, b: M.train_loss(cfg, p, b)[1])
+    nll, n, correct = 0.0, 0.0, 0.0
+    for i in range(steps):
+        b = data.batch(start_step + i)
+        b = {k: jnp.asarray(v) for k, v in b.items() if k != "source"}
+        m = loss_fn(pc, b)
+        nll += float(m["loss"]) * float(m["tokens"])
+        correct += float(m["accuracy"]) * float(m["tokens"])
+        n += float(m["tokens"])
+    return {"nll": nll / n, "perplexity": float(np.exp(nll / n)),
+            "accuracy": correct / n, "tokens": n}
+
+
+class CapabilityGuard:
+    """Safe-by-default gate: adaptation must not degrade base-distribution
+    perplexity beyond ``tolerance`` (relative)."""
+
+    def __init__(self, cfg: ModelConfig, base_data, tolerance: float = 0.10,
+                 steps: int = 3):
+        self.cfg = cfg
+        self.base_data = base_data
+        self.tolerance = tolerance
+        self.steps = steps
+        self.baseline: Dict[str, float] = {}
+
+    def snapshot(self, params) -> Dict[str, float]:
+        self.baseline = evaluate(self.cfg, params, self.base_data,
+                                 steps=self.steps)
+        return self.baseline
+
+    def check(self, params) -> Dict[str, float]:
+        after = evaluate(self.cfg, params, self.base_data, steps=self.steps)
+        rel = (after["perplexity"] - self.baseline["perplexity"]) \
+            / self.baseline["perplexity"]
+        after["ppl_regression"] = rel
+        after["passed"] = bool(rel <= self.tolerance)
+        return after

@@ -1,0 +1,39 @@
+"""Release optimization (Fig. 1 "release optimizations"): per-channel
+symmetric int8 weight quantization for serving artifacts."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_tree(params, min_size: int = 1024):
+    """Returns (quantized tree, meta tree).  2D+ leaves above min_size are
+    stored as {"q": int8, "scale": f32 per output channel}."""
+    def one(leaf):
+        if leaf.ndim < 2 or leaf.size < min_size:
+            return {"raw": leaf}
+        w = leaf.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+    return jax.tree.map(one, params)
+
+
+def dequantize_tree(qtree, dtype=jnp.bfloat16):
+    def one(leaf):
+        if "raw" in leaf:
+            return leaf["raw"].astype(dtype)
+        return (leaf["q"].astype(jnp.float32) * leaf["scale"]).astype(dtype)
+    return jax.tree.map(
+        one, qtree,
+        is_leaf=lambda x: isinstance(x, dict) and ("raw" in x or "q" in x))
+
+
+def quantized_bytes(qtree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(qtree):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

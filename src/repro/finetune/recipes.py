@@ -1,0 +1,137 @@
+"""Curated fine-tuning recipe catalog (paper §4.3).
+
+Two tiers, mirroring the paper's user dichotomy:
+- "one-click" recipes: safe-by-default (LoRA, bounded lr/rank, capability
+  guard ON).  Tenants may override only whitelisted knobs within bounds.
+- "expert" recipes: full-parameter, guard advisory only — the Slurm-direct
+  crowd.
+
+Applicability is family-aware (DESIGN.md §7): attention-targeted LoRA is
+inapplicable to attention-free archs; mamba archs get in/out-projection
+targets instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.finetune.lora import (DEFAULT_TARGETS, MAMBA_TARGETS, MLP_TARGETS,
+                                 LoraConfig)
+from repro.training.optimizer import OptConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    name: str
+    description: str
+    stage: str                     # sft | align
+    tier: str                      # one-click | expert
+    families: Tuple[str, ...]      # applicable model families
+    lora: Optional[LoraConfig]     # None = full-parameter
+    opt: OptConfig = OptConfig(lr=1e-4, weight_decay=0.0)
+    guard_tolerance: Optional[float] = 0.10  # None = guard advisory
+    # whitelisted overrides: name -> (min, max)
+    tunable: Dict[str, Tuple[float, float]] = dataclasses.field(
+        default_factory=lambda: {"lr": (1e-6, 3e-4), "rank": (2, 64),
+                                 "steps": (1, 10_000)})
+
+
+def _targets_for(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.family == "ssm":
+        return MAMBA_TARGETS
+    if cfg.family == "hybrid":
+        return tuple(set(DEFAULT_TARGETS) | set(MAMBA_TARGETS))
+    return DEFAULT_TARGETS
+
+
+CATALOG: Dict[str, Recipe] = {}
+
+
+def _register(r: Recipe):
+    CATALOG[r.name] = r
+    return r
+
+
+_register(Recipe(
+    name="sft_lora_safe",
+    description="One-click SFT: LoRA r=8 on attention projections, "
+                "cosine lr<=1e-4, capability guard enforced.",
+    stage="sft", tier="one-click",
+    families=("dense", "moe", "vlm", "audio", "hybrid", "ssm"),
+    lora=LoraConfig(rank=8, alpha=16.0),
+))
+
+_register(Recipe(
+    name="sft_lora_wide",
+    description="SFT with LoRA on attention+MLP (higher capacity, still "
+                "guard-enforced).",
+    stage="sft", tier="one-click",
+    families=("dense", "moe", "vlm", "audio"),
+    lora=LoraConfig(rank=16, alpha=32.0,
+                    targets=tuple(set(DEFAULT_TARGETS) | set(MLP_TARGETS))),
+))
+
+_register(Recipe(
+    name="dpo_lora_safe",
+    description="One-click preference alignment: LoRA-DPO beta=0.1; the "
+                "frozen base doubles as the reference policy.",
+    stage="align", tier="one-click",
+    families=("dense", "moe", "vlm", "audio", "hybrid", "ssm"),
+    lora=LoraConfig(rank=8, alpha=16.0),
+    opt=OptConfig(lr=5e-5, weight_decay=0.0),
+))
+
+_register(Recipe(
+    name="sft_full_expert",
+    description="Expert-tier full-parameter SFT (Slurm-direct users); "
+                "guard advisory only.",
+    stage="sft", tier="expert",
+    families=("dense", "moe", "vlm", "audio", "hybrid", "ssm"),
+    lora=None,
+    opt=OptConfig(lr=2e-5, weight_decay=0.0),
+    guard_tolerance=None,
+))
+
+
+class RecipeError(ValueError):
+    pass
+
+
+def resolve(name: str, cfg: ModelConfig,
+            overrides: Optional[Dict[str, Any]] = None
+            ) -> Tuple[Recipe, LoraConfig, OptConfig, Dict[str, Any]]:
+    """Validate applicability + clamp overrides to the whitelist."""
+    if name not in CATALOG:
+        raise RecipeError(f"unknown recipe {name!r}; catalog: "
+                          f"{sorted(CATALOG)}")
+    r = CATALOG[name]
+    if cfg.family not in r.families:
+        raise RecipeError(
+            f"recipe {name} not applicable to family {cfg.family!r}")
+    overrides = dict(overrides or {})
+    extra: Dict[str, Any] = {"steps": 20}
+    opt = r.opt
+    lora = r.lora
+    for k, v in overrides.items():
+        if k not in r.tunable:
+            raise RecipeError(
+                f"override {k!r} is not tunable in {name} "
+                f"(allowed: {sorted(r.tunable)})")
+        lo, hi = r.tunable[k]
+        if not (lo <= float(v) <= hi):
+            raise RecipeError(
+                f"override {k}={v} outside safe bounds [{lo}, {hi}]")
+        if k == "lr":
+            opt = dataclasses.replace(opt, lr=float(v))
+        elif k == "rank" and lora is not None:
+            lora = dataclasses.replace(lora, rank=int(v),
+                                       alpha=2.0 * int(v))
+        else:
+            extra[k] = v
+    if lora is not None:
+        # family-aware targets (attention LoRA inapplicable to SSM archs)
+        lora = dataclasses.replace(lora, targets=tuple(
+            t for t in (set(lora.targets) | set(_targets_for(cfg)))
+            if cfg.family not in ("ssm",) or t in MAMBA_TARGETS))
+    return r, lora, opt, extra

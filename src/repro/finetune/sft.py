@@ -1,0 +1,50 @@
+"""Supervised fine-tuning: masked-CE over responses, full-parameter or
+LoRA.  The LoRA step differentiates only the adapter tree (base frozen)."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.finetune.lora import LoraConfig, lora_merge
+from repro.models import model as M
+from repro.models.param import cast_tree
+from repro.training.optimizer import OptConfig, clip_by_global_norm, opt_update
+
+
+def make_lora_sft_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                       base_params, lcfg: LoraConfig,
+                       schedule_fn: Optional[Callable] = None,
+                       compute_dtype=jnp.bfloat16):
+    """Step over (adapters, opt_state, batch); base params are closed over
+    and never updated."""
+    base_c = cast_tree(base_params, compute_dtype)
+
+    def step(adapters, opt_state, batch):
+        lr = (schedule_fn(opt_state["step"]) if schedule_fn
+              else jnp.asarray(opt_cfg.lr, jnp.float32))
+
+        def loss_fn(ad):
+            merged = lora_merge(base_c, ad, lcfg, compute_dtype)
+            return M.train_loss(cfg, merged, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(adapters)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        adapters, opt_state = opt_update(opt_cfg, grads, opt_state,
+                                         adapters, lr)
+        return adapters, opt_state, dict(metrics, grad_norm=gnorm, lr=lr)
+
+    return step
+
+
+class LoraSFTData:
+    """Adapter for Trainer-style .batch() over an SFT dataset."""
+
+    def __init__(self, ds):
+        self.ds = ds
+
+    def batch(self, step, shard=0, num_shards=1):
+        return self.ds.batch(step, shard, num_shards)

@@ -1,0 +1,17 @@
+"""Jit'd wrapper for flash-decode (model layout, CPU interpret fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("blk_k",))
+def decode(q, k_cache, v_cache, lengths, *, blk_k: int = 256):
+    """q: (B,1,H,D); caches: (B,S,KV,D); lengths: (B,) -> (B,1,H,D)."""
+    o = decode_attention(q[:, 0], k_cache, v_cache, lengths, blk_k=blk_k,
+                         interpret=jax.default_backend() == "cpu")
+    return o[:, None]

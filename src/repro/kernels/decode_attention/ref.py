@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k, v, lengths) -> jax.Array:
+    """q: (B,H,D); k/v: (B,S,KV,D); lengths: (B,)."""
+    B, H, D = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    qg = q.astype(jnp.float32).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

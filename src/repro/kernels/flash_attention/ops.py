@@ -1,0 +1,27 @@
+"""Jit'd public wrapper: layout conversion + interpret-mode fallback on CPU
+(the TPU target compiles the same kernel natively)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
+def mha(q, k, v, *, causal: bool = True, blk_q: int = 128,
+        blk_k: int = 128):
+    """Model-layout entry point: q (B,Sq,H,D), k/v (B,Skv,KV,D) ->
+    (B,Sq,H,D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = flash_attention(qt, kt, vt, causal=causal, blk_q=blk_q,
+                        blk_k=blk_k, interpret=_on_cpu())
+    return jnp.swapaxes(o, 1, 2)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash attention (fp32 softmax, GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (B,H,Sq,D); k/v: (B,KV,Skv,D)."""
+    B, H, Sq, D = q.shape
+    _, KV, Skv, _ = k.shape
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

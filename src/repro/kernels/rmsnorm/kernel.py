@@ -1,0 +1,40 @@
+"""Pallas TPU fused RMSNorm (row-blocked, fp32 accumulation in VMEM)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)              # (blk, d)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+            blk_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (..., d); w: (d,)."""
+    shape = x.shape
+    d = shape[-1]
+    xr = x.reshape(-1, d)
+    R = xr.shape[0]
+    blk = min(blk_rows, R)
+    pad = (-R) % blk
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((R + pad) // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R + pad, d), x.dtype),
+        interpret=interpret,
+    )(xr, w)
+    return out[:R].reshape(shape)

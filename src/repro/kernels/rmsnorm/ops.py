@@ -1,0 +1,12 @@
+"""Jit'd wrapper for the fused RMSNorm kernel."""
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm as _rmsnorm
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "blk_rows"))
+def rmsnorm(x, w, *, eps: float = 1e-5, blk_rows: int = 256):
+    return _rmsnorm(x, w, eps=eps, blk_rows=blk_rows,
+                    interpret=jax.default_backend() == "cpu")

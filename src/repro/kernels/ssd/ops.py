@@ -1,0 +1,37 @@
+"""Jit'd wrapper: model layout (B,L,H,P) -> kernel layout, padding, CPU
+interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256):
+    """x: (B,L,H,P); dt: (B,L,H); A: (H,) negative; Bm/Cm: (B,L,N).
+    Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk_eff = min(chunk, L)
+    pad = (-L) % chunk_eff
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    dA = dt.astype(jnp.float32) * A.astype(jnp.float32)
+    xdt = jnp.moveaxis(xdt, 2, 1).reshape(B * H, L, P)
+    dAr = jnp.moveaxis(dA, 2, 1).reshape(B * H, L)
+    Br = jnp.broadcast_to(Bm[:, None], (B, H, L, N)).reshape(B * H, L, N)
+    Cr = jnp.broadcast_to(Cm[:, None], (B, H, L, N)).reshape(B * H, L, N)
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0)))
+        dAr = jnp.pad(dAr, ((0, 0), (0, pad)))   # exp(0)=1 decay, x=0: no-op
+        Br = jnp.pad(Br, ((0, 0), (0, pad), (0, 0)))
+        Cr = jnp.pad(Cr, ((0, 0), (0, pad), (0, 0)))
+    y, h = ssd_scan(xdt, dAr, Br, Cr, chunk=chunk_eff,
+                    interpret=jax.default_backend() == "cpu")
+    y = y[:, :L].reshape(B, H, L, P)
+    y = jnp.moveaxis(y, 1, 2)
+    h = h.reshape(B, H, N, P).swapaxes(-1, -2)  # (B,H,P,N)
+    return y, h

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD scan: direct sequential state recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xdt, dA, Bm, Cm):
+    """Sequential reference: h_t = h_{t-1} e^{dA_t} + B_t (x_t dt_t)^T.
+
+    xdt: (BH, L, P); dA: (BH, L); Bm/Cm: (BH, L, N).
+    Returns (y (BH,L,P), final_state (BH,N,P))."""
+    BH, L, P = xdt.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, da_t, b_t, c_t = inp
+        h = h * jnp.exp(da_t)[:, None, None] \
+            + jnp.einsum("bn,bp->bnp", b_t, x_t)
+        y_t = jnp.einsum("bn,bnp->bp", c_t, h)
+        return h, y_t
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    xs = (jnp.moveaxis(xdt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dA.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xdt.dtype), h

@@ -1,0 +1,446 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` on this XLA build visits each ``while`` body
+once — it does NOT multiply by trip count — so a scanned 60-layer model
+would be undercounted 60x.  This walker parses the HLO text, propagates
+loop trip counts (from ``backend_config known_trip_count`` with a
+condition-constant fallback) through the call graph, and accumulates:
+
+- ``flops``: 2*M*N*K for every dot (and convolutions approximately),
+- ``bytes``: operand+result bytes of every top-level op (HBM traffic
+  proxy, the standard HloCostAnalysis memory model),
+- per-collective wire bytes using ring-algorithm cost:
+    all-gather      (n-1)/n * result
+    all-reduce      2*(n-1)/n * result
+    reduce-scatter  (n-1)   * result     (result is the shard)
+    all-to-all      (n-1)/n * result
+    collective-permute       result
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# type is matched lazily: tuple types contain "/*index=N*/" comments, so we
+# scan for the first lowercase "opcode(" token after the "=".
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|[a-z][a-z0-9]*\[[^\]]*\])")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|branch_computations)=")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str, tpu_dtype_model: bool = False) -> int:
+    """Total bytes of a (possibly tuple) HLO type string.
+
+    ``tpu_dtype_model``: XLA-CPU float normalization promotes bf16 compute
+    (weights, caches, activations) to f32 with hoisted converts — on the
+    TPU target those streams stay bf16.  The TPU dtype model counts f32
+    tensors at 2 bytes (small error: genuinely-f32 optimizer moments and
+    softmax stats are also discounted; they are a few % of traffic)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sz = _DTYPE_BYTES[dt]
+        if tpu_dtype_model and dt == "f32":
+            sz = 2
+        total += n * sz
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # remainder of the line (operands + attrs)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op]
+    params: Dict[str, str]  # param name -> type str
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                name = m.group(2)
+                params = dict(_PARAM_RE.findall(line))
+                cur = Computation(name, bool(m.group(1)), [], params)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _split_operands_attrs(rest: str) -> Tuple[str, str]:
+    """Split 'operands), attrs' at the closing paren of the operand list."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def _called_computations(op: Op) -> List[str]:
+    names = []
+    for key in ("calls", "body", "condition", "to_apply", "branch_computations"):
+        for m in re.finditer(key + r"=\{?((?:%[\w.\-]+(?:,\s*)?)+)\}?", op.rest):
+            names += _OPERAND_RE.findall(m.group(1))
+    return names
+
+
+def _trip_count(op: Op, comps, default: int = 1) -> int:
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return int(m.group(1))
+    # fallback: constant bound in the condition computation
+    mc = re.search(r"condition=%([\w.\-]+)", op.rest)
+    if mc and mc.group(1) in comps:
+        cond = comps[mc.group(1)]
+        for o in cond.ops:
+            mk = re.search(r"constant\((\d+)\)", o.rest)
+            if o.opcode == "constant" and mk:
+                return int(mk.group(1))
+            mk2 = re.search(r"%constant[\w.\-]*\)", o.rest)
+        consts = [int(x) for o in cond.ops
+                  for x in re.findall(r"constant\((\d+)\)", o.type_str + o.rest)]
+        if consts:
+            return max(consts)
+    return default
+
+
+def _group_size(op: Op, num_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(op.rest)
+    if m:
+        g, n = int(m.group(1)), int(m.group(2))
+        return max(n, 1)
+    m = _GROUPS_LIST_RE.search(op.rest)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip() != ""]),
+                   1)
+    return num_devices
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    out_elems = shape_elems(op.type_str)
+    operands, attrs = _split_operands_attrs(op.rest)
+    names = _OPERAND_RE.findall(operands)
+    k = 1
+    mctr = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+    if names and mctr and names[0] in symtab:
+        lhs_shape = _SHAPE_RE.search(symtab[names[0]])
+        if lhs_shape:
+            dims = [int(d) for d in lhs_shape.group(2).split(",") if d]
+            for ci in mctr.group(1).split(","):
+                if ci != "" and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def analyze(text: str, num_devices: int,
+            tpu_dtype_model: bool = False,
+            kernel_scopes: bool = False,
+            collect_top: int = 0) -> Dict[str, float]:
+    """``kernel_scopes``: credit regions marked with jax.named_scope
+    ("*_kernel_scope") as VMEM-resident — the validated Pallas kernels
+    (flash attention/decode, SSD) replace exactly those interiors on TPU.
+    Interior tensors contribute no HBM traffic; boundary reads (entry
+    parameters, e.g. the KV cache) are still charged."""
+    _sb = lambda t: shape_bytes(t, tpu_dtype_model)
+    _in_scope = lambda op: "_kernel_scope" in op.rest
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # propagate execution multipliers through the call graph
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry.name] = 1.0
+    order = [entry.name]
+    seen = {entry.name}
+    # BFS in call order; HLO is a DAG of computations
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps[cname]
+        for op in comp.ops:
+            called = _called_computations(op)
+            if not called:
+                continue
+            factor = mult[cname]
+            if op.opcode == "while":
+                factor *= _trip_count(op, comps)
+            for cal in called:
+                if cal in comps:
+                    mult[cal] = mult.get(cal, 0.0) + factor
+                    if cal not in seen:
+                        seen.add(cal)
+                        order.append(cal)
+
+    # computations that are bodies/conds of kernel-scope whiles (nested
+    # loops inside a kernel scope inherit membership)
+    scope_comps = set()
+    if kernel_scopes:
+        frontier = []
+        for comp in comps.values():
+            for op in comp.ops:
+                if op.opcode == "while" and _in_scope(op):
+                    frontier += _called_computations(op)
+        while frontier:
+            c = frontier.pop()
+            if c in scope_comps or c not in comps:
+                continue
+            scope_comps.add(c)
+            for op in comps[c].ops:
+                frontier += _called_computations(op)
+
+    res = {
+        "flops": 0.0, "bytes": 0.0, "collective_wire_bytes": 0.0,
+        "collective_raw_bytes": 0.0,
+        "by_collective": {c: 0.0 for c in COLLECTIVES},
+        "collective_count": 0.0,
+        "dot_flops_by_meta": {},
+        "top_bytes": [],
+    }
+
+    def _note(amount, op):
+        if collect_top and amount > 0:
+            mm = re.search(r'op_name="([^"]+)"', op.rest)
+            res["top_bytes"].append(
+                (amount, op.opcode, op.type_str.split("{")[0][:42],
+                 (mm.group(1)[-80:] if mm else "")))
+    fusion_names = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fusion_names.update(_called_computations(op))
+
+    # fusion-body facts for traffic modeling: in-place DUS (XLA aliases
+    # donated buffers, traffic = updated slice) and sparse gathers
+    # (traffic = gathered rows, not the table)
+    fusion_info: Dict[str, Dict[str, float]] = {}
+    for comp in comps.values():
+        symtab = dict(comp.params)
+        for op in comp.ops:
+            symtab[op.name] = op.type_str
+        info = {"dus_update": 0.0, "gather_out": 0.0, "has_dus": False,
+                "has_gather": False, "pure_convert": True}
+        for op in comp.ops:
+            if op.opcode not in ("convert", "bitcast", "copy", "parameter",
+                                 "constant"):
+                info["pure_convert"] = False
+            if op.opcode in ("dynamic-update-slice", "scatter"):
+                opnds = _OPERAND_RE.findall(
+                    _split_operands_attrs(op.rest)[0])
+                upd_idx = 1 if op.opcode == "dynamic-update-slice" else -1
+                if len(opnds) > 1:
+                    info["dus_update"] += _sb(
+                        symtab.get(opnds[upd_idx], ""))
+                info["has_dus"] = True
+            elif op.opcode == "gather":
+                info["gather_out"] += _sb(op.type_str)
+                info["has_gather"] = True
+            elif op.opcode == "dynamic-slice":
+                info["gather_out"] += _sb(op.type_str)
+                info["has_gather"] = True
+        fusion_info[comp.name] = info
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        symtab = dict(comp.params)
+        for op in comp.ops:
+            symtab[op.name] = op.type_str
+        in_fusion = comp.name in fusion_names
+        scope_extra = set()
+        if kernel_scopes:
+            scoped = {op.name for op in comp.ops if _in_scope(op)}
+            consumers = {}
+            for op in comp.ops:
+                for n in _OPERAND_RE.findall(
+                        _split_operands_attrs(op.rest)[0]):
+                    consumers.setdefault(n, []).append(op)
+            for _ in range(2):  # two backward steps cover layout chains
+                for op in comp.ops:
+                    if op.name in scoped or op.name in scope_extra:
+                        continue
+                    if op.opcode not in ("copy", "transpose", "fusion",
+                                         "bitcast", "convert", "reshape"):
+                        continue
+                    cons = consumers.get(op.name, [])
+                    if cons and all(c.name in scoped or c.name in scope_extra
+                                    for c in cons):
+                        scope_extra.add(op.name)
+        for op in comp.ops:
+            if op.opcode == "dot":
+                res["flops"] += m * _dot_flops(op, symtab)
+            elif op.opcode == "convolution":
+                res["flops"] += m * 2.0 * shape_elems(op.type_str)
+            if in_fusion:
+                continue  # fused internals are not HBM traffic
+            if op.opcode in _SKIP_BYTES or op.opcode == "while":
+                continue
+            in_scope_body = kernel_scopes and comp.name in scope_comps
+            in_scope_op = kernel_scopes and (_in_scope(op)
+                                             or op.name in scope_extra)
+            if (tpu_dtype_model and op.opcode == "copy"
+                    and comp.is_entry):
+                # donated-buffer copies are elided by TPU aliasing
+                continue
+            rb = _sb(op.type_str)
+            operands, _ = _split_operands_attrs(op.rest)
+            opnds = _OPERAND_RE.findall(operands)
+            ob = sum(_sb(symtab.get(n, "")) for n in opnds)
+            if in_scope_body:
+                pass_bytes = 0.0          # VMEM interior (loop carries too)
+            elif in_scope_op:
+                # boundary reads only: operands fed by entry params / GTEs
+                opcode_of = {o.name: o.opcode for o in comp.ops}
+                pass_bytes = sum(
+                    _sb(symtab.get(n, "")) for n in opnds
+                    if opcode_of.get(n, "parameter") in
+                    ("parameter", "get-tuple-element", "copy"))
+            else:
+                pass_bytes = None
+            if pass_bytes is not None:
+                res["bytes"] += m * pass_bytes
+                _note(m * pass_bytes, op)
+                # collectives inside kernels are still real wire traffic
+                base = next((c for c in COLLECTIVES if op.opcode == c
+                             or op.opcode == c + "-start"), None)
+                if base:
+                    n = _group_size(op, num_devices)
+                    wire = {"all-gather": rb * (n - 1) / n,
+                            "all-reduce": 2.0 * rb * (n - 1) / n,
+                            "reduce-scatter": rb * (n - 1),
+                            "all-to-all": rb * (n - 1) / n,
+                            "collective-permute": rb}[base]
+                    res["collective_wire_bytes"] += m * wire
+                    res["collective_raw_bytes"] += m * rb
+                    res["by_collective"][base] += m * wire
+                    res["collective_count"] += m
+                continue
+            if op.opcode in ("dynamic-update-slice", "scatter"):
+                # XLA performs DUS/scatter in place on donated/aliased
+                # buffers: traffic is the updated slice, not the slab.
+                ui = 1 if op.opcode == "dynamic-update-slice" else -1
+                upd = _sb(symtab.get(opnds[ui], "")) if len(opnds) > 1 \
+                    else 0
+                res["bytes"] += m * 2 * upd
+                _note(m * 2 * upd, op)
+                continue
+            if op.opcode in ("gather", "dynamic-slice"):
+                res["bytes"] += m * 2 * rb  # rows read + result written
+                _note(m * 2 * rb, op)
+                continue
+            if op.opcode == "fusion":
+                called = _called_computations(op)
+                infos = [fusion_info.get(c) for c in called
+                         if c in fusion_info]
+                if tpu_dtype_model and infos and all(
+                        i["pure_convert"] for i in infos):
+                    # dtype-normalization artifact: native-bf16 TPU fuses
+                    # converts into consumers (no materialized copy)
+                    continue
+                if infos and any(i["has_dus"] or i["has_gather"]
+                                 for i in infos):
+                    # replace the slab-sized result/operand with the
+                    # touched bytes: max operand assumed aliased for DUS,
+                    # gather source read only at gathered rows
+                    opnd_sizes = [_sb(symtab.get(n, ""))
+                                  for n in opnds]
+                    big = max(opnd_sizes) if opnd_sizes else 0
+                    touched = sum(2 * i["dus_update"]
+                                  + 2 * i["gather_out"] for i in infos)
+                    adj = ob - big + touched
+                    if any(i["has_dus"] for i in infos):
+                        adj += 0          # result aliases the big operand
+                    else:
+                        adj += rb         # gather-only fusion writes result
+                    res["bytes"] += m * max(adj, 0.0)
+                    _note(m * max(adj, 0.0), op)
+                    continue
+            res["bytes"] += m * (rb + ob)
+            _note(m * (rb + ob), op)
+            base = next((c for c in COLLECTIVES if op.opcode == c
+                         or op.opcode == c + "-start"), None)
+            if base:
+                n = _group_size(op, num_devices)
+                if base == "all-gather":
+                    wire = rb * (n - 1) / n
+                elif base == "all-reduce":
+                    wire = 2.0 * rb * (n - 1) / n
+                elif base == "reduce-scatter":
+                    wire = rb * (n - 1)
+                elif base == "all-to-all":
+                    wire = rb * (n - 1) / n
+                else:  # collective-permute
+                    wire = rb
+                res["collective_wire_bytes"] += m * wire
+                res["collective_raw_bytes"] += m * rb
+                res["by_collective"][base] += m * wire
+                res["collective_count"] += m
+    if collect_top:
+        res["top_bytes"] = sorted(res["top_bytes"], reverse=True)[:collect_top]
+    else:
+        res.pop("top_bytes")
+    return res

@@ -1,0 +1,100 @@
+"""Per-op attribution over the trip-count-corrected HLO walk: the
+"profiler" of the dry-run world.  Prints the top contributors to HBM
+traffic and collective wire bytes (bytes x execution multiplier), with
+op metadata so each line maps back to model code."""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+from repro.launch import hlo_analysis as H
+
+
+def _meta(op) -> str:
+    m = re.search(r'op_name="([^"]+)"', op.rest)
+    return m.group(1)[-90:] if m else ""
+
+
+def attribute(text: str, num_devices: int, top: int = 25):
+    comps = H.parse_hlo(text)
+    entry = next(c for c in comps.values() if c.is_entry)
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry.name] = 1.0
+    order, seen, i = [entry.name], {entry.name}, 0
+    while i < len(order):
+        comp = comps[order[i]]
+        i += 1
+        for op in comp.ops:
+            called = H._called_computations(op)
+            if not called:
+                continue
+            f = mult[comp.name]
+            if op.opcode == "while":
+                f *= H._trip_count(op, comps)
+            for c in called:
+                if c in comps:
+                    mult[c] = mult.get(c, 0.0) + f
+                    if c not in seen:
+                        seen.add(c)
+                        order.append(c)
+
+    fusion_names = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fusion_names.update(H._called_computations(op))
+
+    traffic: List[Tuple[float, str, str, str]] = []
+    coll: List[Tuple[float, str, str, str]] = []
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0 or comp.name in fusion_names:
+            continue
+        symtab = dict(comp.params)
+        for op in comp.ops:
+            symtab[op.name] = op.type_str
+        for op in comp.ops:
+            if op.opcode in H._SKIP_BYTES or op.opcode == "while":
+                continue
+            rb = H.shape_bytes(op.type_str)
+            operands, _ = H._split_operands_attrs(op.rest)
+            ob = sum(H.shape_bytes(symtab.get(n, ""))
+                     for n in H._OPERAND_RE.findall(operands))
+            traffic.append((m * (rb + ob), op.opcode,
+                            op.type_str.split("{")[0][:40], _meta(op)))
+            base = next((c for c in H.COLLECTIVES
+                         if op.opcode in (c, c + "-start")), None)
+            if base:
+                n = H._group_size(op, num_devices)
+                wire = {"all-gather": rb * (n - 1) / n,
+                        "all-reduce": 2.0 * rb * (n - 1) / n,
+                        "reduce-scatter": rb * (n - 1),
+                        "all-to-all": rb * (n - 1) / n,
+                        "collective-permute": rb}[base]
+                coll.append((m * wire, f"{base}(n={n})x{int(m)}",
+                             op.type_str.split("{")[0][:40], _meta(op)))
+
+    traffic.sort(reverse=True)
+    coll.sort(reverse=True)
+    out = ["== top HBM traffic (bytes x mult; slab model) =="]
+    for b, oc, ts, meta in traffic[:top]:
+        out.append(f"  {b/2**30:9.2f} GiB {oc:12s} {ts:40s} {meta}")
+    out.append("== top collective wire bytes ==")
+    for b, oc, ts, meta in coll[:top]:
+        out.append(f"  {b/2**30:9.2f} GiB {oc:22s} {ts:40s} {meta}")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_file")
+    ap.add_argument("--devices", type=int, default=256)
+    ap.add_argument("--top", type=int, default=25)
+    a = ap.parse_args()
+    print(attribute(open(a.hlo_file).read(), a.devices, a.top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Serving driver: one engine replica behind the governed gateway.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b \
+        --requests 8 --max-tokens 16
+
+Restores weights from ``--ckpt-dir`` if present (e.g. from
+``repro.launch.train``), otherwise serves random-init weights.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, scaled_down
+from repro.core.gateway import Gateway, ModelEntry
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", default="tiny", choices=["tiny", "full"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.scale == "tiny":
+        cfg = scaled_down(cfg)
+    params = M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    if args.ckpt_dir:
+        from repro.checkpoint import ckpt as C
+        try:
+            state, manifest = C.restore(args.ckpt_dir,
+                                        {"params": params, "opt": None})
+        except Exception:
+            target = {"params": params}
+            try:
+                state, manifest = C.restore(args.ckpt_dir, target)
+                params = state["params"]
+                print(f"restored weights from step {manifest['step']}")
+            except Exception as e:  # noqa: BLE001
+                print(f"no usable checkpoint ({e}); serving random init")
+
+    eng = InferenceEngine(cfg, params, max_batch=args.max_batch,
+                          capacity=args.capacity)
+    gw = Gateway()
+    gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
+    gw.bind_endpoints(cfg.name, [eng])
+    key = gw.mint_key("cli", budget_usd=10.0)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = [int(x) for x in rng.integers(1, cfg.vocab_size - 1,
+                                               4 + i % 5)]
+        out = gw.completion(api_key=key.key, model=cfg.name, prompt=prompt,
+                            max_tokens=args.max_tokens,
+                            temperature=args.temperature)
+        print(f"req{i}: prompt={prompt} -> {out['tokens']}")
+    s = eng.metrics.summary()
+    print("metrics:", {k: round(v, 4) for k, v in s.items()})
+    print("usage:", gw.usage_by_project())
+
+
+if __name__ == "__main__":
+    main()

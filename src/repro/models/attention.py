@@ -1,0 +1,255 @@
+"""GQA attention: blockwise (flash-style, scan over KV chunks) for
+train/prefill, single-token cached attention for decode.
+
+The blockwise path is the XLA-lowerable oracle used by the dry-run; on TPU
+the Pallas kernels in ``repro.kernels.flash_attention`` /
+``repro.kernels.decode_attention`` implement the same math (tests assert
+allclose between the two).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope
+from repro.models.param import ParamSpec
+from repro.parallel import sharding
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamSpec((d, h * hd), ("fsdp", "tensor"), "fan_in"),
+        "wk": ParamSpec((d, kv * hd), ("fsdp", "tensor"), "fan_in"),
+        "wv": ParamSpec((d, kv * hd), ("fsdp", "tensor"), "fan_in"),
+        "wo": ParamSpec((h * hd, d), ("tensor", "fsdp"), "fan_in"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((h * hd,), ("tensor",), "zeros")
+        s["bk"] = ParamSpec((kv * hd,), ("tensor",), "zeros")
+        s["bv"] = ParamSpec((kv * hd,), ("tensor",), "zeros")
+    return s
+
+
+def project_qkv(cfg: ModelConfig, p, x, positions, rope: bool = True):
+    """x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    if rope and cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg, hd)
+        k = apply_rope(k, positions, cfg, hd)
+    q = sharding.constrain(q, ("act_batch", "act_qseq", "act_heads", None))
+    k = sharding.constrain(k, ("act_batch", "act_kvseq", "act_heads", None))
+    v = sharding.constrain(v, ("act_batch", "act_kvseq", "act_heads", None))
+    return q, k, v
+
+
+def _chunked(x, chunk, axis):
+    n = x.shape[axis]
+    chunk = min(chunk, n)
+    if n % chunk:
+        chunk = n  # fall back to a single chunk for ragged sizes
+    shape = x.shape[:axis] + (n // chunk, chunk) + x.shape[axis + 1:]
+    return x.reshape(shape), chunk
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0,
+                        kv_chunk: int = 1024,
+                        kv_valid_len: Optional[jax.Array] = None):
+    """Flash-style attention via lax.scan over KV chunks (fp32 softmax).
+
+    q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd) with H % KV == 0.
+    ``q_offset``: global position of q[0] (for causal masking of a sharded
+    or cached query block).  ``kv_valid_len``: optional (B,) valid KV
+    prefix (padded prefill).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    # operands stay in model dtype (bf16 on the TPU path); accumulation is
+    # f32 via preferred_element_type — no materialized f32 cache copies.
+    qg = q.reshape(B, Sq, KV, G, hd)
+    kc, chunk = _chunked(k, kv_chunk, 1)                       # (B,N,C,KV,hd)
+    vc, _ = _chunked(v, kv_chunk, 1)
+    nchunks = kc.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kch, vch, ci = inp
+        kvpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kch,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kvpos[None, :]
+        if kv_valid_len is not None:
+            mask &= kvpos[None, None, :] < kv_valid_len[:, None, None]
+            s = jnp.where(mask[:, None, None] if mask.ndim == 3 else mask,
+                          s, NEG_INF)
+        else:
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(vch.dtype), vch,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    ks = jnp.moveaxis(kc, 1, 0)  # (N,B,C,KV,hd)
+    vs = jnp.moveaxis(vc, 1, 0)
+    # flash-style backward: recompute chunk scores instead of saving the
+    # (B,KV,G,Sq,chunk) probability tensors per chunk.  The named scope
+    # marks the kernel interior for the kernel-aware roofline (the Pallas
+    # flash kernel keeps these tensors in VMEM on TPU).
+    with jax.named_scope("flash_kernel_scope"):
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(body), (m0, l0, a0),
+            (ks, vs, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
+    return out
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0,
+                    kv_valid_len=None):
+    """Materialized-scores oracle (tests/tiny models only)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(hd)
+    qpos = q_offset + jnp.arange(Sq)
+    kvpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kvpos[None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    if kv_valid_len is not None:
+        vm = kvpos[None, :] < kv_valid_len[:, None]          # (B,Skv)
+        s = jnp.where(vm[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, lengths):
+    """One-token attention against a cache.
+
+    q: (B,1,H,hd); k_cache/v_cache: (B,Smax,KV,hd); lengths: (B,) number of
+    valid cache entries (the new token's KV must already be written).
+    """
+    B, _, H, hd = q.shape
+    _, Smax, KV, _ = k_cache.shape
+    G = H // KV
+    # cache operands stay bf16 (no full-cache f32 materialization); f32
+    # accumulation via preferred_element_type (the Pallas decode kernel
+    # implements the same contract in VMEM)
+    qg = q.reshape(B, KV, G, hd).astype(k_cache.dtype)
+    # interior marked for the kernel-aware roofline: the Pallas
+    # flash-decode kernel keeps scores/probabilities in VMEM
+    with jax.named_scope("flash_decode_kernel_scope"):
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(hd)
+        s = sharding.constrain(
+            s, ("act_batch", "act_heads", None, "act_kvseq"))
+        valid = jnp.arange(Smax)[None, :] < lengths[:, None]  # (B,Smax)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgs,bskd->bkgd",
+                       (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                       v_cache, preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd)
+
+
+def attention_block(cfg: ModelConfig, p, x, positions, *,
+                    mode: str, cache=None, lengths=None,
+                    kv_valid_len=None, causal: bool = True):
+    """Full attention sublayer.  Returns (out (B,S,d), new_cache or None).
+
+    mode: "train" | "prefill" | "decode".
+    cache (decode): dict(k=(B,Smax,KV,hd), v=...); ``lengths`` (B,) counts
+    valid entries *including* the token being decoded.
+    """
+    B = x.shape[0]
+    dt = x.dtype
+    if mode in ("train", "prefill"):
+        q, k, v = project_qkv(cfg, p, x, positions)
+        if cfg.attn_impl == "naive":
+            o = naive_attention(q, k, v, causal=causal,
+                                kv_valid_len=kv_valid_len)
+        else:
+            o = blockwise_attention(q, k, v, causal=causal,
+                                    kv_valid_len=kv_valid_len)
+        o = sharding.constrain(o, ("act_batch", "act_qseq", "act_heads", None))
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"k": k.astype(dt), "v": v.astype(dt)}
+    else:
+        q, k, v = project_qkv(cfg, p, x, positions)
+        idx = (lengths - 1)  # slot of the current token
+        k_cache = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+            c, kk, (i, 0, 0)))(cache["k"], k.astype(cache["k"].dtype), idx)
+        v_cache = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+            c, vv, (i, 0, 0)))(cache["v"], v.astype(cache["v"].dtype), idx)
+        k_cache = sharding.constrain(
+            k_cache, ("act_batch", "act_kvseq", "act_heads", None))
+        v_cache = sharding.constrain(
+            v_cache, ("act_batch", "act_kvseq", "act_heads", None))
+        o = decode_attention(q, k_cache, v_cache, lengths)
+        new_cache = {"k": k_cache, "v": v_cache}
+    o2 = o.reshape(B, o.shape[1], -1).astype(dt)
+    out = jnp.einsum("bsq,qd->bsd", o2, p["wo"])
+    out = sharding.constrain(out, ("act_batch", "act_qseq", None))
+    return out, new_cache
+
+
+def cross_attention_block(cfg: ModelConfig, p, x, kv_cache):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    B, S, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, h, hd)
+    if S == 1:
+        lengths = jnp.full((B,), kv_cache["k"].shape[1], jnp.int32)
+        o = decode_attention(q, kv_cache["k"], kv_cache["v"], lengths)
+    else:
+        o = blockwise_attention(q, kv_cache["k"], kv_cache["v"], causal=False)
+    o = o.reshape(B, S, -1).astype(x.dtype)
+    return jnp.einsum("bsq,qd->bsd", o, p["wo"])
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    """Precompute encoder K/V for cross attention."""
+    B, S, _ = enc_out.shape
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dq->bsq", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return {"k": k.reshape(B, S, kv, hd), "v": v.reshape(B, S, kv, hd)}

@@ -1,0 +1,146 @@
+"""Shared layers: norms, rotary embeddings, gated MLP, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+from repro.parallel import sharding
+
+
+# ----------------------------------------------------------------- norms
+def norm_specs(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    s = {"scale": ParamSpec((d,), (None,), "ones")}
+    if cfg.norm == "layernorm":
+        s["bias"] = ParamSpec((d,), (None,), "zeros")
+    return s
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ----------------------------------------------------------------- rope
+def rope_frequencies(cfg: ModelConfig, head_dim: int) -> jax.Array:
+    rot = int(head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (
+        jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig,
+               head_dim: Optional[int] = None) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = head_dim or x.shape[-1]
+    rot = int(hd * cfg.rope_fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv = rope_frequencies(cfg, hd)                        # (rot/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1.astype(x.dtype), o2.astype(x.dtype), xp], -1)
+
+
+# ----------------------------------------------------------------- mlp
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "gelu" and cfg.norm == "layernorm":  # whisper-style 2-proj
+        return {
+            "up": ParamSpec((d, ff), ("fsdp", "tensor"), "fan_in"),
+            "up_b": ParamSpec((ff,), ("tensor",), "zeros"),
+            "down": ParamSpec((ff, d), ("tensor", "fsdp"), "fan_in"),
+            "down_b": ParamSpec((d,), (None,), "zeros"),
+        }
+    return {
+        "gate": ParamSpec((d, ff), ("fsdp", "tensor"), "fan_in"),
+        "up": ParamSpec((d, ff), ("fsdp", "tensor"), "fan_in"),
+        "down": ParamSpec((ff, d), ("tensor", "fsdp"), "fan_in"),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    """x: (..., d_model)."""
+    ff_axes = ("act_batch",) + (None,) * (x.ndim - 2) + ("act_ff",)
+    if "gate" in p:
+        g = jnp.einsum("...d,df->...f", x, p["gate"])
+        u = jnp.einsum("...d,df->...f", x, p["up"])
+        g = sharding.constrain(g, ff_axes)
+        act = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["up"]) + p["up_b"]
+        h = sharding.constrain(h, ff_axes)
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("...f,fd->...d", h, p["down"])
+    # sequence-sharded output lets SPMD reduce-scatter the partial sums
+    y = sharding.constrain(
+        y, ("act_batch",) + ("act_qseq",) * (y.ndim - 2) + (None,))
+    if "down_b" in p:
+        y = y + p["down_b"]
+    return y
+
+
+# ----------------------------------------------------------------- embed
+def embedding_specs(cfg: ModelConfig):
+    # embed is sharded only on d_model (FSDP) so token lookup stays local;
+    # the unembed projection is TP-sharded on (padded) vocab.
+    s = {"embed": ParamSpec((cfg.vocab_padded, cfg.d_model),
+                            (None, "fsdp"), "normal", 0.02)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_padded),
+                                 ("fsdp", "tensor"), "fan_in")
+    if cfg.pos_emb == "learned":
+        s["pos_embed"] = ParamSpec((cfg.max_position, cfg.d_model),
+                                   (None, "fsdp"), "normal", 0.02)
+    if cfg.frontend_dim:
+        s["frontend_proj"] = ParamSpec((cfg.frontend_dim, cfg.d_model),
+                                       (None, "fsdp"), "fan_in")
+    return s
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens, positions=None):
+    # mode="clip" keeps the gather in the table dtype (the default "fill"
+    # path materializes an f32 copy of the whole table)
+    x = jnp.take(p["embed"], tokens, axis=0, mode="clip")
+    if cfg.pos_emb == "learned":
+        assert positions is not None
+        x = x + jnp.take(p["pos_embed"], positions, axis=0,
+                         mode="clip").astype(x.dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, p, x):
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    # ZeRO gather of the fsdp-sharded d_model dim (weight shards are tiny
+    # next to batch-gathered activations)
+    w = sharding.constrain(w, (None, "tensor") if not cfg.tie_embeddings
+                           else (None, None))
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    if cfg.vocab_padded != cfg.vocab_size:
+        # mask pad-vocab logits so loss/sampling never select them
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return sharding.constrain(
+        logits, ("act_batch",) + (None,) * (logits.ndim - 2) + ("act_vocab",))

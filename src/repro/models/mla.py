@@ -1,0 +1,143 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill decompress the 512-d latent into per-head K/V and run
+standard attention; decode uses the *absorbed-weight* formulation so the
+KV cache stores only (kv_lora_rank + qk_rope_head_dim) floats per token —
+the feature that makes 32k-decode caches ~9x smaller than GQA here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import blockwise_attention, naive_attention, NEG_INF
+from repro.models.layers import apply_rope
+from repro.models.param import ParamSpec
+from repro.parallel import sharding
+
+
+def mla_specs(cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    s = {
+        "wdkv": ParamSpec((d, kvl + rope), ("fsdp", None), "fan_in"),
+        "kv_norm": ParamSpec((kvl,), (None,), "ones"),
+        "wuk": ParamSpec((kvl, h * nope), ("fsdp", "tensor"), "fan_in"),
+        "wuv": ParamSpec((kvl, h * vd), ("fsdp", "tensor"), "fan_in"),
+        "wo": ParamSpec((h * vd, d), ("tensor", "fsdp"), "fan_in"),
+    }
+    if cfg.q_lora_rank:
+        s["wdq"] = ParamSpec((d, cfg.q_lora_rank), ("fsdp", None), "fan_in")
+        s["q_norm"] = ParamSpec((cfg.q_lora_rank,), (None,), "ones")
+        s["wuq"] = ParamSpec((cfg.q_lora_rank, h * (nope + rope)),
+                             ("fsdp", "tensor"), "fan_in")
+    else:
+        s["wq"] = ParamSpec((d, h * (nope + rope)), ("fsdp", "tensor"),
+                            "fan_in")
+    return s
+
+
+def _rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_q(cfg, p, x, positions):
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = _rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]),
+                      p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rq->bsq", cq, p["wuq"])
+    else:
+        q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    q = q.reshape(B, S, h, nope + rope)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, cfg, rope)
+    return q_nope, q_pe
+
+
+def _latent_kv(cfg, p, x, positions):
+    """Compressed c_kv (B,S,kvl) + rope key k_pe (B,S,rope)."""
+    kvl, rope = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    c_kv = _rmsnorm(dkv[..., :kvl], p["kv_norm"], cfg.norm_eps)
+    k_pe = dkv[..., kvl:][:, :, None, :]  # (B,S,1,rope)
+    k_pe = apply_rope(k_pe, positions, cfg, rope)[:, :, 0, :]
+    c_kv = sharding.constrain(c_kv, ("act_batch", "act_kvseq", None))
+    k_pe = sharding.constrain(k_pe, ("act_batch", "act_kvseq", None))
+    return c_kv, k_pe
+
+
+def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
+              cache=None, lengths=None):
+    """Returns (out, new_cache).  cache: {"ckv": (B,Smax,kvl),
+    "kpe": (B,Smax,rope)}."""
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    dt = x.dtype
+    scale_dim = nope + rope
+
+    q_nope, q_pe = _project_q(cfg, p, x, positions)
+    c_kv, k_pe = _latent_kv(cfg, p, x, positions)
+
+    if mode in ("train", "prefill"):
+        # Decompress and run standard MHA (G=1) with concatenated heads.
+        k_nope = jnp.einsum("bsr,rq->bsq", c_kv, p["wuk"]).reshape(
+            B, S, h, nope)
+        v = jnp.einsum("bsr,rq->bsq", c_kv, p["wuv"]).reshape(B, S, h, vd)
+        q = jnp.concatenate([q_nope, q_pe], -1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, h, rope))],
+            -1)
+        # pad v to qk head size so one attention call handles both
+        vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, scale_dim - vd)))
+        attn = (blockwise_attention if cfg.attn_impl == "blockwise"
+                else naive_attention)
+        o = attn(q, k, vpad, causal=True)[..., :vd]
+        o = o.reshape(B, S, h * vd).astype(dt)
+        out = jnp.einsum("bsq,qd->bsd", o, p["wo"])
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"ckv": c_kv.astype(dt), "kpe": k_pe.astype(dt)}
+        return out, new_cache
+
+    # ---- decode: absorbed-weight attention in latent space ----
+    assert S == 1
+    idx = lengths - 1
+    ckv_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(cache["ckv"], c_kv.astype(cache["ckv"].dtype), idx)
+    kpe_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(cache["kpe"], k_pe.astype(cache["kpe"].dtype), idx)
+    ckv_c = sharding.constrain(ckv_c, ("act_batch", "act_kvseq", None))
+    kpe_c = sharding.constrain(kpe_c, ("act_batch", "act_kvseq", None))
+
+    wuk = p["wuk"].reshape(kvl, h, nope)
+    # absorb W_UK into q:  q_lat (B,h,kvl); cache operands stay bf16 with
+    # f32 accumulation (no full-cache f32 copies)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], wuk,
+                       preferred_element_type=jnp.float32)
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat.astype(ckv_c.dtype), ckv_c,
+                       preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bhp,bsp->bhs", q_pe[:, 0].astype(kpe_c.dtype),
+                      kpe_c, preferred_element_type=jnp.float32)
+    s = (s_lat + s_pe) / jnp.sqrt(scale_dim)
+    s = sharding.constrain(s, ("act_batch", "act_heads", "act_kvseq"))
+    Smax = ckv_c.shape[1]
+    valid = jnp.arange(Smax)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr.astype(ckv_c.dtype), ckv_c,
+                     preferred_element_type=jnp.float32)
+    wuv = p["wuv"].reshape(kvl, h, vd)
+    o = jnp.einsum("bhr,rhv->bhv", ctx.astype(wuv.dtype), wuv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, h * vd).astype(dt)
+    out = jnp.einsum("bsq,qd->bsd", o, p["wo"])
+    return out, {"ckv": ckv_c, "kpe": kpe_c}

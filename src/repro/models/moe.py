@@ -1,0 +1,211 @@
+"""Mixture-of-Experts: top-k routing with shared experts.
+
+Two implementations of the same math:
+
+- ``dense``: every expert computes every token, combined with routing
+  weights (exact, no capacity drops) — the oracle for tests and tiny runs.
+- ``ep``: expert-parallel shard_map — tokens are locally dispatched into
+  per-expert capacity buffers, exchanged with ``all_to_all`` over the
+  "model" mesh axis (the EP axis), computed as batched matmuls, and
+  returned.  This is the production path; the all-to-all is what the
+  dry-run collective parse attributes to MoE.
+
+Experts are padded up to a multiple of the EP axis (e.g. granite's 40
+experts pad to 48 on a 16-way axis); pad experts receive no tokens but do
+appear in the batched matmul — the MODEL_FLOPS/HLO ratio in the roofline
+accounts for this.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+from repro.parallel import sharding
+
+
+def padded_experts(cfg: ModelConfig, ep: Optional[int] = None) -> int:
+    e = cfg.num_experts
+    if ep is None:
+        ep = sharding.mesh_axis_size(
+            (sharding.current_rules() or sharding.make_rules("train"))
+            .resolve("expert"))
+    return -(-e // max(ep, 1)) * max(ep, 1)
+
+
+def moe_specs(cfg: ModelConfig, num_experts_padded: Optional[int] = None):
+    d, ff = cfg.d_model, cfg.moe_d_ff
+    E = num_experts_padded or cfg.num_experts
+    s = {
+        "router": ParamSpec((d, cfg.num_experts), ("fsdp", None), "fan_in"),
+        "w_gate": ParamSpec((E, d, ff), ("expert", "fsdp", None), "fan_in"),
+        "w_up": ParamSpec((E, d, ff), ("expert", "fsdp", None), "fan_in"),
+        "w_down": ParamSpec((E, ff, d), ("expert", None, "fsdp"), "fan_in"),
+    }
+    if cfg.num_shared_experts:
+        sff = cfg.num_shared_experts * ff
+        s["shared_gate"] = ParamSpec((d, sff), ("fsdp", "tensor"), "fan_in")
+        s["shared_up"] = ParamSpec((d, sff), ("fsdp", "tensor"), "fan_in")
+        s["shared_down"] = ParamSpec((sff, d), ("tensor", "fsdp"), "fan_in")
+    return s
+
+
+def _router(cfg: ModelConfig, w, x):
+    """x: (..., d) -> probs (..., k), ids (..., k), aux loss (scalar part)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.moe_top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    # switch-style load balancing aux loss
+    E = cfg.num_experts
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    one_hot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(one_hot, axis=-2).reshape(-1, E), axis=0) / cfg.moe_top_k
+    aux = E * jnp.sum(me * ce)
+    return top_p, top_i, aux
+
+
+def _expert_mlp(cfg, p, xe):
+    """xe: (E, C, d) batched per-expert tokens."""
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    act = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("ecf,efd->ecd", act * u, p["w_down"])
+
+
+def _shared(cfg, p, x):
+    if not cfg.num_shared_experts:
+        return 0.0
+    g = jnp.einsum("...d,df->...f", x, p["shared_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["shared_up"])
+    g = sharding.constrain(
+        g, ("act_batch",) + (None,) * (g.ndim - 2) + ("act_ff",))
+    act = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("...f,fd->...d", act * u, p["shared_down"])
+
+
+# ------------------------------------------------------------- dense
+def moe_dense(cfg: ModelConfig, p, x):
+    """Exact all-experts compute (oracle / tiny paths).  x: (B,S,d)."""
+    top_p, top_i, aux = _router(cfg, p["router"], x)
+    E = cfg.num_experts
+    E_stored = p["w_gate"].shape[0]  # may be padded for EP divisibility
+    xe = jnp.broadcast_to(x[None], (E_stored,) + x.shape).reshape(
+        E_stored, -1, x.shape[-1])
+    ye = _expert_mlp(cfg, p, xe).reshape((E_stored,) + x.shape)[:E]
+    one_hot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (B,S,k,E)
+    combine = jnp.einsum("bske,bsk->bse", one_hot, top_p)
+    y = jnp.einsum("ebsd,bse->bsd", ye.astype(jnp.float32), combine)
+    return y.astype(x.dtype) + _shared(cfg, p, x), aux
+
+
+# ------------------------------------------------------------- EP
+def _dispatch_local(cfg, x, top_p, top_i, E_pad, C):
+    """Build per-expert capacity buffers on one device.
+
+    x: (T,d).  Returns xe (E_pad,C,d), combine (T,k,2) slot refs:
+    (expert, slot) with -1 for dropped, and weight buffer (E_pad,C)."""
+    T, d = x.shape
+    k = cfg.moe_top_k
+    flat_e = top_i.reshape(-1)                       # (T*k,)
+    # stable order by expert id
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    # rank within expert = position - first occurrence offset
+    counts = jnp.bincount(flat_e, length=E_pad)      # (E_pad,)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * k) - offsets[e_sorted]
+    keep = rank < C
+    slot = jnp.where(keep, e_sorted * C + rank, E_pad * C)  # overflow bin
+    tok = order // k
+    xe = jnp.zeros((E_pad * C + 1, d), x.dtype).at[slot].set(x[tok])
+    wt = jnp.zeros((E_pad * C + 1,), jnp.float32).at[slot].set(
+        top_p.reshape(-1)[order])
+    # map back: for each (token,slot-in-k) its buffer position
+    back = jnp.full((T * k,), E_pad * C, jnp.int32)
+    back = back.at[order].set(jnp.where(keep, slot, E_pad * C).astype(jnp.int32))
+    return xe[:-1].reshape(E_pad, C, d), wt[:-1].reshape(E_pad, C), back
+
+
+def moe_ep(cfg: ModelConfig, p, x, *, capacity_factor=None):
+    """Expert-parallel MoE via shard_map all-to-all.  x: (B,S,d)."""
+    mesh, rules = sharding.active()
+    ep_axis = rules.resolve("expert")
+    assert isinstance(ep_axis, str)
+    m = mesh.shape[ep_axis]
+    # stored expert count is padded at spec time (multiple of 16, which any
+    # production EP degree divides); derive from the weights, not the mesh
+    E_pad = p["w_gate"].shape[0]
+    assert E_pad % m == 0, (E_pad, m)
+    E_loc = E_pad // m
+    cf = capacity_factor or cfg.capacity_factor
+    k = cfg.moe_top_k
+
+    batch_ax = rules.resolve("act_batch")
+    seq_ax = rules.resolve("act_qseq")
+    x_spec = P(batch_ax, seq_ax, None)
+    w_specs = {
+        "router": P(None, None),
+        "w_gate": P(ep_axis, None, None),
+        "w_up": P(ep_axis, None, None),
+        "w_down": P(ep_axis, None, None),
+    }
+    used = {n for n in jax.tree.leaves((batch_ax, seq_ax, ep_axis))
+            if isinstance(n, str)}
+
+    B, S, d = x.shape
+    shards = sharding.mesh_axis_size(batch_ax) * sharding.mesh_axis_size(seq_ax)
+    T_loc = max((B * S) // max(shards, 1), 1)
+    C = max(int(T_loc * k / E_pad * cf), 1)
+    C = -(-C // 4) * 4 if C > 4 else C
+
+    def local_fn(xl, wg, wu, wd, router):
+        Bl, Sl, _ = xl.shape
+        xt = xl.reshape(Bl * Sl, d)
+        top_p, top_i, aux = _router(cfg, router, xt)
+        xe, wt, back = _dispatch_local(cfg, xt, top_p, top_i, E_pad, C)
+        # exchange: (E_pad,C,d) -> (E_loc, m*C, d)
+        xr = jax.lax.all_to_all(xe, ep_axis, 0, 1, tiled=True)
+        pe = {"w_gate": wg, "w_up": wu, "w_down": wd}
+        ye = _expert_mlp(cfg, pe, xr)
+        yb = jax.lax.all_to_all(ye, ep_axis, 1, 0, tiled=True)  # (E_pad,C,d)
+        flat = jnp.concatenate(
+            [yb.reshape(E_pad * C, d).astype(jnp.float32),
+             jnp.zeros((1, d), jnp.float32)])
+        wflat = jnp.concatenate([wt.reshape(-1), jnp.zeros((1,))])
+        yk = flat[back] * wflat[back][:, None]          # (T*k, d)
+        y = jnp.sum(yk.reshape(Bl * Sl, k, d), axis=1)
+        aux = jax.lax.pmean(aux, tuple(sorted(used)))
+        return y.reshape(Bl, Sl, d).astype(xl.dtype), aux
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, w_specs["w_gate"], w_specs["w_up"],
+                  w_specs["w_down"], w_specs["router"]),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    y, aux = fn(x, p["w_gate"], p["w_up"], p["w_down"], p["router"])
+    return y + _shared(cfg, p, x), aux
+
+
+def moe_block(cfg: ModelConfig, p, x):
+    """Dispatch to impl per cfg.moe_impl / context.  Returns (y, aux)."""
+    impl = cfg.moe_impl
+    if impl == "auto":
+        act = sharding.active()
+        if act is not None:
+            mesh, rules = act
+            ep = rules.resolve("expert")
+            impl = "ep" if isinstance(ep, str) and mesh.shape[ep] > 1 else "dense"
+        else:
+            impl = "dense"
+    if impl == "ep":
+        return moe_ep(cfg, p, x)
+    return moe_dense(cfg, p, x)

@@ -1,0 +1,83 @@
+"""Parameter-spec machinery.
+
+Modules describe their parameters once as ``ParamSpec`` trees (shape +
+logical axes + initializer); generic functions materialize arrays,
+abstract ShapeDtypeStructs, or logical-axis trees from the same source.
+Logical axes feed ``repro.parallel.sharding`` which maps them to mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | fan_in
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_array(key, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "fan_in":
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else int(
+            np.prod(spec.shape[:-1]))
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * spec.scale).astype(dtype)
+    raise ValueError(spec.init)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a ParamSpec tree into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_array(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(specs, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs, is_leaf=is_spec)
+
+
+def param_axes(specs):
+    """Same-structure tree of logical-axis tuples."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes,
+                            s.init, s.scale),
+        specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree)

@@ -1,0 +1,183 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: within-chunk quadratic attention-like term (MXU-friendly
+matmuls) + inter-chunk linear state recurrence (small scan).  This jnp
+implementation is the oracle; ``repro.kernels.ssd`` provides the Pallas
+TPU kernel of the chunk computation.
+
+Tensor convention: x (B,L,H,P) head inputs, dt (B,L,H), A (H,) negative,
+Bmat/Cmat (B,L,N) single-group, initial/final state (B,H,P,N).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+from repro.parallel import sharding
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N)).  fp32 internally."""
+    Bsz, L, H, P = x.shape
+    N = Bmat.shape[-1]
+    chunk = min(chunk, L)
+    if L % chunk:
+        chunk = L
+    nc = L // chunk
+
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    # sequence-sized tensors stay in model dtype; the small decay math
+    # (B,L,H) is f32 and contractions accumulate f32
+    xd = (x * dt.astype(x.dtype)[..., None]).reshape(Bsz, nc, chunk, H, P)
+    dA = (dtf * Af).reshape(Bsz, nc, chunk, H)           # negative decays
+    Bc = Bmat.reshape(Bsz, nc, chunk, N)
+    Cc = Cmat.reshape(Bsz, nc, chunk, N)
+
+    with jax.named_scope("ssd_kernel_scope"):
+        dA_cs = jnp.cumsum(dA, axis=2)                    # (B,nc,Q,H)
+        seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+        # ---- diagonal (within-chunk) term ----
+        scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                            preferred_element_type=jnp.float32)
+        M = scores[..., None] * Lmat                      # (B,nc,i,j,H)
+        y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M.astype(xd.dtype), xd,
+                            preferred_element_type=jnp.float32)
+
+        # ---- chunk-final states ----
+        decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,nc,Q,H)
+        xdd = xd * decay_to_end.astype(xd.dtype)[..., None]
+        S_c = jnp.einsum("bcqn,bcqhp->bchpn", Bc, xdd,
+                         preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])             # (B,nc,H)
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(h, inp):
+        s_c, dec = inp                                    # (B,H,P,N), (B,H)
+        h_out = h                                         # state entering chunk
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h_out
+
+    s_seq = jnp.moveaxis(S_c, 1, 0)                       # (nc,B,H,P,N)
+    d_seq = jnp.moveaxis(chunk_decay, 1, 0)               # (nc,B,H)
+    h_final, h_in = jax.lax.scan(body, h0, (s_seq, d_seq))
+    h_in = jnp.moveaxis(h_in, 0, 1)                       # (B,nc,H,P,N)
+
+    # ---- off-diagonal contribution from carried state ----
+    decay_from_start = jnp.exp(dA_cs)                     # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bchpn->bcqhp", Cc,
+                       h_in.astype(Cc.dtype),
+                       preferred_element_type=jnp.float32)
+    y_off = y_off * decay_from_start[..., None]
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y, h_final
+
+
+def ssd_decode_step(x, dt, A, Bmat, Cmat, state):
+    """One token: x (B,H,P), dt (B,H), Bmat/Cmat (B,N), state (B,H,P,N)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dec = jnp.exp(dtf * A.astype(jnp.float32))            # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", xf * dtf[..., None],
+                     Bmat.astype(jnp.float32))
+    new_state = state.astype(jnp.float32) * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cmat.astype(jnp.float32))
+    return y, new_state
+
+
+# ---------------------------------------------------------------- block
+def mamba_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H, N, W = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv_width
+    return {
+        "wx": ParamSpec((d, di), ("fsdp", "tensor"), "fan_in"),
+        "wz": ParamSpec((d, di), ("fsdp", "tensor"), "fan_in"),
+        "wB": ParamSpec((d, N), ("fsdp", None), "fan_in"),
+        "wC": ParamSpec((d, N), ("fsdp", None), "fan_in"),
+        "wdt": ParamSpec((d, H), ("fsdp", None), "fan_in"),
+        "dt_bias": ParamSpec((H,), (None,), "zeros"),
+        "A_log": ParamSpec((H,), (None,), "zeros"),
+        "D": ParamSpec((H,), (None,), "ones"),
+        "conv_w": ParamSpec((W, di + 2 * N), (None, None), "normal", 0.1),
+        "conv_b": ParamSpec((di + 2 * N,), (None,), "zeros"),
+        "gate_norm": ParamSpec((di,), (None,), "ones"),
+        "wo": ParamSpec((di, d), ("tensor", "fsdp"), "fan_in"),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, width W.  xBC: (B,L,C).
+    conv_state: (B,W-1,C) previous inputs (decode) or None (train)."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(xBC[:, : W - 1])
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    full = jnp.concatenate([pad, xBC], axis=1)
+    y = sum(full[:, i: i + xBC.shape[1]] * conv_w[i] for i in range(W))
+    y = jax.nn.silu(y + conv_b)
+    new_state = full[:, -(W - 1):] if W > 1 else None
+    return y, new_state
+
+
+def _gated_norm(y, z, scale, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    r = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + eps)
+    return r * scale.astype(jnp.float32)
+
+
+def mamba_block(cfg: ModelConfig, p, x, *, mode: str, cache=None):
+    """x: (B,S,d).  cache: {"conv": (B,W-1,di+2N), "ssd": (B,H,P,N)}.
+    Returns (out, new_cache)."""
+    B, S, d = x.shape
+    di, H, N = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    dt_in = x.dtype
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xBC = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_state = cache["conv"] if mode == "decode" else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = xBC[..., :di], xBC[..., di:di + N], xBC[..., di + N:]
+
+    xh = xs.reshape(B, S, H, P)
+    xh = sharding.constrain(xh, ("act_batch", None, "act_ssm_heads", None))
+
+    if mode == "decode":
+        assert S == 1
+        y, new_ssd = ssd_decode_step(
+            xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], cache["ssd"])
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "ssd": new_ssd}
+    else:
+        y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv, "ssd": final_state}
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, S, di)
+    y = _gated_norm(y, z, p["gate_norm"], cfg.norm_eps).astype(dt_in)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    return out, new_cache

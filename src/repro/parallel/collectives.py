@@ -1,0 +1,54 @@
+"""Gradient-reduction schedules (the Table-1 'network path' lever as a
+library).  All operate inside shard_map over a data-parallel axis.
+
+- per_tensor_psum: one all-reduce per tensor (NCCL-naive; message-count
+  bound — the "eth0" failure mode).
+- bucketed_psum: flatten into one buffer, single all-reduce (bandwidth
+  bound — the "hsn0" fix).
+- rs_ag: reduce-scatter + all-gather on one buffer (the "RDMA"-class
+  schedule; each device reduces only its shard — FSDP's native form).
+
+``benchmarks/table1_ddp.py`` wall-clocks these on a host mesh.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def per_tensor_psum(grads: List[jax.Array], axis: str):
+    return [jax.lax.psum(g, axis) for g in grads]
+
+
+def _flatten(grads):
+    sizes = [g.size for g in grads]
+    flat = jnp.concatenate([g.reshape(-1) for g in grads])
+    return flat, sizes
+
+
+def _unflatten(flat, grads, sizes):
+    out, off = [], 0
+    for g, s in zip(grads, sizes):
+        out.append(flat[off:off + s].reshape(g.shape))
+        off += s
+    return out
+
+
+def bucketed_psum(grads: List[jax.Array], axis: str):
+    flat, sizes = _flatten(grads)
+    flat = jax.lax.psum(flat, axis)
+    return _unflatten(flat, grads, sizes)
+
+
+def rs_ag(grads: List[jax.Array], axis: str, pad_to: int):
+    flat, sizes = _flatten(grads)
+    pad = (-flat.size) % pad_to
+    flat = jnp.pad(flat, (0, pad))
+    red = jax.lax.psum_scatter(flat, axis, scatter_dimension=0, tiled=True)
+    flat = jax.lax.all_gather(red, axis, tiled=True)
+    if pad:
+        flat = flat[:-pad]
+    return _unflatten(flat, grads, sizes)

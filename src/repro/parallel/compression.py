@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback for cross-pod reduction.
+
+The paper's Table 1 lesson — the network path dominates small/medium DDP —
+motivates shrinking cross-pod gradient bytes.  We compress the pod-axis
+all-reduce to bf16 or int8 (per-tensor absmax scale) and carry the
+quantization residual in an error-feedback buffer so compression noise
+does not accumulate (Karimireddy et al., 2019 semantics).
+
+Usage (trainer-level)::
+
+    state = ef_init(grads)
+    grads_c, state = compress_with_feedback(grads, state, bits=8)
+    # cross-pod all-reduce runs on grads_c (2-4x fewer wire bytes)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(tree):
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), tree)
+
+
+def _quant_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, ef_state, bits: int = 8):
+    """Returns (compressed-then-decompressed grads, new ef_state).
+
+    The returned grads are what the *receiving* side reconstructs; the
+    residual (exact - reconstructed) is fed back into the next step.  On
+    the wire the payload is int8+scale (4x) or bf16 (2x) vs f32."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        if bits == 8:
+            q, s = _quant_int8(x)
+            r = _dequant_int8(q, s)
+        elif bits == 16:
+            r = x.astype(jnp.bfloat16).astype(jnp.float32)
+        else:
+            raise ValueError(bits)
+        return r, x - r
+
+    flat, td = jax.tree.flatten(grads)
+    ef_flat = td.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat, ef_flat)]
+    return (td.unflatten([o[0] for o in out]),
+            td.unflatten([o[1] for o in out]))
+
+
+def wire_bytes(tree, bits: int) -> int:
+    n = sum(x.size for x in jax.tree.leaves(tree))
+    return n * bits // 8 + len(jax.tree.leaves(tree)) * 4  # + scales

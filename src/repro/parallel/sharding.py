@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules.
+
+Model code annotates parameters and activations with *logical* axis names;
+a per-(shape-kind) rule table maps them onto the production mesh axes
+("pod", "data", "model").  This keeps every architecture's model code
+mesh-agnostic while the launcher picks DP/FSDP/TP/SP/EP layouts per shape.
+
+Scheme (see DESIGN.md §5) — chosen so that every assigned arch divides
+evenly (head counts 12..64 do not divide 16; d_model/d_ff always do):
+
+- train/prefill: batch→data(+pod), FSDP over "data" on each param's fsdp
+  dim, TP over "model" for mlp/vocab/experts, and *context-parallel*
+  attention (q-sequence over "model", KV all-gathered).
+- decode: batch→data(+pod), params TP over "model" replicated over "data"
+  (vLLM-style replica×TP), KV-cache sequence over "model".
+- long (batch=1): KV/state over ("data","model") combined, SSM heads over
+  "model".
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSet:
+    name: str
+    rules: Dict[str, AxisVal]
+
+    def resolve(self, logical: Optional[str]) -> AxisVal:
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        parts = []
+        used = set()
+        for a in axes:
+            r = self.resolve(a)
+            if isinstance(r, str):
+                r = (r,)
+            if r:
+                r = tuple(x for x in r if x not in used)
+                used.update(r)
+                parts.append(r if len(r) > 1 else (r[0] if r else None))
+                if not r:
+                    parts[-1] = None
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    def replace(self, **kw) -> "RuleSet":
+        new = dict(self.rules)
+        new.update(kw)
+        return RuleSet(self.name, new)
+
+
+_BASE = {
+    # parameters
+    "fsdp": "data",
+    "tensor": "model",
+    "expert": "model",
+    "layers": None,
+    # activations
+    "act_batch": ("data",),
+    "act_qseq": "model",
+    "act_kvseq": None,
+    "act_heads": None,
+    "act_ff": "model",
+    "act_vocab": "model",
+    "act_expert": "model",
+    "act_ssm_heads": "model",
+    "act_embed": None,
+}
+
+
+def make_rules(kind: str, multi_pod: bool = False, **overrides) -> RuleSet:
+    """kind: train | prefill | decode | long."""
+    r = dict(_BASE)
+    batch = ("pod", "data") if multi_pod else ("data",)
+    if kind in ("train", "prefill"):
+        r["act_batch"] = batch
+    elif kind == "decode":
+        r.update(
+            fsdp=None,
+            act_batch=batch,
+            act_qseq=None,
+            act_kvseq="model",
+        )
+    elif kind == "long":
+        kv = ("pod", "data", "model") if multi_pod else ("data", "model")
+        r.update(
+            fsdp=None,
+            act_batch=None,
+            act_qseq=None,
+            act_kvseq=kv,
+        )
+    else:
+        raise ValueError(kind)
+    r.update(overrides)
+    return RuleSet(kind, r)
+
+
+# ---------------------------------------------------------------------
+# context: active (mesh, rules)
+class _Ctx(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: RuleSet):
+    _CTX.stack.append((mesh, rules))
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.stack.pop()
+
+
+def active() -> Optional[Tuple[Mesh, RuleSet]]:
+    return _CTX.stack[-1] if _CTX.stack else None
+
+
+def current_rules() -> Optional[RuleSet]:
+    a = active()
+    return a[1] if a else None
+
+
+def current_mesh() -> Optional[Mesh]:
+    a = active()
+    return a[0] if a else None
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """with_sharding_constraint against the active rules; no-op otherwise."""
+    a = active()
+    if a is None:
+        return x
+    mesh, rules = a
+    spec = rules.spec(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named(axes: Sequence[Optional[str]], mesh=None, rules=None) -> NamedSharding:
+    a = active()
+    mesh = mesh or (a[0] if a else None)
+    rules = rules or (a[1] if a else None)
+    assert mesh is not None and rules is not None, "no active sharding rules"
+    return NamedSharding(mesh, rules.spec(axes))
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: RuleSet):
+    """Map a tree of logical-axis tuples to NamedShardings."""
+    def _one(axes):
+        return NamedSharding(mesh, rules.spec(axes))
+    return jax.tree.map(_one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def mesh_axis_size(axis: AxisVal) -> int:
+    mesh = current_mesh()
+    if mesh is None or axis is None:
+        return 1
+    if isinstance(axis, str):
+        axis = (axis,)
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n

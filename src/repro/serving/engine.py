@@ -1,0 +1,170 @@
+"""Continuous-batching inference engine (the vLLM analogue, §4.4/§6.5).
+
+One engine = one model replica: a fixed decode batch of ``max_batch``
+slots over a dense KV cache, a waiting queue with block-ledger admission,
+bucketed prefill (pow2 buckets bound recompilation), and per-request
+TTFT/ITL/E2EL metrics.  The gateway (repro.core.gateway) routes requests
+across replicas; HA (repro.core.ha) runs replicas active-active.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serving.kvcache import BlockLedger, CacheSlots
+from repro.serving.metrics import MetricsCollector
+from repro.serving.sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    eos_id: int = -1
+    request_id: str = ""
+    extras: Optional[Dict[str, Any]] = None   # vision_embeds / frames
+    # filled by the engine:
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 4096) * 4096
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 capacity: int = 512, block_size: int = 64,
+                 clock: Callable[[], float] = time.monotonic,
+                 seed: int = 0, name: str = "engine0"):
+        self.cfg, self.params = cfg, params
+        self.name = name
+        self.clock = clock
+        self.slots = CacheSlots(cfg, max_batch, capacity)
+        self.ledger = BlockLedger(capacity * max_batch, block_size)
+        self.capacity = capacity
+        self.queue: deque[Request] = deque()
+        self.running: Dict[int, Request] = {}
+        self.metrics = MetricsCollector()
+        self.key = jax.random.PRNGKey(seed)
+        self._ids = itertools.count()
+        self.healthy = True
+        self.steps = 0
+
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(cfg, p, b))
+        self._decode = jax.jit(
+            lambda p, t, c, l: M.decode_step(cfg, p, t, c, l))
+
+    # ------------------------------------------------------------ API
+    def submit(self, req: Request) -> str:
+        if not req.request_id:
+            req.request_id = f"{self.name}-r{next(self._ids)}"
+        self.metrics.arrival(req.request_id, self.clock(), len(req.prompt))
+        self.queue.append(req)
+        return req.request_id
+
+    @property
+    def num_active(self) -> int:
+        return len(self.running) + len(self.queue)
+
+    # ------------------------------------------------------------ steps
+    def _admit_one(self) -> bool:
+        if not self.queue or not self.slots.free:
+            return False
+        req = self.queue[0]
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.capacity:
+            req.done = True
+            self.queue.popleft()
+            self.metrics.finish(req.request_id, self.clock())
+            return False
+        if not self.ledger.can_admit(req.request_id, need):
+            return False
+        self.queue.popleft()
+        self.ledger.admit(req.request_id, need)
+        slot = self.slots.allocate(req.request_id)
+        self.metrics.prefill_start(req.request_id, self.clock())
+
+        n = len(req.prompt)
+        pad = _bucket(n)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :n] = req.prompt
+        n_front = self.cfg.frontend_tokens if self.cfg.frontend == "vision" \
+            else 0
+        batch = {"tokens": jnp.asarray(toks),
+                 "prompt_lengths": jnp.asarray([n + n_front], jnp.int32)}
+        if req.extras:
+            batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+        logits, cache, _ = self._prefill(self.params, batch)
+        cache = M.pad_cache(self.cfg, cache, self.capacity)
+        self.slots.insert(slot, cache, n + n_front)
+        self.running[slot] = req
+
+        tok = self._sample(logits, req)
+        self._emit(slot, req, int(tok[0]))
+        return True
+
+    def _sample(self, logits, req: Request):
+        self.key, k = jax.random.split(self.key)
+        return sample(logits, k, temperature=req.temperature,
+                      top_k=req.top_k, top_p=req.top_p)
+
+    def _emit(self, slot: int, req: Request, token: int):
+        req.generated.append(token)
+        self.metrics.token(req.request_id, self.clock())
+        if (token == req.eos_id
+                or len(req.generated) >= req.max_new_tokens):
+            req.done = True
+            self.metrics.finish(req.request_id, self.clock())
+            self.ledger.release(req.request_id)
+            self.slots.release(slot)
+            self.running.pop(slot, None)
+
+    def _decode_all(self):
+        if not self.running:
+            return
+        B = self.slots.B
+        toks = np.zeros((B, 1), np.int32)
+        for slot, req in self.running.items():
+            toks[slot, 0] = req.generated[-1]
+        lengths = self.slots.lengths
+        active = np.zeros((B,), bool)
+        for slot in self.running:
+            active[slot] = True
+        lengths = jnp.where(jnp.asarray(active), lengths + 1, lengths)
+        logits, new_cache = self._decode(
+            self.params, jnp.asarray(toks), self.slots.cache, lengths)
+        self.slots.cache = new_cache
+        self.slots.lengths = lengths
+        # per-slot sampling (batched greedy, per-request params honored)
+        for slot, req in list(self.running.items()):
+            tok = self._sample(logits[slot:slot + 1], req)
+            self._emit(slot, req, int(tok[0]))
+
+    def step(self):
+        """One scheduler tick: admit (prefill) if possible, else decode."""
+        if not self._admit_one():
+            self._decode_all()
+        self.steps += 1
+
+    def run_until_idle(self, max_steps: int = 100_000):
+        while self.num_active and max_steps:
+            self.step()
+            max_steps -= 1
+        return self.metrics.summary()

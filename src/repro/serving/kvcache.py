@@ -1,0 +1,108 @@
+"""KV-cache slot management + block-ledger admission control.
+
+TPU-idiomatic adaptation of vLLM's paged KV cache (DESIGN.md §2): TPU
+serving stacks keep *dense per-slot* KV buffers with length masking (GPU
+paged-attention's random block gathers defeat the MXU/VMEM layout), while
+capacity accounting still happens in fixed-size blocks so the scheduler
+admits requests exactly like vLLM does (no admission -> request waits,
+preventing cache OOM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+class BlockLedger:
+    """Block accounting (block_size tokens per block) for admission."""
+
+    def __init__(self, capacity_tokens: int, block_size: int = 128):
+        self.block_size = block_size
+        self.total_blocks = capacity_tokens // block_size
+        self.used: Dict[str, int] = {}
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    @property
+    def free_blocks(self) -> int:
+        return self.total_blocks - sum(self.used.values())
+
+    def can_admit(self, rid: str, tokens: int) -> bool:
+        return self.blocks_for(tokens) <= self.free_blocks
+
+    def admit(self, rid: str, tokens: int):
+        need = self.blocks_for(tokens)
+        if need > self.free_blocks:
+            raise RuntimeError("KV cache exhausted")
+        self.used[rid] = need
+
+    def grow(self, rid: str, tokens: int):
+        self.used[rid] = max(self.used.get(rid, 0),
+                             self.blocks_for(tokens))
+
+    def release(self, rid: str):
+        self.used.pop(rid, None)
+
+
+class CacheSlots:
+    """Fixed decode batch of B slots, each with ``capacity`` positions."""
+
+    def __init__(self, cfg: ModelConfig, max_batch: int, capacity: int,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.B = max_batch
+        self.capacity = capacity
+        self.cache = M.make_cache(cfg, max_batch, capacity, dtype)
+        self.lengths = jnp.ones((max_batch,), jnp.int32)  # 1 = inert slot
+        self.free: List[int] = list(range(max_batch))
+        self.slot_owner: Dict[int, str] = {}
+        self._axes = M.cache_axes(cfg)
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    def _insert_impl(self, cache, prefill_cache, slot):
+        """Write a single-sequence prefill cache (1, S, ...) into slot."""
+        def walk(dst, src, ax):
+            if isinstance(dst, dict):
+                return {k: walk(dst[k], src[k], ax[k]) for k in dst}
+            if isinstance(dst, list):
+                return [walk(d, s, a) for d, s, a in zip(dst, src, ax)]
+            bi = ax.index("act_batch")
+            src = src.astype(dst.dtype)
+            start = [jnp.asarray(0, jnp.int32)] * dst.ndim
+            start[bi] = slot
+            # pad the seq dim of src up to dst (already <= capacity)
+            pads = []
+            for i, (ds, ss) in enumerate(zip(dst.shape, src.shape)):
+                pads.append((0, (ds - ss) if i != bi else 0))
+            src = jnp.pad(src, pads)
+            return jax.lax.dynamic_update_slice(dst, src, start)
+
+        return walk(cache, prefill_cache, self._axes)
+
+    def allocate(self, rid: str) -> Optional[int]:
+        if not self.free:
+            return None
+        slot = self.free.pop(0)
+        self.slot_owner[slot] = rid
+        return slot
+
+    def insert(self, slot: int, prefill_cache, length: int):
+        self.cache = self._insert(self.cache, prefill_cache,
+                                  jnp.asarray(slot, jnp.int32))
+        self.lengths = self.lengths.at[slot].set(length)
+
+    def release(self, slot: int):
+        self.slot_owner.pop(slot, None)
+        self.lengths = self.lengths.at[slot].set(1)
+        self.free.append(slot)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self.slot_owner)

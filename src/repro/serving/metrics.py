@@ -1,0 +1,84 @@
+"""LLM serving metrics (paper §5.2): QPS, TTFT, ITL, E2EL.
+
+Timestamps are injected (``clock``) so tests and the benchmark harness can
+run against a virtual clock; summaries report the same quantiles the paper
+quotes (P50/P99 TTFT, mean ITL, mean E2EL).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    request_id: str
+    arrival: float
+    n_prompt: int = 0
+    prefill_start: Optional[float] = None
+    first_token: Optional[float] = None
+    finish: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (self.first_token - self.arrival
+                if self.first_token is not None else None)
+
+    @property
+    def e2el(self) -> Optional[float]:
+        return self.finish - self.arrival if self.finish is not None else None
+
+    @property
+    def itl(self) -> List[float]:
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.token_times)
+
+
+class MetricsCollector:
+    def __init__(self):
+        self.requests: Dict[str, RequestMetrics] = {}
+
+    def arrival(self, rid: str, t: float, n_prompt: int):
+        self.requests[rid] = RequestMetrics(rid, t, n_prompt)
+
+    def prefill_start(self, rid: str, t: float):
+        self.requests[rid].prefill_start = t
+
+    def token(self, rid: str, t: float):
+        r = self.requests[rid]
+        if r.first_token is None:
+            r.first_token = t
+        r.token_times.append(t)
+
+    def finish(self, rid: str, t: float):
+        self.requests[rid].finish = t
+
+    @staticmethod
+    def _pct(xs, q):
+        return float(np.percentile(xs, q)) if xs else float("nan")
+
+    def summary(self) -> Dict[str, float]:
+        done = [r for r in self.requests.values() if r.finish is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        itls = [x for r in done for x in r.itl]
+        e2els = [r.e2el for r in done]
+        gen = sum(r.n_generated for r in done)
+        span = (max(r.finish for r in done) - min(r.arrival for r in done)
+                if done else float("nan"))
+        return {
+            "completed": len(done),
+            "qps": len(done) / span if done and span > 0 else float("nan"),
+            "ttft_p50_s": self._pct(ttfts, 50),
+            "ttft_p99_s": self._pct(ttfts, 99),
+            "itl_mean_s": float(np.mean(itls)) if itls else float("nan"),
+            "itl_p99_s": self._pct(itls, 99),
+            "e2el_mean_s": float(np.mean(e2els)) if e2els else float("nan"),
+            "generated_tokens": gen,
+            "tokens_per_s": gen / span if done and span > 0 else float("nan"),
+        }

@@ -1,0 +1,161 @@
+"""Optimizers in pure JAX: AdamW (default) and Adafactor (memory-lean).
+
+Optimizer state mirrors parameter structure and inherits parameter
+shardings (FSDP-sharded moments — ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 3e-4               # peak lr (scheduled by training.schedule)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    eps_root: float = 1e-30        # adafactor
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+# ------------------------------------------------------------ adamw
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptConfig, grads, state, params, lr):
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / c1
+        nu_hat = nu / c2
+        d = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if cfg.weight_decay:
+            d = d + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * d).astype(p.dtype), mu, nu
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_mu = td.flatten_up_to(state["mu"])
+    flat_nu = td.flatten_up_to(state["nu"])
+    flat_p = td.flatten_up_to(params)
+    out = [upd(g, m, n, p)
+           for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = td.unflatten([o[0] for o in out])
+    new_mu = td.unflatten([o[1] for o in out])
+    new_nu = td.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+# ------------------------------------------------------------ adafactor
+def adafactor_init(params):
+    def factored(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+    return {"v": jax.tree.map(factored, params,
+                              is_leaf=lambda x: hasattr(x, "ndim")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params, lr):
+    step = state["step"] + 1
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + cfg.eps_root
+        if p.ndim >= 2:
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(jnp.mean(vr, -1, keepdims=True), 1e-30))
+            cfac = jax.lax.rsqrt(vc)
+            d = g * rfac[..., None] * cfac[..., None, :]
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": decay * v["v"] + (1 - decay) * g2}
+            d = g * jax.lax.rsqrt(nv["v"])
+        clip = jnp.maximum(1.0, global_norm([d]) / (jnp.sqrt(
+            jnp.asarray(d.size, jnp.float32))))
+        d = d / clip
+        if cfg.weight_decay:
+            d = d + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * d).astype(p.dtype), nv
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_v = td.flatten_up_to(state["v"])
+    flat_p = td.flatten_up_to(params)
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    return (td.unflatten([o[0] for o in out]),
+            {"v": td.unflatten([o[1] for o in out]), "step": step})
+
+
+# ------------------------------------------------------------ facade
+def opt_init(cfg: OptConfig, params):
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params)
+    if cfg.name == "sgd":
+        return {"step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def opt_update(cfg: OptConfig, grads, state, params, lr):
+    if cfg.name == "adamw":
+        return adamw_update(cfg, grads, state, params, lr)
+    if cfg.name == "adafactor":
+        return adafactor_update(cfg, grads, state, params, lr)
+    if cfg.name == "sgd":
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, {"step": state["step"] + 1}
+    raise ValueError(cfg.name)
+
+
+def opt_state_axes(cfg: OptConfig, axes_tree):
+    """Logical axes for the optimizer state (moments mirror params)."""
+    if cfg.name == "adamw":
+        return {"mu": axes_tree, "nu": axes_tree, "step": ()}
+    if cfg.name == "adafactor":
+        def fact(ax):
+            ax = tuple(ax)
+            if len(ax) >= 2:
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+        is_ax = lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+        return {"v": jax.tree.map(fact, axes_tree, is_leaf=is_ax),
+                "step": ()}
+    return {"step": ()}

@@ -1,0 +1,37 @@
+"""Learning-rate schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.1):
+    """Warmup-stable-decay (used by several open pretraining runs)."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total_steps * (1 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    dec = peak_lr * jnp.clip(
+        1.0 - (step - decay_start) / jnp.maximum(
+            total_steps - decay_start, 1), 0.0, 1.0)
+    lr = jnp.where(step < warmup_steps, warm,
+                   jnp.where(step >= decay_start, dec, peak_lr))
+    return lr
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "wsd": wsd,
+             "constant": constant}

@@ -1,0 +1,73 @@
+"""Jit-able training step: bf16 compute over fp32 master params, global-norm
+clipping, optimizer update, metrics."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.param import cast_tree
+from repro.training.optimizer import OptConfig, clip_by_global_norm, opt_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    schedule_fn: Optional[Callable] = None,
+                    compute_dtype=jnp.bfloat16):
+    def train_step(params, opt_state, batch):
+        lr = (schedule_fn(opt_state["step"]) if schedule_fn
+              else jnp.asarray(opt_cfg.lr, jnp.float32))
+
+        def loss_fn(p):
+            return M.train_loss(cfg, cast_tree(p, compute_dtype), batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        new_params, new_state = opt_update(opt_cfg, grads, opt_state,
+                                           params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr,
+                       total_loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_grad_accum_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                         accum_steps: int,
+                         schedule_fn: Optional[Callable] = None,
+                         compute_dtype=jnp.bfloat16):
+    """Microbatched step: batch leading dim is (accum_steps, micro_batch, S)."""
+    def train_step(params, opt_state, batch):
+        lr = (schedule_fn(opt_state["step"]) if schedule_fn
+              else jnp.asarray(opt_cfg.lr, jnp.float32))
+        pc = cast_tree(params, compute_dtype)
+
+        def loss_fn(p, micro):
+            return M.train_loss(cfg, p, micro)
+
+        def body(carry, micro):
+            g_acc, m_acc = carry
+            (_, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(pc, micro)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_acc, g)
+            m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+            return (g_acc, m_acc), ()
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": 0.0, "z_loss": 0.0, "aux_loss": 0.0,
+              "accuracy": 0.0, "tokens": 0.0}
+        m0 = jax.tree.map(lambda x: jnp.zeros((), jnp.float32), m0)
+        (grads, msum), _ = jax.lax.scan(body, (g0, m0), batch)
+        grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        metrics = jax.tree.map(lambda x: x / accum_steps, msum)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        new_params, new_state = opt_update(opt_cfg, grads, opt_state,
+                                           params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,201 @@
+"""Fault-tolerant training loop.
+
+Maps the paper's batch-plane semantics onto JAX:
+
+- checkpoint/restart: async sharding-aware checkpoints; any failure
+  (simulated or real) resumes from the latest published step — on a real
+  cluster the BatchPlane requeues the job and this loop restores.
+- straggler mitigation: per-step node timings feed a detector; persistent
+  stragglers trigger the elastic callback (drop node -> reshard -> resume),
+  the §6.2 "baseline + delta" mechanism in reverse.
+- elastic resize: rebuild the jitted step under a new mesh/sharding and
+  restore the same checkpoint into it (diskless-node semantics: node-local
+  state is always disposable).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.async_ckpt import AsyncCheckpointer
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.param import abstract_params, param_axes
+from repro.parallel import sharding as sh
+from repro.training.optimizer import OptConfig, opt_init, opt_state_axes
+from repro.training.train_step import make_train_step
+
+
+class SimulatedNodeFailure(RuntimeError):
+    """Raised by failure injectors to model a node loss / preemption."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 3
+    keep_every: int = 0
+    log_every: int = 10
+    straggler_ratio: float = 2.0     # x median step time counts as slow
+    straggler_patience: int = 3
+
+
+class StragglerDetector:
+    def __init__(self, ratio: float, patience: int):
+        self.ratio = ratio
+        self.patience = patience
+        self.strikes: Dict[str, int] = collections.defaultdict(int)
+        self.history: List[float] = []
+
+    def observe(self, node_times: Dict[str, float]) -> List[str]:
+        """Feed per-node step durations; returns nodes flagged persistent."""
+        med = float(np.median(list(node_times.values())))
+        self.history.append(med)
+        flagged = []
+        for node, t in node_times.items():
+            if t > self.ratio * med:
+                self.strikes[node] += 1
+                if self.strikes[node] >= self.patience:
+                    flagged.append(node)
+            else:
+                self.strikes[node] = 0
+        return flagged
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: OptConfig, data,
+                 tc: TrainerConfig, mesh=None, rules=None,
+                 schedule_fn=None, seed: int = 0,
+                 failure_injector: Optional[Callable[[int], None]] = None,
+                 node_timer: Optional[Callable[[int], Dict[str, float]]] = None,
+                 on_straggler: Optional[Callable[[str], None]] = None,
+                 param_dtype=jnp.float32):
+        self.cfg, self.opt_cfg, self.tc = cfg, opt_cfg, tc
+        self.data = data
+        self.schedule_fn = schedule_fn
+        self.failure_injector = failure_injector
+        self.node_timer = node_timer
+        self.on_straggler = on_straggler
+        self.detector = StragglerDetector(tc.straggler_ratio,
+                                          tc.straggler_patience)
+        self.ckpt = AsyncCheckpointer(tc.ckpt_dir, tc.keep_last,
+                                      tc.keep_every)
+        self.metrics_log: List[Dict[str, Any]] = []
+        self.restarts = 0
+        self.param_dtype = param_dtype
+        self._build(mesh, rules)
+        key = jax.random.PRNGKey(seed)
+        self.params = M.init(cfg, key, param_dtype)
+        self.opt_state = opt_init(opt_cfg, self.params)
+        if mesh is not None:
+            self.params = jax.device_put(self.params, self.p_sh)
+            self.opt_state = jax.device_put(self.opt_state, self.o_sh)
+        self.step = 0
+
+    # ------------------------------------------------------------ build
+    def _build(self, mesh, rules):
+        self.mesh, self.rules = mesh, rules
+        step_fn = make_train_step(self.cfg, self.opt_cfg, self.schedule_fn)
+        if mesh is not None:
+            axes = param_axes(M.model_specs(self.cfg))
+            self.p_sh = sh.tree_shardings(axes, mesh, rules)
+            self.o_sh = sh.tree_shardings(
+                opt_state_axes(self.opt_cfg, axes), mesh, rules)
+
+            def wrapped(params, opt_state, batch):
+                with sh.use_rules(mesh, rules):
+                    return step_fn(params, opt_state, batch)
+
+            self._jit = jax.jit(wrapped,
+                                in_shardings=(self.p_sh, self.o_sh, None),
+                                out_shardings=(self.p_sh, self.o_sh, None),
+                                donate_argnums=(0, 1))
+        else:
+            self.p_sh = self.o_sh = None
+            self._jit = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.num_shards = mesh.shape.get("data", 1) if mesh else 1
+
+    # ------------------------------------------------------------ ckpt
+    def state_tree(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def save(self, sync: bool = False):
+        meta = {"step": self.step, "arch": self.cfg.name}
+        if sync:
+            self.ckpt.save_sync(self.step, self.state_tree(), meta)
+        else:
+            self.ckpt.save(self.step, self.state_tree(), meta)
+
+    def restore_latest(self) -> bool:
+        from repro.checkpoint import ckpt as C
+        self.ckpt.wait()
+        steps = C.list_steps(self.tc.ckpt_dir)
+        if not steps:
+            return False
+        target = {"params": self.params, "opt": self.opt_state}
+        shd = ({"params": self.p_sh, "opt": self.o_sh}
+               if self.mesh is not None else None)
+        state, manifest = C.restore(self.tc.ckpt_dir, target, shardings=shd)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = manifest["meta"].get("step", manifest["step"])
+        return True
+
+    # ------------------------------------------------------------ elastic
+    def resize(self, mesh, rules):
+        """Elastic resize: checkpoint -> rebuild -> reshard-restore."""
+        self.save(sync=True)
+        self._build(mesh, rules)
+        assert self.restore_latest(), "resize requires a checkpoint"
+
+    # ------------------------------------------------------------ loop
+    def run(self, num_steps: Optional[int] = None) -> Dict[str, Any]:
+        end = self.tc.num_steps if num_steps is None else self.step + num_steps
+        while self.step < end:
+            t0 = time.time()
+            try:
+                if self.failure_injector is not None:
+                    self.failure_injector(self.step)
+                batch = self.data.batch(self.step, shard=0,
+                                        num_shards=1)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()
+                         if k != "source"}
+                self.params, self.opt_state, metrics = self._jit(
+                    self.params, self.opt_state, batch)
+                self.step += 1
+            except SimulatedNodeFailure:
+                # batch-plane behaviour: job requeued, state restored from
+                # the last published checkpoint
+                self.restarts += 1
+                if not self.restore_latest():
+                    # no checkpoint yet: restart from scratch
+                    key = jax.random.PRNGKey(0)
+                    self.params = M.init(self.cfg, key, self.param_dtype)
+                    self.opt_state = opt_init(self.opt_cfg, self.params)
+                    if self.mesh is not None:
+                        self.params = jax.device_put(self.params, self.p_sh)
+                        self.opt_state = jax.device_put(
+                            self.opt_state, self.o_sh)
+                    self.step = 0
+                continue
+
+            if self.node_timer is not None:
+                for node in self.detector.observe(self.node_timer(self.step)):
+                    if self.on_straggler is not None:
+                        self.on_straggler(node)
+            if self.step % self.tc.ckpt_every == 0:
+                self.save()
+            if self.step % self.tc.log_every == 0 or self.step == end:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=self.step, wall=time.time() - t0)
+                self.metrics_log.append(m)
+        self.ckpt.wait()
+        return {"final_step": self.step, "restarts": self.restarts,
+                "log": self.metrics_log}

@@ -1,0 +1,37 @@
+import os
+
+# Tests must see the single real CPU device (the dry-run sets its own
+# device-count flag in its subprocess) — so no XLA_FLAGS here, but cap
+# compilation parallelism for the 1-core container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, scaled_down
+
+
+TINY_OVERRIDES = dict(num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                      num_heads=4, num_kv_heads=2, head_dim=16)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return scaled_down(get_config("qwen1.5-4b"), **TINY_OVERRIDES)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    from repro.models import model as M
+    return M.init(tiny_cfg, jax.random.PRNGKey(0))
+
+
+def tiny_batch(cfg, B=2, S=16, key=0):
+    k = jax.random.PRNGKey(key)
+    toks = jax.random.randint(k, (B, S + 1), 1, cfg.vocab_size)
+    return {
+        "tokens": toks[:, :-1].astype(jnp.int32),
+        "targets": toks[:, 1:].astype(jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }

@@ -1,0 +1,68 @@
+"""Config registry: assigned geometries, param counts, applicability."""
+import pytest
+
+from repro.configs import SHAPES, applicable, get_config, list_archs
+from repro.configs.all_archs import ASSIGNED, PAPER_OWN
+
+
+def test_all_assigned_registered():
+    archs = list_archs()
+    for a in ASSIGNED + PAPER_OWN:
+        assert a in archs
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("yi-34b", 33e9, 36e9),
+    ("qwen2.5-32b", 31e9, 34e9),
+    ("qwen1.5-4b", 3.5e9, 4.5e9),
+    ("glm4-9b", 8.5e9, 10.5e9),
+    ("mamba2-1.3b", 1.1e9, 1.5e9),
+    ("apertus-8b", 7.5e9, 8.6e9),
+    ("apertus-70b", 68e9, 72e9),
+    ("jamba-v0.1-52b", 49e9, 55e9),
+    ("deepseek-v2-lite-16b", 14e9, 17e9),
+    ("granite-moe-3b-a800m", 2.8e9, 3.8e9),
+])
+def test_param_counts_match_names(arch, lo, hi):
+    n = get_config(arch).param_count()
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("granite-moe-3b-a800m", 0.6e9, 1.0e9),     # ~800M active
+    ("deepseek-v2-lite-16b", 2.0e9, 3.2e9),     # ~2.4B active
+])
+def test_moe_active_params(arch, lo, hi):
+    n = get_config(arch).param_count(active_only=True)
+    assert lo <= n <= hi, f"{arch} active: {n/1e9:.2f}B"
+
+
+def test_vocab_padding_divides_mesh():
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        assert cfg.vocab_padded % 256 == 0
+        assert cfg.vocab_padded >= cfg.vocab_size
+        assert cfg.vocab_padded - cfg.vocab_size < 256
+
+
+def test_long_500k_applicability():
+    long = SHAPES["long_500k"]
+    runs = [a for a in ASSIGNED if applicable(get_config(a), long)[0]]
+    assert sorted(runs) == ["jamba-v0.1-52b", "mamba2-1.3b"]
+
+
+def test_hybrid_layout():
+    cfg = get_config("jamba-v0.1-52b")
+    attn = cfg.attn_layer_ids()
+    assert len(attn) == 4                      # 1:7 over 32 layers
+    assert all(i % 8 == 4 for i in attn)
+    moe = cfg.moe_layer_ids()
+    assert len(moe) == 16                      # every 2nd layer
+    assert all(i % 2 == 1 for i in moe)
+
+
+def test_mla_cache_is_compressed():
+    ds = get_config("deepseek-v2-lite-16b")
+    gqa_equiv = 2 * 2 * 16 * 128               # if it were MHA-cached
+    assert ds.kv_cache_bytes_per_token_per_layer == 2 * (512 + 64)
+    assert ds.kv_cache_bytes_per_token_per_layer < gqa_equiv / 5

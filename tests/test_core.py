@@ -1,0 +1,262 @@
+"""Core lifecycle: cluster, planes, bridge, elastic, gateway, HA,
+registry — the paper's §4/§6 behaviours."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.bridge import PlaneBridge
+from repro.core.cluster import Cluster, NodeKind, NodeState
+from repro.core.elastic import ElasticController, ElasticPolicy
+from repro.core.gateway import (Gateway, ModelEntry, OverBudget, RateLimited,
+                                Unauthorized)
+from repro.core.ha import ClusterMesh, Site, SplitBrainError
+from repro.core.planes import (BatchJob, BatchPlane, DeploymentSpec,
+                               JobState, ServicePlane)
+from repro.core.registry import ArtifactRegistry, RetentionPolicy
+from repro.configs import get_config
+
+
+def mk_cluster(hpc=6, vm=2):
+    c = Cluster()
+    c.add_nodes("nid", hpc, NodeKind.HPC)
+    c.add_nodes("vm", vm, NodeKind.COMMODITY)
+    return c
+
+
+# ------------------------------------------------------------ cluster
+def test_diskless_semantics():
+    c = mk_cluster()
+    n = c.attach("nid0000", NodeState.BATCH)
+    n.ephemeral["scratch"] = "model-weights"
+    c.detach("nid0000")
+    assert n.ephemeral == {}                  # state gone on detach
+    c.fail("nid0001")
+    c.nodes["nid0001"].reboot()
+    assert c.nodes["nid0001"].state == NodeState.FREE
+
+
+# ------------------------------------------------------------ batch plane
+def test_batch_gang_scheduling_and_requeue():
+    c = mk_cluster(hpc=4)
+    bp = BatchPlane(c)
+    calls = []
+
+    def flaky(job):
+        calls.append(job.requeues)
+        if job.requeues == 0:
+            raise RuntimeError("node failure mid-step")
+        return "done"
+
+    jid = bp.submit(BatchJob("pretrain", nodes_needed=4, run_fn=flaky))
+    bp.tick()      # fails, requeued
+    assert bp.jobs[jid].state == JobState.PENDING
+    bp.tick()      # restart succeeds (checkpoint/restart semantics)
+    assert bp.jobs[jid].state == JobState.DONE
+    assert calls == [0, 1]
+    assert len(c.free_nodes(NodeKind.HPC)) == 4   # nodes released
+
+
+def test_batch_priority_order():
+    c = mk_cluster(hpc=2)
+    bp = BatchPlane(c)
+    order = []
+    j1 = bp.submit(BatchJob("low", 2, lambda j: order.append("low"),
+                            priority=0))
+    j2 = bp.submit(BatchJob("high", 2, lambda j: order.append("high"),
+                            priority=10))
+    bp.tick()
+    bp.tick()
+    assert order == ["high", "low"]
+
+
+# ------------------------------------------------------------ service plane
+def test_service_reconcile_and_failover():
+    c = mk_cluster(hpc=3, vm=2)
+    sp = ServicePlane(c)
+    made = []
+    sp.apply(DeploymentSpec("llm", replicas=2, node_selector=NodeKind.HPC,
+                            factory=lambda node: made.append(node) or node))
+    sp.reconcile()
+    assert len(sp.endpoints("llm")) == 2
+    victim = sp.endpoints("llm")[0].node
+    sp.handle_node_failure(victim)
+    assert len(sp.endpoints("llm")) == 1
+    sp.reconcile()                            # reschedules onto a free node
+    assert len(sp.endpoints("llm")) == 2
+    assert all(r.node != victim for r in sp.endpoints("llm"))
+
+
+def test_commodity_services_survive_hpc_failure():
+    """Paper §5.3.1: control plane on VMs is unaffected by HPC downtime."""
+    c = mk_cluster(hpc=2, vm=2)
+    sp = ServicePlane(c)
+    sp.apply(DeploymentSpec("ui", 1, NodeKind.COMMODITY))
+    sp.apply(DeploymentSpec("llm", 2, NodeKind.HPC))
+    sp.reconcile()
+    for n in list(c.nodes_in(NodeState.SERVICE, NodeKind.HPC)):
+        sp.handle_node_failure(n.name)
+    assert len(sp.endpoints("llm")) == 0
+    assert len(sp.endpoints("ui")) == 1       # still up
+    # HPC nodes return after maintenance; deployment recovers (pending->up)
+    for name in ("nid0000", "nid0001"):
+        c.nodes[name].reboot()
+    sp.reconcile()
+    assert len(sp.endpoints("llm")) == 2
+
+
+def test_rolling_update_replaces_version():
+    c = mk_cluster(hpc=3)
+    sp = ServicePlane(c)
+    sp.apply(DeploymentSpec("llm", 2, NodeKind.HPC, factory=lambda n: n))
+    sp.reconcile()
+    sp.rolling_update("llm")
+    sp.reconcile()
+    assert all(r.version == 2 for r in sp.endpoints("llm"))
+
+
+# ------------------------------------------------------------ bridge
+def test_bridge_catalog_enforcement():
+    c = mk_cluster(hpc=2)
+    bp = BatchPlane(c)
+    br = PlaneBridge(bp, recipe_runner=lambda s, p, j: f"ran {s}",
+                     allowed_scripts=["sft_lora_safe"])
+    resp = br.submit(script="sft_lora_safe", params={"rank": 8}, nodes=1)
+    bp.tick()
+    assert br.status(resp.job_id)["state"] == "done"
+    assert br.result(resp.job_id) == "ran sft_lora_safe"
+    with pytest.raises(PermissionError):
+        br.submit(script="rm_rf_slash", params={}, nodes=1)
+    assert br.audit_log[-1]["action"] == "rejected"
+
+
+# ------------------------------------------------------------ elastic
+def test_elastic_scale_out_and_in():
+    c = mk_cluster(hpc=5)
+    sp = ServicePlane(c)
+    sp.apply(DeploymentSpec("llm", 1, NodeKind.HPC, factory=lambda n: n))
+    sp.reconcile()
+    load = {"queue": 50.0, "active": 4.0, "capacity": 4.0}
+    ec = ElasticController(c, sp, "llm",
+                           ElasticPolicy(patience=2, max_replicas=4),
+                           lambda: dict(load))
+    for _ in range(4):
+        ec.tick()
+    assert len(sp.endpoints("llm")) >= 2      # scaled out under pressure
+    load.update(queue=0.0, active=0.0)
+    for _ in range(6):
+        ec.tick()
+    assert len(sp.endpoints("llm")) == 1      # returned to baseline
+
+
+# ------------------------------------------------------------ gateway
+def test_gateway_governance(tiny_cfg, tiny_params):
+    from repro.serving.engine import InferenceEngine
+    t = itertools.count()
+    gw = Gateway(clock=lambda: float(next(t)) * 0.01)
+    eng = InferenceEngine(tiny_cfg, tiny_params, max_batch=2, capacity=64)
+    entry = gw.vet_model(ModelEntry("tiny", "qwen1.5-4b", 0.5, 1.5),
+                         tiny_cfg)
+    assert entry.vetted and entry.footprint_gb > 0
+    gw.bind_endpoints("tiny", [eng])
+    key = gw.mint_key("swiss-ai", budget_usd=0.05, rate_limit_per_min=5)
+
+    out = gw.completion(api_key=key.key, model="tiny", prompt=[1, 2, 3],
+                        max_tokens=4)
+    assert len(out["tokens"]) == 4
+    assert key.spent_usd > 0
+
+    with pytest.raises(Unauthorized):
+        gw.completion(api_key="sk-bogus", model="tiny", prompt=[1])
+    with pytest.raises(Unauthorized):
+        gw.completion(api_key=key.key, model="nope", prompt=[1])
+
+    # budget exhaustion
+    key.spent_usd = key.budget_usd
+    with pytest.raises(OverBudget):
+        gw.completion(api_key=key.key, model="tiny", prompt=[1])
+    key.spent_usd = 0.0
+
+    # rate limiting
+    for _ in range(4):
+        gw.completion(api_key=key.key, model="tiny", prompt=[1, 2],
+                      max_tokens=1)
+    with pytest.raises(RateLimited):
+        gw.completion(api_key=key.key, model="tiny", prompt=[1, 2],
+                      max_tokens=1)
+
+    usage = gw.usage_by_project()["swiss-ai"]
+    assert usage["requests"] == 5
+    assert usage["completion_tokens"] == 8
+
+
+def test_gateway_hot_model_needs_failover_capacity(tiny_cfg):
+    gw = Gateway()
+    from repro.core.gateway import GatewayError
+    with pytest.raises(GatewayError):
+        gw.vet_model(ModelEntry("hot", "x", 1, 1, hot=True), tiny_cfg,
+                     reserved_failover_gb=0.0)
+
+
+# ------------------------------------------------------------ HA
+class _Ep:
+    def __init__(self, name):
+        self.name = name
+        self.healthy = True
+        self.num_active = 0
+
+
+def test_ha_failover_and_split_brain():
+    a = Site("lugano", [_Ep("a1"), _Ep("a2")])
+    b = Site("geneva", [_Ep("b1")])
+    mesh = ClusterMesh([a, b])
+    site, _ = mesh.route(prefer="lugano")
+    assert site.name == "lugano"
+    mesh.partition("lugano")
+    site, _ = mesh.route(prefer="lugano")     # near-real-time failover
+    assert site.name == "geneva"
+    with pytest.raises(SplitBrainError):      # partitioned writes fenced
+        mesh.propose_config("lugano")
+    mesh.propose_config("geneva")             # healthy site advances epoch
+    # healing re-syncs the epoch; writes accepted again
+    mesh.heal("lugano")
+    mesh.propose_config("lugano")
+
+
+def test_ha_stale_epoch_fenced():
+    a = Site("s1", [_Ep("e")])
+    b = Site("s2", [_Ep("e")])
+    mesh = ClusterMesh([a, b])
+    mesh.partition("s2")
+    mesh.propose_config("s1")
+    # s2 heals but pretend it skipped re-sync: emulate stale epoch
+    mesh.sites["s2"].partitioned = False
+    with pytest.raises(SplitBrainError):
+        mesh.propose_config("s2")
+
+
+# ------------------------------------------------------------ registry
+def test_registry_lineage_and_gc():
+    t = itertools.count()
+    reg = ArtifactRegistry(clock=lambda: float(next(t)) * 86400.0)
+    ds = reg.register("dataset", "s3://corpus-v1", size_bytes=100)
+    ck1 = reg.register("checkpoint", "ckpt/step1", parents=[ds.artifact_id],
+                       size_bytes=1000)
+    ck2 = reg.register("checkpoint", "ckpt/step2", parents=[ck1.artifact_id],
+                       size_bytes=1000)
+    model = reg.register("model", "release/v1", parents=[ck2.artifact_id],
+                         pinned=True, size_bytes=500)
+    lin = [a.artifact_id for a in reg.lineage(model.artifact_id)]
+    assert lin == [ds.artifact_id, ck1.artifact_id, ck2.artifact_id]
+
+    # checkpoints age out, but pinned descendants & keep-last protect some
+    for _ in range(20):
+        next(t)
+    pol = RetentionPolicy(max_age_s={"checkpoint": 5 * 86400.0},
+                          keep_last_per_kind=1)
+    collectible = {a.artifact_id for a in reg.collectible(pol)}
+    assert ck1.artifact_id in collectible     # old, replaced, not pinned
+    assert model.artifact_id not in collectible
+    freed = reg.gc(pol)
+    assert freed >= 1000

@@ -1,0 +1,103 @@
+"""LoRA, recipes, guard, quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.data.pipeline import DataConfig, SFTDataset, SyntheticLM
+from repro.finetune.evals import CapabilityGuard, evaluate
+from repro.finetune.lora import LoraConfig, lora_init, lora_merge, lora_param_count
+from repro.finetune.quantize import dequantize_tree, quantize_tree
+from repro.finetune.recipes import CATALOG, RecipeError, resolve
+from repro.finetune.sft import make_lora_sft_step
+from repro.models import model as M
+from repro.training.optimizer import OptConfig, opt_init
+
+
+def test_lora_identity_at_init(tiny_cfg, tiny_params):
+    lcfg = LoraConfig(rank=4)
+    ad = lora_init(tiny_params, lcfg, jax.random.PRNGKey(1))
+    merged = lora_merge(tiny_params, ad, lcfg)
+    for a, b in zip(jax.tree.leaves(tiny_params), jax.tree.leaves(merged)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_lora_targets_attention_only(tiny_cfg, tiny_params):
+    lcfg = LoraConfig(rank=4)
+    ad = lora_init(tiny_params, lcfg, jax.random.PRNGKey(1))
+    names = {k.split("'")[-2] for k in ad}
+    assert names == {"wq", "wk", "wv", "wo"}
+    # far fewer params than the base
+    base_n = sum(x.size for x in jax.tree.leaves(tiny_params))
+    assert lora_param_count(ad) < base_n / 10
+
+
+def test_lora_sft_learns(tiny_cfg, tiny_params):
+    lcfg = LoraConfig(rank=8)
+    ad = lora_init(tiny_params, lcfg, jax.random.PRNGKey(1))
+    dc = DataConfig(vocab_size=tiny_cfg.vocab_size, seq_len=32,
+                    global_batch=8)
+    sft = SFTDataset(dc, prompt_len=8)
+    opt = OptConfig(lr=3e-3, weight_decay=0.0)
+    step = jax.jit(make_lora_sft_step(tiny_cfg, opt, tiny_params, lcfg))
+    st = opt_init(opt, ad)
+    first = last = None
+    for i in range(20):
+        b = {k: jnp.asarray(v) for k, v in sft.batch(i).items()}
+        ad, st, m = step(ad, st, b)
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.5
+
+
+def test_recipe_bounds_enforced(tiny_cfg):
+    with pytest.raises(RecipeError):
+        resolve("sft_lora_safe", tiny_cfg, {"lr": 1.0})      # out of bounds
+    with pytest.raises(RecipeError):
+        resolve("sft_lora_safe", tiny_cfg, {"nuke": True})   # not tunable
+    with pytest.raises(RecipeError):
+        resolve("nonexistent", tiny_cfg)
+    r, lora, opt, extra = resolve("sft_lora_safe", tiny_cfg, {"rank": 16})
+    assert lora.rank == 16 and opt.lr == pytest.approx(1e-4)
+
+
+def test_recipe_family_awareness():
+    mamba = scaled_down(get_config("mamba2-1.3b"))
+    r, lora, _, _ = resolve("sft_lora_safe", mamba)
+    assert set(lora.targets) == {"wx", "wz", "wo"}
+    with pytest.raises(RecipeError):
+        resolve("sft_lora_wide", mamba)       # attention+MLP recipe: N/A
+
+
+def test_capability_guard_detects_regression(tiny_cfg, tiny_params):
+    dc = DataConfig(vocab_size=tiny_cfg.vocab_size, seq_len=16,
+                    global_batch=4)
+    guard = CapabilityGuard(tiny_cfg, SyntheticLM(dc), tolerance=0.05,
+                            steps=2)
+    guard.snapshot(tiny_params)
+    ok = guard.check(tiny_params)
+    assert ok["passed"] and abs(ok["ppl_regression"]) < 1e-6
+    # break the model: blow up the unembed (raises perplexity sharply)
+    broken = jax.tree.map(lambda x: x, tiny_params)
+    noise = jax.random.normal(jax.random.PRNGKey(9),
+                              broken["embed"]["unembed"].shape) * 10.0
+    broken["embed"]["unembed"] = (broken["embed"]["unembed"]
+                                  + noise.astype(
+                                      broken["embed"]["unembed"].dtype))
+    bad = guard.check(broken)
+    assert not bad["passed"]
+    assert bad["ppl_regression"] > 0.5
+
+
+def test_quantize_roundtrip(tiny_params):
+    q = quantize_tree(tiny_params)
+    deq = dequantize_tree(q, jnp.float32)
+    for a, b in zip(jax.tree.leaves(tiny_params), jax.tree.leaves(deq)):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        if a.ndim >= 2 and a.size >= 1024:
+            scale = np.abs(a).max(axis=-2, keepdims=True) / 127.0
+            assert np.max(np.abs(a - b) - scale) < 1e-5  # within 1 LSB
+        else:
+            np.testing.assert_allclose(a, b, atol=1e-6)

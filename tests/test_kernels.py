@@ -1,0 +1,165 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties,
+asserting allclose against the pure-jnp ref.py oracles (interpret=True
+executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd.kernel import ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.ssm import ssd_chunked
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return (x * scale).astype(dtype)
+
+
+# ------------------------------------------------------------ flash
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("B,KV,G,Sq,Skv,D,blk", [
+    (2, 2, 2, 128, 128, 64, 64),
+    (1, 1, 4, 96, 96, 32, 32),
+    (1, 2, 1, 130, 130, 128, 64),   # ragged -> padding path
+])
+def test_flash_shapes_dtypes(B, KV, G, Sq, Skv, D, blk, dtype, tol):
+    H = KV * G
+    q = _rand(1, (B, H, Sq, D), dtype)
+    k = _rand(2, (B, KV, Skv, D), dtype)
+    v = _rand(3, (B, KV, Skv, D), dtype)
+    got = flash_attention(q, k, v, causal=True, blk_q=blk, blk_k=blk,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    assert got.dtype == dtype
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) < tol
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(1, 2), KV=st.sampled_from([1, 2]),
+       G=st.sampled_from([1, 3]), S=st.sampled_from([17, 64, 100]),
+       D=st.sampled_from([8, 32]), causal=st.booleans())
+def test_flash_property(B, KV, G, S, D, causal):
+    H = KV * G
+    q = _rand(11, (B, H, S, D))
+    k = _rand(12, (B, KV, S, D))
+    v = _rand(13, (B, KV, S, D))
+    got = flash_attention(q, k, v, causal=causal, blk_q=32, blk_k=32,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+# ------------------------------------------------------------ decode
+@pytest.mark.parametrize("B,KV,G,S,D,blk", [
+    (2, 2, 2, 512, 64, 128),
+    (3, 1, 8, 300, 32, 64),
+    (1, 8, 2, 1024, 128, 256),
+])
+def test_decode_shapes(B, KV, G, S, D, blk):
+    H = KV * G
+    q = _rand(1, (B, H, D))
+    k = _rand(2, (B, S, KV, D))
+    v = _rand(3, (B, S, KV, D))
+    lengths = jax.random.randint(jax.random.PRNGKey(4), (B,), 1, S + 1)
+    got = decode_attention(q, k, v, lengths, blk_k=blk, interpret=True)
+    want = decode_ref(q, k, v, lengths)
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(1, 3), KV=st.sampled_from([1, 2]),
+       G=st.sampled_from([1, 4]), S=st.sampled_from([40, 129]),
+       length_frac=st.floats(0.05, 1.0))
+def test_decode_property(B, KV, G, S, length_frac):
+    H, D = KV * G, 16
+    q = _rand(21, (B, H, D))
+    k = _rand(22, (B, S, KV, D))
+    v = _rand(23, (B, S, KV, D))
+    lengths = jnp.full((B,), max(1, int(S * length_frac)), jnp.int32)
+    got = decode_attention(q, k, v, lengths, blk_k=32, interpret=True)
+    want = decode_ref(q, k, v, lengths)
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+# ------------------------------------------------------------ ssd
+@pytest.mark.parametrize("BH,L,P,N,chunk", [
+    (4, 256, 64, 16, 64),
+    (2, 128, 32, 128, 32),
+    (1, 64, 16, 8, 16),
+])
+def test_ssd_vs_sequential_ref(BH, L, P, N, chunk):
+    xdt = _rand(1, (BH, L, P), scale=0.5)
+    dA = -jnp.abs(_rand(2, (BH, L))) * 0.1
+    Bm = _rand(3, (BH, L, N), scale=0.3)
+    Cm = _rand(4, (BH, L, N), scale=0.3)
+    y, h = ssd_scan(xdt, dA, Bm, Cm, chunk=chunk, interpret=True)
+    yr, hr = ssd_ref(xdt, dA, Bm, Cm)
+    assert float(jnp.max(jnp.abs(y - yr))) < 1e-4
+    assert float(jnp.max(jnp.abs(h - hr))) < 1e-4
+
+
+@settings(max_examples=6, deadline=None)
+@given(BH=st.integers(1, 3), nc=st.integers(1, 4),
+       chunk=st.sampled_from([8, 32]), P=st.sampled_from([8, 16]),
+       N=st.sampled_from([4, 16]))
+def test_ssd_property_chunk_invariance(BH, nc, chunk, P, N):
+    """The chunked form must be invariant to the chunk size."""
+    L = nc * chunk
+    xdt = _rand(31, (BH, L, P), scale=0.5)
+    dA = -jnp.abs(_rand(32, (BH, L))) * 0.2
+    Bm = _rand(33, (BH, L, N), scale=0.3)
+    Cm = _rand(34, (BH, L, N), scale=0.3)
+    y1, h1 = ssd_scan(xdt, dA, Bm, Cm, chunk=chunk, interpret=True)
+    y2, h2 = ssd_scan(xdt, dA, Bm, Cm, chunk=L, interpret=True)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 1e-4
+    assert float(jnp.max(jnp.abs(h1 - h2))) < 1e-4
+
+
+def test_ssd_ops_matches_model_path():
+    B, L, H, P, N = 2, 96, 4, 16, 32
+    x = _rand(41, (B, L, H, P), scale=0.5)
+    dt = jnp.abs(_rand(42, (B, L, H))) * 0.2
+    A = -jnp.abs(_rand(43, (H,)))
+    Bm = _rand(44, (B, L, N), scale=0.3)
+    Cm = _rand(45, (B, L, N), scale=0.3)
+    y1, h1 = ssd_ops.ssd(x, dt, A, Bm, Cm, chunk=32)
+    y2, h2 = ssd_chunked(x, dt, A, Bm, Cm, 32)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 1e-4
+    assert float(jnp.max(jnp.abs(h1 - h2))) < 1e-4
+
+
+# ------------------------------------------------------------ rmsnorm
+@pytest.mark.parametrize("shape,dtype,tol", [
+    ((4, 100, 64), jnp.float32, 1e-5),
+    ((3, 33), jnp.float32, 1e-5),
+    ((2, 7, 130), jnp.bfloat16, 2e-2),
+])
+def test_rmsnorm_shapes_dtypes(shape, dtype, tol):
+    x = _rand(1, shape, dtype)
+    w = _rand(2, (shape[-1],))
+    got = rmsnorm(x, w, interpret=True)
+    want = rmsnorm_ref(x, w)
+    assert got.dtype == dtype
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) < tol
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 50), d=st.sampled_from([8, 64, 130]),
+       blk=st.sampled_from([4, 16, 256]))
+def test_rmsnorm_property(rows, d, blk):
+    x = _rand(51, (rows, d))
+    w = _rand(52, (d,))
+    got = rmsnorm(x, w, blk_rows=blk, interpret=True)
+    want = rmsnorm_ref(x, w)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-5

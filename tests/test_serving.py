@@ -1,0 +1,130 @@
+"""Serving: engine exactness under continuous batching, admission
+control, metrics; sampling properties."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.kvcache import BlockLedger
+from repro.serving.sampling import sample
+
+
+@pytest.fixture(scope="module")
+def served(tiny_cfg):
+    params = M.init(tiny_cfg, jax.random.PRNGKey(0))
+    return tiny_cfg, params
+
+
+def _ref_generate(cfg, params, prompt, n, cap=128):
+    b = {"tokens": jnp.asarray([prompt], jnp.int32),
+         "prompt_lengths": jnp.asarray([len(prompt)], jnp.int32)}
+    logits, cache, _ = M.prefill(cfg, params, b)
+    cache = M.pad_cache(cfg, cache, cap)
+    out = [int(jnp.argmax(logits[0]))]
+    lengths = jnp.asarray([len(prompt)], jnp.int32)
+    for _ in range(n - 1):
+        lengths = lengths + 1
+        logits, cache = M.decode_step(
+            cfg, params, jnp.asarray([[out[-1]]], jnp.int32), cache, lengths)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def test_engine_matches_reference(served):
+    cfg, params = served
+    eng = InferenceEngine(cfg, params, max_batch=3, capacity=128)
+    prompts = [[5, 6, 7, 8], [9, 10, 11], [3, 1, 4, 1, 5], [42, 17]]
+    reqs = [Request(prompt=p, max_new_tokens=6) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    for p, r in zip(prompts, reqs):
+        assert r.generated == _ref_generate(cfg, params, p, 6), p
+
+
+def test_engine_metrics(served):
+    cfg, params = served
+    t = itertools.count()
+    eng = InferenceEngine(cfg, params, max_batch=2, capacity=64,
+                          clock=lambda: float(next(t)))
+    for p in ([1, 2, 3], [4, 5]):
+        eng.submit(Request(prompt=p, max_new_tokens=4))
+    s = eng.run_until_idle()
+    assert s["completed"] == 2
+    assert s["generated_tokens"] == 8
+    assert s["ttft_p50_s"] > 0
+    assert s["itl_mean_s"] > 0
+    assert s["e2el_mean_s"] >= s["ttft_p50_s"]
+
+
+def test_engine_eos_stops(served):
+    cfg, params = served
+    eng = InferenceEngine(cfg, params, max_batch=1, capacity=64)
+    ref = _ref_generate(cfg, params, [5, 6, 7], 8)
+    eos = ref[2]
+    req = Request(prompt=[5, 6, 7], max_new_tokens=8, eos_id=eos)
+    eng.submit(req)
+    eng.run_until_idle()
+    assert req.generated == ref[:3]          # stops at first eos
+
+
+def test_engine_rejects_overlong(served):
+    cfg, params = served
+    eng = InferenceEngine(cfg, params, max_batch=1, capacity=32)
+    req = Request(prompt=list(range(1, 30)), max_new_tokens=16)
+    eng.submit(req)
+    eng.run_until_idle()
+    assert req.done and req.generated == []  # capacity-rejected
+
+
+def test_block_ledger_admission():
+    led = BlockLedger(capacity_tokens=256, block_size=64)  # 4 blocks
+    assert led.can_admit("a", 100)           # 2 blocks
+    led.admit("a", 100)
+    led.admit("b", 128)                      # 2 blocks
+    assert not led.can_admit("c", 10)        # full
+    led.release("a")
+    assert led.can_admit("c", 10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_req=st.integers(1, 6), max_batch=st.integers(1, 3),
+       n_new=st.integers(1, 4))
+def test_engine_always_drains(served, n_req, max_batch, n_new):
+    cfg, params = served
+    eng = InferenceEngine(cfg, params, max_batch=max_batch, capacity=64)
+    reqs = [Request(prompt=[i + 1, i + 2], max_new_tokens=n_new)
+            for i in range(n_req)]
+    for r in reqs:
+        eng.submit(r)
+    s = eng.run_until_idle()
+    assert s["completed"] == n_req
+    assert all(len(r.generated) == n_new for r in reqs)
+    assert not eng.slots.slot_owner          # all slots returned
+    assert eng.ledger.free_blocks == eng.ledger.total_blocks
+
+
+# ------------------------------------------------------------ sampling
+def test_sampling_greedy_and_topk():
+    logits = jnp.asarray([[1.0, 3.0, 2.0, -1.0]])
+    key = jax.random.PRNGKey(0)
+    assert int(sample(logits, key)[0]) == 1
+    for s in range(20):
+        t = int(sample(logits, jax.random.PRNGKey(s), temperature=1.0,
+                       top_k=2)[0])
+        assert t in (1, 2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(top_p=st.floats(0.05, 0.95))
+def test_sampling_top_p_excludes_tail(top_p):
+    # one dominant token: low top_p must always pick it
+    logits = jnp.asarray([[10.0, 0.0, 0.0, 0.0]])
+    t = int(sample(logits, jax.random.PRNGKey(1), temperature=1.0,
+                   top_p=top_p)[0])
+    assert t == 0

@@ -1,0 +1,87 @@
+"""Sharding rules + HLO analyzer unit tests (no fake devices needed)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import hlo_analysis as H
+from repro.parallel import sharding as sh
+
+
+def test_rules_train():
+    r = sh.make_rules("train")
+    assert r.spec(("fsdp", "tensor")) == P("data", "model")
+    assert r.spec(("act_batch", "act_qseq", None)) == P(("data",), "model",
+                                                        None)
+
+
+def test_rules_dedup_same_axis():
+    r = sh.make_rules("long")
+    # kvseq takes (data, model); ssm_heads would also want model -> dropped
+    spec = r.spec(("act_batch", "act_kvseq", "act_ssm_heads", None))
+    assert spec == P(None, ("data", "model"), None, None)
+
+
+def test_rules_decode():
+    r = sh.make_rules("decode", multi_pod=True)
+    assert r.spec(("act_batch",)) == P(("pod", "data"))
+    assert r.spec(("fsdp", "tensor")) == P(None, "model")
+    assert r.spec(("layers", "act_batch", "act_kvseq", "act_heads", None)) \
+        == P(None, ("pod", "data"), "model", None, None)
+
+
+SAMPLE_HLO = """
+HloModule test, num_partitions=8
+
+%body (p: (s32[], f32[16,64])) -> (s32[], f32[16,64]) {
+  %p = (s32[], f32[16,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[16,64] get-tuple-element(%p), index=1
+  %w = f32[64,64] constant({...})
+  %ag = f32[16,128]{1,0} all-gather(%x), channel_id=1, replica_groups=[4,2]<=[8], dimensions={1}
+  %d = f32[16,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[16,64]) tuple(%i2, %d)
+}
+
+%cond (p: (s32[], f32[16,64])) -> pred[] {
+  %p = (s32[], f32[16,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[16,64]) -> f32[16,64] {
+  %a = f32[16,64] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[16,64]) tuple(%z, %a)
+  %w = (s32[], f32[16,64]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  %ar = f32[16,64]{1,0} all-reduce(%a), channel_id=2, replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%cond
+  ROOT %o = f32[16,64] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_shape_bytes():
+    assert H.shape_bytes("f32[16,64]{1,0}") == 16 * 64 * 4
+    assert H.shape_bytes("bf16[2,3]") == 12
+    assert H.shape_bytes("(f32[4], s32[2])") == 24
+    assert H.shape_bytes("pred[]") == 1
+
+
+def test_hlo_walker_trip_counts_and_collectives():
+    res = H.analyze(SAMPLE_HLO, 8)
+    # dot: 2*16*64*64 flops, executed 12x in the loop
+    assert res["flops"] == pytest.approx(12 * 2 * 16 * 64 * 64)
+    # all-gather in loop: result 16*128*4 bytes * (n-1)/n with n=2, 12x
+    ag = 12 * (16 * 128 * 4) * 0.5
+    assert res["by_collective"]["all-gather"] == pytest.approx(ag)
+    # all-reduce at entry: 2*(n-1)/n * bytes with n=8
+    ar = 2 * (7 / 8) * 16 * 64 * 4
+    assert res["by_collective"]["all-reduce"] == pytest.approx(ar)
+
+
+def test_hlo_group_size_list_format():
+    op = H.Op("x", "f32[4]", "all-reduce",
+              "%a), replica_groups={{0,1,2,3}}, to_apply=%s")
+    assert H._group_size(op, 16) == 4

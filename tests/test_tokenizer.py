@@ -1,0 +1,14 @@
+"""Byte tokenizer roundtrip properties."""
+from hypothesis import given, settings, strategies as st
+
+from repro.data.tokenizer import ByteTokenizer
+
+
+@settings(max_examples=25, deadline=None)
+@given(text=st.text(max_size=200))
+def test_roundtrip(text):
+    tok = ByteTokenizer()
+    ids = tok.encode(text, bos=True, eos=True)
+    assert ids[0] == tok.BOS and ids[-1] == tok.EOS
+    assert all(0 <= i < tok.vocab_size for i in ids)
+    assert tok.decode(ids) == text
