@@ -112,10 +112,18 @@ class Gateway:
         w.append(now)
         return k
 
-    def _pick(self, model: str) -> InferenceEngine:
+    def _pick(self, model: str, prompt: Optional[List[int]] = None,
+              namespace: str = "") -> InferenceEngine:
+        """Least-loaded healthy replica, with prefix affinity: when a
+        prompt is given, prefer the replica whose radix tree holds the
+        longest matching prefix (ties fall back to load)."""
         engines = [e for e in self.endpoints.get(model, []) if e.healthy]
         if not engines:
             raise GatewayError(f"no healthy endpoint for {model}")
+        if prompt:
+            return max(engines,
+                       key=lambda e: (e.prefix_match_len(namespace, prompt),
+                                      -e.num_active))
         return min(engines, key=lambda e: e.num_active)
 
     # ----------------------------------------------------------- serve
@@ -123,9 +131,11 @@ class Gateway:
                    max_tokens: int = 16, temperature: float = 0.0,
                    run: bool = True) -> Dict[str, Any]:
         k = self._check(api_key, model)
-        eng = self._pick(model)
+        # the prefix-cache namespace is the key's project: tenants never
+        # reuse (or even observe timing of) another tenant's cached KV
+        eng = self._pick(model, prompt=list(prompt), namespace=k.project)
         req = Request(prompt=list(prompt), max_new_tokens=max_tokens,
-                      temperature=temperature)
+                      temperature=temperature, namespace=k.project)
         rid = eng.submit(req)
         if run:
             eng.run_until_idle()

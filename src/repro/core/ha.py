@@ -69,14 +69,37 @@ class ClusterMesh:
         return self.epoch
 
     # ------------------------------------------------------------ routing
-    def route(self, prefer: Optional[str] = None):
+    def route(self, prefer: Optional[str] = None,
+              prompt: Optional[list] = None, namespace: str = ""):
         """Pick the healthiest/least-loaded endpoint across sites; failing
-        sites are skipped in near real time (active-active failover)."""
+        sites are skipped in near real time (active-active failover).
+
+        With ``prompt``, routing is prefix-affine: among healthy sites the
+        replica whose radix prefix cache holds the longest match for the
+        prompt wins (so a tenant's shared system prompt keeps landing on
+        the replica that already has its KV), with site preference and
+        load as tie-breakers."""
         self.probe()
         order = sorted(
             (s for s in self.sites.values() if s.healthy),
             key=lambda s: (0 if s.name == prefer else 1,
                            self.routed[s.name]))
+        if prompt:
+            best = None          # (match, -site_rank, -load, site, eng)
+            for rank, site in enumerate(order):
+                for e in site.endpoints:
+                    if not getattr(e, "healthy", True):
+                        continue
+                    fn = getattr(e, "prefix_match_len", None)
+                    m = fn(namespace, prompt) if fn else 0
+                    key = (m, -rank, -getattr(e, "num_active", 0))
+                    if best is None or key > best[0]:
+                        best = (key, site, e)
+            if best is not None:
+                _, site, eng = best
+                self.routed[site.name] += 1
+                return site, eng
+            raise RuntimeError("no healthy site available")
         for site in order:
             live = [e for e in site.endpoints
                     if getattr(e, "healthy", True)]

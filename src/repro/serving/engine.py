@@ -3,8 +3,12 @@
 One engine = one model replica: a fixed decode batch of ``max_batch``
 slots over a dense KV cache, a waiting queue with block-ledger admission,
 bucketed prefill (pow2 buckets bound recompilation), and per-request
-TTFT/ITL/E2EL metrics.  The gateway (repro.core.gateway) routes requests
-across replicas; HA (repro.core.ha) runs replicas active-active.
+TTFT/ITL/E2EL metrics.  Scheduling policy — admission, chunked prefill,
+and automatic radix-tree prefix reuse — lives in
+:class:`repro.serving.scheduler.ChunkedPrefillScheduler` (design notes in
+serving/README.md).  The gateway (repro.core.gateway) routes requests
+across replicas with prefix affinity; HA (repro.core.ha) runs replicas
+active-active.
 """
 from __future__ import annotations
 
@@ -16,13 +20,13 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serving.kvcache import BlockLedger, CacheSlots
 from repro.serving.metrics import MetricsCollector
 from repro.serving.sampling import sample
+from repro.serving.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 
 
 @dataclasses.dataclass
@@ -34,24 +38,19 @@ class Request:
     top_p: float = 1.0
     eos_id: int = -1
     request_id: str = ""
+    namespace: str = ""      # prefix-cache isolation domain (tenant/project)
     extras: Optional[Dict[str, Any]] = None   # vision_embeds / frames
     # filled by the engine:
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
-def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    return -(-n // 4096) * 4096
-
-
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  capacity: int = 512, block_size: int = 64,
                  clock: Callable[[], float] = time.monotonic,
-                 seed: int = 0, name: str = "engine0"):
+                 seed: int = 0, name: str = "engine0",
+                 sched: Optional[SchedulerConfig] = None):
         self.cfg, self.params = cfg, params
         self.name = name
         self.clock = clock
@@ -70,6 +69,7 @@ class InferenceEngine:
             lambda p, b: M.prefill(cfg, p, b))
         self._decode = jax.jit(
             lambda p, t, c, l: M.decode_step(cfg, p, t, c, l))
+        self.scheduler = ChunkedPrefillScheduler(self, sched)
 
     # ------------------------------------------------------------ API
     def submit(self, req: Request) -> str:
@@ -83,84 +83,26 @@ class InferenceEngine:
     def num_active(self) -> int:
         return len(self.running) + len(self.queue)
 
+    @property
+    def prefix_cache(self):
+        return self.scheduler.prefix_cache
+
+    def prefix_match_len(self, namespace: str, tokens) -> int:
+        """Longest cached prefix for this prompt (0 when caching is off or
+        the architecture is unsupported) — used for affinity routing."""
+        return self.scheduler.match_len(namespace, tokens)
+
     # ------------------------------------------------------------ steps
-    def _admit_one(self) -> bool:
-        if not self.queue or not self.slots.free:
-            return False
-        req = self.queue[0]
-        need = len(req.prompt) + req.max_new_tokens
-        if need > self.capacity:
-            req.done = True
-            self.queue.popleft()
-            self.metrics.finish(req.request_id, self.clock())
-            return False
-        if not self.ledger.can_admit(req.request_id, need):
-            return False
-        self.queue.popleft()
-        self.ledger.admit(req.request_id, need)
-        slot = self.slots.allocate(req.request_id)
-        self.metrics.prefill_start(req.request_id, self.clock())
-
-        n = len(req.prompt)
-        pad = _bucket(n)
-        toks = np.zeros((1, pad), np.int32)
-        toks[0, :n] = req.prompt
-        n_front = self.cfg.frontend_tokens if self.cfg.frontend == "vision" \
-            else 0
-        batch = {"tokens": jnp.asarray(toks),
-                 "prompt_lengths": jnp.asarray([n + n_front], jnp.int32)}
-        if req.extras:
-            batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
-        logits, cache, _ = self._prefill(self.params, batch)
-        cache = M.pad_cache(self.cfg, cache, self.capacity)
-        self.slots.insert(slot, cache, n + n_front)
-        self.running[slot] = req
-
-        tok = self._sample(logits, req)
-        self._emit(slot, req, int(tok[0]))
-        return True
-
     def _sample(self, logits, req: Request):
         self.key, k = jax.random.split(self.key)
         return sample(logits, k, temperature=req.temperature,
                       top_k=req.top_k, top_p=req.top_p)
 
-    def _emit(self, slot: int, req: Request, token: int):
-        req.generated.append(token)
-        self.metrics.token(req.request_id, self.clock())
-        if (token == req.eos_id
-                or len(req.generated) >= req.max_new_tokens):
-            req.done = True
-            self.metrics.finish(req.request_id, self.clock())
-            self.ledger.release(req.request_id)
-            self.slots.release(slot)
-            self.running.pop(slot, None)
-
-    def _decode_all(self):
-        if not self.running:
-            return
-        B = self.slots.B
-        toks = np.zeros((B, 1), np.int32)
-        for slot, req in self.running.items():
-            toks[slot, 0] = req.generated[-1]
-        lengths = self.slots.lengths
-        active = np.zeros((B,), bool)
-        for slot in self.running:
-            active[slot] = True
-        lengths = jnp.where(jnp.asarray(active), lengths + 1, lengths)
-        logits, new_cache = self._decode(
-            self.params, jnp.asarray(toks), self.slots.cache, lengths)
-        self.slots.cache = new_cache
-        self.slots.lengths = lengths
-        # per-slot sampling (batched greedy, per-request params honored)
-        for slot, req in list(self.running.items()):
-            tok = self._sample(logits[slot:slot + 1], req)
-            self._emit(slot, req, int(tok[0]))
-
     def step(self):
-        """One scheduler tick: admit (prefill) if possible, else decode."""
-        if not self._admit_one():
-            self._decode_all()
+        """One scheduler tick: admit up to N requests, then decode (and
+        stream pending prefill chunks).  Decode runs every tick, so a
+        deep queue can no longer starve running requests."""
+        self.scheduler.tick()
         self.steps += 1
 
     def run_until_idle(self, max_steps: int = 100_000):

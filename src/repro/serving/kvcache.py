@@ -5,7 +5,9 @@ serving stacks keep *dense per-slot* KV buffers with length masking (GPU
 paged-attention's random block gathers defeat the MXU/VMEM layout), while
 capacity accounting still happens in fixed-size blocks so the scheduler
 admits requests exactly like vLLM does (no admission -> request waits,
-preventing cache OOM).
+preventing cache OOM).  The radix prefix cache reuses both pieces:
+``CacheSlots.extract`` slices stored KV segments out of a slot and a
+dedicated ``BlockLedger`` accounts cached blocks (see README.md).
 """
 from __future__ import annotations
 
@@ -17,6 +19,29 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+
+
+def tree_walk(fn, tree, axes):
+    """Apply ``fn(leaf, axes_tuple)`` over a cache pytree with its axes
+    (the single recursion every cache-shaped traversal shares)."""
+    if isinstance(tree, dict):
+        return {k: tree_walk(fn, tree[k], axes[k]) for k in tree}
+    if isinstance(tree, list):
+        return [tree_walk(fn, t, a) for t, a in zip(tree, axes)]
+    return fn(tree, axes)
+
+
+def tree_multi(fn, trees, axes):
+    """Like :func:`tree_walk` over N structurally-identical pytrees:
+    ``fn([leaf0, .., leafN], axes_tuple)``."""
+    head = trees[0]
+    if isinstance(head, dict):
+        return {k: tree_multi(fn, [t[k] for t in trees], axes[k])
+                for k in head}
+    if isinstance(head, list):
+        return [tree_multi(fn, [t[i] for t in trees], axes[i])
+                for i in range(len(head))]
+    return fn(trees, axes)
 
 
 class BlockLedger:
@@ -35,11 +60,15 @@ class BlockLedger:
         return self.total_blocks - sum(self.used.values())
 
     def can_admit(self, rid: str, tokens: int) -> bool:
-        return self.blocks_for(tokens) <= self.free_blocks
+        """Admission check for ``rid``.  Blocks ``rid`` already holds count
+        toward its allowance, so re-admission (e.g. a retried request that
+        never released) is idempotent rather than double-charged."""
+        return (self.blocks_for(tokens)
+                <= self.free_blocks + self.used.get(rid, 0))
 
     def admit(self, rid: str, tokens: int):
         need = self.blocks_for(tokens)
-        if need > self.free_blocks:
+        if need > self.free_blocks + self.used.get(rid, 0):
             raise RuntimeError("KV cache exhausted")
         self.used[rid] = need
 
@@ -68,11 +97,8 @@ class CacheSlots:
 
     def _insert_impl(self, cache, prefill_cache, slot):
         """Write a single-sequence prefill cache (1, S, ...) into slot."""
-        def walk(dst, src, ax):
-            if isinstance(dst, dict):
-                return {k: walk(dst[k], src[k], ax[k]) for k in dst}
-            if isinstance(dst, list):
-                return [walk(d, s, a) for d, s, a in zip(dst, src, ax)]
+        def one(leaves, ax):
+            dst, src = leaves
             bi = ax.index("act_batch")
             src = src.astype(dst.dtype)
             start = [jnp.asarray(0, jnp.int32)] * dst.ndim
@@ -84,7 +110,7 @@ class CacheSlots:
             src = jnp.pad(src, pads)
             return jax.lax.dynamic_update_slice(dst, src, start)
 
-        return walk(cache, prefill_cache, self._axes)
+        return tree_multi(one, [cache, prefill_cache], self._axes)
 
     def allocate(self, rid: str) -> Optional[int]:
         if not self.free:
@@ -97,6 +123,25 @@ class CacheSlots:
         self.cache = self._insert(self.cache, prefill_cache,
                                   jnp.asarray(slot, jnp.int32))
         self.lengths = self.lengths.at[slot].set(length)
+
+    def extract(self, slot: int, start: int, end: int):
+        """Copy KV for positions ``[start, end)`` out of ``slot``.
+
+        Returns a pytree shaped like a single-sequence prefill cache
+        (``act_batch == 1``, ``act_kvseq == end - start``) — the segment
+        format the prefix cache stores.  Only meaningful for caches whose
+        leaves all carry an ``act_kvseq`` axis (pure attention)."""
+        def one(arr, ax):
+            if "act_kvseq" not in ax:
+                raise ValueError(
+                    "extract() needs position-sliceable cache leaves "
+                    f"(axes {ax} has no act_kvseq)")
+            idx = [slice(None)] * arr.ndim
+            idx[ax.index("act_batch")] = slice(slot, slot + 1)
+            idx[ax.index("act_kvseq")] = slice(start, end)
+            return arr[tuple(idx)]
+
+        return tree_walk(one, self.cache, self._axes)
 
     def release(self, slot: int):
         self.slot_owner.pop(slot, None)

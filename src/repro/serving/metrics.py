@@ -2,7 +2,10 @@
 
 Timestamps are injected (``clock``) so tests and the benchmark harness can
 run against a virtual clock; summaries report the same quantiles the paper
-quotes (P50/P99 TTFT, mean ITL, mean E2EL).
+quotes (P50/P99 TTFT, mean ITL, mean E2EL), plus prefix-cache accounting
+(hit rate, prefill tokens saved, TTFT split by cache hit/miss — see
+serving/README.md) and explicit rejections (a request the engine can
+never fit is *rejected*, not silently "finished").
 """
 from __future__ import annotations
 
@@ -10,6 +13,10 @@ import dataclasses
 from typing import Dict, List, Optional
 
 import numpy as np
+
+STATUS_ACTIVE = "active"
+STATUS_FINISHED = "finished"
+STATUS_REJECTED = "rejected"
 
 
 @dataclasses.dataclass
@@ -20,6 +27,8 @@ class RequestMetrics:
     prefill_start: Optional[float] = None
     first_token: Optional[float] = None
     finish: Optional[float] = None
+    status: str = STATUS_ACTIVE
+    n_cached: int = 0       # prompt tokens served from the prefix cache
     token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
@@ -50,6 +59,11 @@ class MetricsCollector:
     def prefill_start(self, rid: str, t: float):
         self.requests[rid].prefill_start = t
 
+    def prefix_hit(self, rid: str, n_cached: int):
+        """Record that ``n_cached`` prompt tokens were reused from the
+        prefix cache (prefill compute the engine did NOT spend)."""
+        self.requests[rid].n_cached = n_cached
+
     def token(self, rid: str, t: float):
         r = self.requests[rid]
         if r.first_token is None:
@@ -57,28 +71,53 @@ class MetricsCollector:
         r.token_times.append(t)
 
     def finish(self, rid: str, t: float):
-        self.requests[rid].finish = t
+        r = self.requests[rid]
+        r.finish = t
+        r.status = STATUS_FINISHED
+
+    def reject(self, rid: str, t: float):
+        """The request was refused admission (e.g. prompt + generation
+        budget exceeds slot capacity) — it never prefilled and must not
+        pollute latency quantiles."""
+        r = self.requests[rid]
+        r.finish = t
+        r.status = STATUS_REJECTED
 
     @staticmethod
     def _pct(xs, q):
         return float(np.percentile(xs, q)) if xs else float("nan")
 
     def summary(self) -> Dict[str, float]:
-        done = [r for r in self.requests.values() if r.finish is not None]
+        vals = self.requests.values()
+        done = [r for r in vals if r.status == STATUS_FINISHED]
+        rejected = [r for r in vals if r.status == STATUS_REJECTED]
         ttfts = [r.ttft for r in done if r.ttft is not None]
+        ttfts_hit = [r.ttft for r in done
+                     if r.ttft is not None and r.n_cached > 0]
+        ttfts_miss = [r.ttft for r in done
+                      if r.ttft is not None and r.n_cached == 0]
         itls = [x for r in done for x in r.itl]
-        e2els = [r.e2el for r in done]
+        e2els = [r.e2el for r in done if r.e2el is not None]
         gen = sum(r.n_generated for r in done)
+        prompt_tokens = sum(r.n_prompt for r in done)
+        saved = sum(r.n_cached for r in done)
         span = (max(r.finish for r in done) - min(r.arrival for r in done)
                 if done else float("nan"))
         return {
             "completed": len(done),
+            "rejected": len(rejected),
             "qps": len(done) / span if done and span > 0 else float("nan"),
             "ttft_p50_s": self._pct(ttfts, 50),
             "ttft_p99_s": self._pct(ttfts, 99),
+            "ttft_cached_p50_s": self._pct(ttfts_hit, 50),
+            "ttft_uncached_p50_s": self._pct(ttfts_miss, 50),
             "itl_mean_s": float(np.mean(itls)) if itls else float("nan"),
             "itl_p99_s": self._pct(itls, 99),
             "e2el_mean_s": float(np.mean(e2els)) if e2els else float("nan"),
             "generated_tokens": gen,
+            "prompt_tokens": prompt_tokens,
+            "prefill_tokens_saved": saved,
+            "prefix_hit_rate": (saved / prompt_tokens
+                                if prompt_tokens else 0.0),
             "tokens_per_s": gen / span if done and span > 0 else float("nan"),
         }

@@ -1,0 +1,318 @@
+"""Radix-tree prefix cache over token-block chunks (see README.md).
+
+Automatic prefix reuse for the serving engine: prompts that share a
+prefix (system prompts, few-shot headers, multi-turn history) reuse the
+KV segments a previous prefill already computed, so only the uncached
+suffix is prefilled.  The index is a trie whose edges are fixed-size
+*token blocks* (``block_size`` tokens per node); each node owns the KV
+segment for its block — a pytree mirroring the model cache structure
+with ``act_batch == 1`` and ``act_kvseq == block_size``.
+
+Properties the engine relies on:
+
+- **Exactness.** For causal attention, K/V at position *i* depend only on
+  tokens ``0..i``, so a stored block is valid KV for *any* prompt that
+  shares the token prefix up to that block.  Segments are stored bits,
+  never recomputed, so reuse is bit-identical to the original prefill.
+- **Namespaces.** Trees are per-namespace (the gateway uses the project
+  of the API key), so tenants can never be served KV derived from
+  another tenant's prompts.
+- **Ref-counting + LRU eviction.** Nodes on a path in use by an
+  in-flight request are pinned (``refs > 0``); eviction takes unpinned
+  leaves in least-recently-used order.  Capacity is accounted in a
+  dedicated :class:`~repro.serving.kvcache.BlockLedger` (one ledger
+  block per node), so admission-style pressure triggers eviction exactly
+  like slot admission does.
+- **Copy-on-write.** ``gather`` returns a concatenated segment that the
+  scheduler ``dynamic_update_slice``-inserts into the dense per-slot
+  cache; the slot owns its copy, so later eviction of tree nodes never
+  invalidates running requests.
+
+Only architectures whose cache leaves all carry an ``act_kvseq`` axis
+(pure attention: GQA / MLA) support position-sliced KV segments; SSM /
+hybrid / encoder-decoder / vision-prefixed models are detected by
+:func:`supports_prefix_cache` and served without reuse.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.kvcache import BlockLedger, tree_multi, tree_walk
+
+try:  # optional: the tree logic itself is testable without jax arrays
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover - jax is a hard dep of the engine
+    jnp = None
+
+
+def concat_segments(segs: Sequence, axes):
+    """Concatenate KV segments along each leaf's ``act_kvseq`` axis."""
+    if len(segs) == 1:
+        return segs[0]
+    return tree_multi(
+        lambda leaves, ax: jnp.concatenate(leaves, axis=ax.index("act_kvseq")),
+        list(segs), axes)
+
+
+def slice_segment(seg, axes, length: int):
+    """Take the first ``length`` positions of a segment."""
+    def one(arr, ax):
+        i = ax.index("act_kvseq")
+        if arr.shape[i] <= length:
+            return arr
+        idx = [slice(None)] * arr.ndim
+        idx[i] = slice(0, length)
+        return arr[tuple(idx)]
+    return tree_walk(one, seg, axes)
+
+
+def segment_length(seg, axes) -> int:
+    """The ``act_kvseq`` extent of a segment (first leaf)."""
+    out = []
+
+    def one(arr, ax):
+        out.append(arr.shape[ax.index("act_kvseq")])
+        return arr
+    tree_walk(one, seg, axes)
+    return out[0]
+
+
+def supports_prefix_cache(cfg) -> bool:
+    """True iff every cache leaf is position-sliceable along the sequence.
+
+    SSM / hybrid states have no per-position KV; encoder-decoder and
+    vision-prefixed models key their cache on non-token inputs.
+    """
+    if getattr(cfg, "is_encoder_decoder", False):
+        return False
+    if getattr(cfg, "frontend", "text") == "vision":
+        return False
+    from repro.models import model as M
+    leaves: List[tuple] = []
+
+    def collect(t):
+        if isinstance(t, dict):
+            for v in t.values():
+                collect(v)
+        elif isinstance(t, list):
+            for v in t:
+                collect(v)
+        else:
+            leaves.append(t)
+    collect(M.cache_axes(cfg))
+    return all("act_kvseq" in ax for ax in leaves)
+
+
+# ------------------------------------------------------------------ the tree
+class _Node:
+    __slots__ = ("block", "seg", "children", "parent", "refs", "last_use",
+                 "namespace", "node_id")
+
+    def __init__(self, block: Tuple[int, ...], seg, parent: "_Node | None",
+                 namespace: str, node_id: int):
+        self.block = block
+        self.seg = seg
+        self.children: Dict[Tuple[int, ...], _Node] = {}
+        self.parent = parent
+        self.refs = 0
+        self.last_use = 0
+        self.namespace = namespace
+        self.node_id = node_id
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return (f"_Node(id={self.node_id}, refs={self.refs}, "
+                f"children={len(self.children)})")
+
+
+class Match:
+    """Result of a longest-prefix lookup: the matched node path."""
+    __slots__ = ("namespace", "nodes", "length")
+
+    def __init__(self, namespace: str, nodes: List[_Node], length: int):
+        self.namespace = namespace
+        self.nodes = nodes
+        self.length = length
+
+
+class PrefixCache:
+    """Block-chunked radix tree of reusable KV prefixes.
+
+    ``axes`` is the model's cache-axes pytree (``M.cache_axes(cfg)``),
+    used to locate the ``act_kvseq`` dimension of every leaf.  Capacity
+    is ``capacity_tokens`` rounded down to whole blocks; accounting goes
+    through a dedicated :class:`BlockLedger` so eviction behaves exactly
+    like slot admission under memory pressure.
+    """
+
+    def __init__(self, axes, *, block_size: int = 16,
+                 capacity_tokens: int = 4096):
+        if block_size <= 0:
+            raise ValueError("block_size must be positive")
+        self.axes = axes
+        self.block_size = block_size
+        self.ledger = BlockLedger(capacity_tokens, block_size)
+        self.roots: Dict[str, _Node] = {}
+        self._clock = itertools.count(1)
+        self._ids = itertools.count()
+        # stats
+        self.queries = 0
+        self.hit_queries = 0
+        self.hit_tokens = 0
+        self.evicted_nodes = 0
+
+    # ------------------------------------------------------------ helpers
+    def _root(self, namespace: str) -> _Node:
+        root = self.roots.get(namespace)
+        if root is None:
+            root = _Node((), None, None, namespace, next(self._ids))
+            self.roots[namespace] = root
+        return root
+
+    def _blocks(self, tokens: Sequence[int]):
+        bs = self.block_size
+        for i in range(len(tokens) // bs):
+            yield tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.ledger.used)
+
+    @property
+    def cached_tokens(self) -> int:
+        return self.n_nodes * self.block_size
+
+    # ------------------------------------------------------------ lookup
+    def match(self, namespace: str, tokens: Sequence[int],
+              peek: bool = False) -> Match:
+        """Longest-prefix match in whole blocks.
+
+        ``peek=True`` skips LRU/stat updates (used by affinity routing so
+        probes don't pin recency).
+        """
+        root = self.roots.get(namespace)
+        nodes: List[_Node] = []
+        node = root
+        if node is not None:
+            for block in self._blocks(tokens):
+                child = node.children.get(block)
+                if child is None:
+                    break
+                nodes.append(child)
+                node = child
+        length = len(nodes) * self.block_size
+        if not peek:
+            self.queries += 1
+            if nodes:
+                self.hit_queries += 1
+                self.hit_tokens += length
+                tick = next(self._clock)
+                for n in nodes:
+                    n.last_use = tick
+        return Match(namespace, nodes, length)
+
+    def match_len(self, namespace: str, tokens: Sequence[int]) -> int:
+        return self.match(namespace, tokens, peek=True).length
+
+    def gather(self, match: Match, length: Optional[int] = None):
+        """Concatenated KV segment for the first ``length`` matched tokens
+        (copy-on-write: the caller inserts the result into its own slot)."""
+        if not match.nodes:
+            raise ValueError("gather on an empty match")
+        length = match.length if length is None else length
+        if not 0 < length <= match.length:
+            raise ValueError(f"length {length} outside (0, {match.length}]")
+        n_nodes = -(-length // self.block_size)
+        seg = concat_segments([n.seg for n in match.nodes[:n_nodes]],
+                              self.axes)
+        return slice_segment(seg, self.axes, length)
+
+    # ------------------------------------------------------------ pinning
+    def lock(self, nodes: Sequence[_Node]):
+        for n in nodes:
+            n.refs += 1
+
+    def unlock(self, nodes: Sequence[_Node]):
+        for n in nodes:
+            n.refs = max(0, n.refs - 1)
+
+    # ------------------------------------------------------------ insert
+    def insert(self, namespace: str, tokens: Sequence[int],
+               extract: Callable[[int, int], Any]) -> List[_Node]:
+        """Store the whole-block prefix of ``tokens``.
+
+        ``extract(start, end)`` must return the KV segment for prompt
+        positions ``[start, end)`` (the scheduler slices it out of the
+        request's slot).  Existing nodes are deduplicated; only missing
+        blocks are extracted.  Under ledger pressure, unpinned LRU leaves
+        are evicted; if nothing is evictable the insert stops early
+        (keeping the stored path a valid contiguous prefix).  Returns
+        the newly created nodes, already pinned once for the caller.
+        """
+        node = self._root(namespace)
+        created: List[_Node] = []
+        tick = next(self._clock)
+        # the path being extended must never be an eviction victim: evicting
+        # the leaf we are about to hang a child off would orphan the child
+        # (unreachable from the root) while it still holds a ledger block
+        path_ids = {node.node_id}
+        for i, block in enumerate(self._blocks(tokens)):
+            child = node.children.get(block)
+            if child is None:
+                if (self.ledger.free_blocks < 1
+                        and not self._evict_one(exclude=path_ids)):
+                    break
+                start = i * self.block_size
+                seg = extract(start, start + self.block_size)
+                child = _Node(block, seg, node, namespace, next(self._ids))
+                child.refs = 1
+                node.children[block] = child
+                self.ledger.admit(f"pfx{child.node_id}", self.block_size)
+                created.append(child)
+            child.last_use = tick
+            path_ids.add(child.node_id)
+            node = child
+        return created
+
+    # ------------------------------------------------------------ eviction
+    def _evictable(self, exclude=frozenset()) -> List[_Node]:
+        out = []
+        for root in self.roots.values():
+            stack = list(root.children.values())
+            while stack:
+                n = stack.pop()
+                if n.children:
+                    stack.extend(n.children.values())
+                elif n.refs == 0 and n.node_id not in exclude:
+                    out.append(n)
+        return out
+
+    def _evict_one(self, exclude=frozenset()) -> bool:
+        cands = self._evictable(exclude)
+        if not cands:
+            return False
+        victim = min(cands, key=lambda n: n.last_use)
+        victim.parent.children.pop(victim.block, None)
+        self.ledger.release(f"pfx{victim.node_id}")
+        victim.seg = None
+        self.evicted_nodes += 1
+        return True
+
+    def evict(self, n_blocks: int) -> int:
+        """Evict up to ``n_blocks`` unpinned LRU leaves; returns count."""
+        done = 0
+        while done < n_blocks and self._evict_one():
+            done += 1
+        return done
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, float]:
+        return {
+            "nodes": self.n_nodes,
+            "cached_tokens": self.cached_tokens,
+            "capacity_tokens": self.ledger.total_blocks * self.block_size,
+            "queries": self.queries,
+            "hit_queries": self.hit_queries,
+            "hit_tokens": self.hit_tokens,
+            "evicted_nodes": self.evicted_nodes,
+        }

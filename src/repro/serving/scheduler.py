@@ -1,0 +1,266 @@
+"""Chunked-prefill scheduler policy for the inference engine.
+
+The engine's old loop ("admit one request OR decode the batch") had two
+problems: a deep waiting queue starved every running request (a tick
+that admitted never decoded), and every prompt was prefilled from
+scratch.  This policy object replaces it (see README.md):
+
+- **Admission** pops up to ``admit_per_tick`` requests per tick.  Each
+  admitted request first runs a longest-prefix match against the radix
+  prefix cache (:mod:`repro.serving.prefix_cache`); the matched KV
+  segment is inserted into the request's slot and only the uncached
+  suffix needs compute.
+- **Decode runs every tick.**  Running requests emit at least one token
+  per tick regardless of admission activity.
+- **Chunked prefill.**  Uncached suffixes are consumed through the
+  batched decode step — at most ``prefill_chunk`` suffix tokens per
+  request per tick, as micro-steps in which *every* running slot
+  advances: prefilling slots consume their next prompt token while
+  decoding slots keep emitting.  A long prefill therefore never stalls
+  a running decode (the old loop's ITL cliff).  A prompt longer than
+  ``prefill_chunk`` with no cache hit one-shot-prefills its first chunk
+  and streams the rest the same way.
+
+Exactness: suffix tokens pass through ``decode_step`` at their true
+positions against the already-written prefix KV, which is the same math
+as a full prefill (causal attention, identical RoPE positions); the
+engine-vs-reference tests pin this token-for-token.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.prefix_cache import (Match, PrefixCache,
+                                        supports_prefix_cache)
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    admit_per_tick: int = 1
+    # max uncached suffix tokens consumed per request per tick; also the
+    # one-shot prefill size cap for cache-miss prompts
+    prefill_chunk: int = 512
+    enable_prefix_cache: bool = True
+    prefix_block: int = 16
+    # KV token budget of the prefix cache; default = one full slot batch
+    cache_capacity_tokens: Optional[int] = None
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 4096) * 4096
+
+
+class ChunkedPrefillScheduler:
+    """Policy object driving one engine's admission + decode loop."""
+
+    def __init__(self, engine, config: Optional[SchedulerConfig] = None):
+        from repro.models import model as M
+        self.eng = engine
+        self.config = config or SchedulerConfig()
+        self.supported = supports_prefix_cache(engine.cfg)
+        self.prefix_cache: Optional[PrefixCache] = None
+        if self.config.enable_prefix_cache and self.supported:
+            cap = (self.config.cache_capacity_tokens
+                   if self.config.cache_capacity_tokens is not None
+                   else engine.capacity * engine.slots.B)
+            self.prefix_cache = PrefixCache(
+                M.cache_axes(engine.cfg),
+                block_size=self.config.prefix_block,
+                capacity_tokens=cap)
+        # slot -> index of the next prompt token to stream through decode
+        self.pending: Dict[int, int] = {}
+        # request_id -> pinned radix nodes (unpinned at finish/release)
+        self._locked: Dict[str, List] = {}
+
+    # ------------------------------------------------------------ tick
+    def tick(self):
+        admitted = 0
+        while admitted < self.config.admit_per_tick and self._admit_one():
+            admitted += 1
+        self._decode_tick()
+
+    def drained(self) -> bool:
+        return not self.eng.queue and not self.eng.running
+
+    def match_len(self, namespace: str, tokens) -> int:
+        """Longest stored prefix (tokens) — used for affinity routing."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.match_len(namespace, tokens)
+
+    # ------------------------------------------------------------ admission
+    def _admit_one(self) -> bool:
+        eng = self.eng
+        if not eng.queue or not eng.slots.free:
+            return False
+        req = eng.queue[0]
+        need = len(req.prompt) + req.max_new_tokens
+        if need > eng.capacity:
+            # can never fit: explicit rejection, not a silent "finish"
+            eng.queue.popleft()
+            req.done = True
+            eng.metrics.reject(req.request_id, eng.clock())
+            return True      # queue progressed; keep admitting
+        if not eng.ledger.can_admit(req.request_id, need):
+            return False
+        eng.queue.popleft()
+        eng.ledger.admit(req.request_id, need)
+        slot = eng.slots.allocate(req.request_id)
+        eng.metrics.prefill_start(req.request_id, eng.clock())
+
+        n = len(req.prompt)
+        cached = 0
+        if self.prefix_cache is not None and not req.extras:
+            m: Match = self.prefix_cache.match(req.namespace, req.prompt)
+            cached = min(m.length, n - 1)
+            # take the hit only when streaming the uncached suffix costs
+            # no more model launches than the miss path (one one-shot
+            # prefill chunk + streamed tail) — a short cached prefix on a
+            # long prompt would otherwise *worsen* TTFT
+            miss_launches = 1 + max(0, n - self.config.prefill_chunk)
+            if cached > 0 and n - cached <= miss_launches:
+                self.prefix_cache.lock(m.nodes)
+                self._locked.setdefault(req.request_id, []).extend(m.nodes)
+                seg = self.prefix_cache.gather(m, cached)
+                seg = self._pad_segment(seg, min(_bucket(cached),
+                                                 eng.capacity))
+                eng.slots.insert(slot, seg, cached)
+                eng.metrics.prefix_hit(req.request_id, cached)
+            else:
+                cached = 0
+        eng.running[slot] = req
+
+        if cached > 0:
+            # stream the uncached suffix through decode micro-steps
+            self.pending[slot] = cached
+            return True
+
+        # cache miss: one-shot prefill of the first chunk (the whole
+        # prompt unless it exceeds prefill_chunk on a chunkable model)
+        chunk = n
+        if self.supported and n > self.config.prefill_chunk:
+            chunk = self.config.prefill_chunk
+        pad = _bucket(chunk)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :chunk] = req.prompt[:chunk]
+        n_front = (eng.cfg.frontend_tokens
+                   if eng.cfg.frontend == "vision" else 0)
+        batch = {"tokens": jnp.asarray(toks),
+                 "prompt_lengths": jnp.asarray([chunk + n_front], jnp.int32)}
+        if req.extras:
+            batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+        logits, cache, _ = eng._prefill(eng.params, batch)
+        from repro.models import model as M
+        cache = M.pad_cache(eng.cfg, cache, eng.capacity)
+        eng.slots.insert(slot, cache, chunk + n_front)
+
+        if chunk < n:
+            self.pending[slot] = chunk
+        else:
+            self._store_prompt(slot, req)
+            tok = eng._sample(logits, req)
+            self._emit(slot, req, int(tok[0]))
+        return True
+
+    def _pad_segment(self, seg, target: int):
+        """Pad a gathered segment's kvseq up to ``target`` so the slot
+        insert compiles per pow2 bucket, not per exact match length."""
+        from repro.serving.prefix_cache import tree_walk
+
+        def one(arr, ax):
+            i = ax.index("act_kvseq")
+            if arr.shape[i] >= target:
+                return arr
+            pads = [(0, 0)] * arr.ndim
+            pads[i] = (0, target - arr.shape[i])
+            return jnp.pad(arr, pads)
+        return tree_walk(one, seg, self.eng.slots._axes)
+
+    # ------------------------------------------------------------ decode
+    def _decode_tick(self):
+        if not self.eng.running:
+            return
+        # while any slot is still prefilling (and the per-tick chunk
+        # budget lasts), run extra micro-steps; every running slot
+        # advances each micro-step, so decode is never stalled
+        limit = max(1, self.config.prefill_chunk)
+        steps = 0
+        while True:
+            self._micro_step()
+            steps += 1
+            if not self.pending or steps >= limit or not self.eng.running:
+                break
+
+    def _micro_step(self):
+        """One batched decode step.  Prefilling slots consume their next
+        prompt token; decoding slots feed their last sampled token (its
+        KV gets written now) and emit a new one."""
+        eng = self.eng
+        if not eng.running:
+            return
+        B = eng.slots.B
+        toks = np.zeros((B, 1), np.int32)
+        advance = np.zeros((B,), bool)
+        for slot, req in eng.running.items():
+            advance[slot] = True
+            if slot in self.pending:
+                toks[slot, 0] = req.prompt[self.pending[slot]]
+            else:
+                toks[slot, 0] = req.generated[-1]
+        lengths = jnp.where(jnp.asarray(advance),
+                            eng.slots.lengths + 1, eng.slots.lengths)
+        logits, new_cache = eng._decode(
+            eng.params, jnp.asarray(toks), eng.slots.cache, lengths)
+        eng.slots.cache = new_cache
+        eng.slots.lengths = lengths
+        for slot, req in list(eng.running.items()):
+            if slot in self.pending:
+                self.pending[slot] += 1
+                if self.pending[slot] >= len(req.prompt):
+                    # last prompt token consumed: its logits are the
+                    # next-token logits — prefill is complete
+                    del self.pending[slot]
+                    self._store_prompt(slot, req)
+                    tok = eng._sample(logits[slot:slot + 1], req)
+                    self._emit(slot, req, int(tok[0]))
+            else:
+                tok = eng._sample(logits[slot:slot + 1], req)
+                self._emit(slot, req, int(tok[0]))
+
+    # ------------------------------------------------------------ lifecycle
+    def _store_prompt(self, slot: int, req):
+        """Index this prompt's KV (from its slot, before any generated
+        token could be confused for prompt) into the radix tree."""
+        if self.prefix_cache is None or req.extras:
+            return
+        if len(req.prompt) < self.prefix_cache.block_size:
+            return
+        new = self.prefix_cache.insert(
+            req.namespace, req.prompt,
+            lambda s, e: self.eng.slots.extract(slot, s, e))
+        if new:
+            self._locked.setdefault(req.request_id, []).extend(new)
+
+    def _emit(self, slot: int, req, token: int):
+        eng = self.eng
+        req.generated.append(token)
+        eng.metrics.token(req.request_id, eng.clock())
+        if (token == req.eos_id
+                or len(req.generated) >= req.max_new_tokens):
+            req.done = True
+            eng.metrics.finish(req.request_id, eng.clock())
+            eng.ledger.release(req.request_id)
+            eng.slots.release(slot)
+            eng.running.pop(slot, None)
+            self.pending.pop(slot, None)
+            if self.prefix_cache is not None:
+                nodes = self._locked.pop(req.request_id, None)
+                if nodes:
+                    self.prefix_cache.unlock(nodes)

@@ -1,9 +1,19 @@
 import os
+import sys
 
 # Tests must see the single real CPU device (the dry-run sets its own
 # device-count flag in its subprocess) — so no XLA_FLAGS here, but cap
 # compilation parallelism for the 1-core container.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Property tests use hypothesis; fall back to the deterministic shim in
+# containers that don't ship it (CI installs the real package).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_shim
+    sys.modules["hypothesis"] = _hypothesis_shim
+    sys.modules["hypothesis.strategies"] = _hypothesis_shim.strategies
 
 import jax
 import jax.numpy as jnp

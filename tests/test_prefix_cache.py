@@ -1,0 +1,285 @@
+"""Radix-tree prefix cache + chunked-prefill scheduler.
+
+Exactness (engine output with prefix reuse matches the sequential
+reference token-for-token), eviction under ledger pressure, per-tenant
+namespace isolation, ref-count pinning, longest-prefix-match properties,
+and prefix-affinity routing through the gateway and the HA mesh.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.prefix_cache import PrefixCache, supports_prefix_cache
+from repro.serving.scheduler import SchedulerConfig
+
+
+@pytest.fixture(scope="module")
+def served(tiny_cfg):
+    params = M.init(tiny_cfg, jax.random.PRNGKey(0))
+    return tiny_cfg, params
+
+
+def _ref_generate(cfg, params, prompt, n, cap=128):
+    b = {"tokens": jnp.asarray([prompt], jnp.int32),
+         "prompt_lengths": jnp.asarray([len(prompt)], jnp.int32)}
+    logits, cache, _ = M.prefill(cfg, params, b)
+    cache = M.pad_cache(cfg, cache, cap)
+    out = [int(jnp.argmax(logits[0]))]
+    lengths = jnp.asarray([len(prompt)], jnp.int32)
+    for _ in range(n - 1):
+        lengths = lengths + 1
+        logits, cache = M.decode_step(
+            cfg, params, jnp.asarray([[out[-1]]], jnp.int32), cache, lengths)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def _engine(cfg, params, **kw):
+    sched = kw.pop("sched", SchedulerConfig(prefix_block=4, prefill_chunk=8))
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("capacity", 128)
+    return InferenceEngine(cfg, params, sched=sched, **kw)
+
+
+# ------------------------------------------------------------ exactness
+def test_shared_and_disjoint_prefix_exactness(served):
+    """Cache hits and misses both reproduce the reference exactly."""
+    cfg, params = served
+    sys_p = [7, 3, 9, 1, 4, 4, 2, 8, 6, 5, 1, 2]       # 3 whole blocks
+    prompts = ([sys_p + [20 + i, 30 + i] for i in range(4)]
+               + [[90, 91, 92, 93, 94], [60, 61]])     # disjoint tails
+    eng = _engine(cfg, params)
+    reqs = [Request(prompt=p, max_new_tokens=5) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    s = eng.run_until_idle()
+    for p, r in zip(prompts, reqs):
+        assert r.generated == _ref_generate(cfg, params, p, 5), p
+    # later shared-prefix requests reused the stored system prompt
+    assert s["prefill_tokens_saved"] >= 3 * 12
+    assert s["prefix_hit_rate"] > 0.3
+    assert eng.prefix_cache.hit_queries >= 3
+    # everything drained cleanly
+    assert not eng.slots.slot_owner
+    assert eng.ledger.free_blocks == eng.ledger.total_blocks
+
+
+def test_chunked_prefill_long_prompt_exact(served):
+    """A cache-miss prompt longer than prefill_chunk streams its tail
+    through decode micro-steps and still matches the reference."""
+    cfg, params = served
+    prompt = [(i * 7) % 120 + 1 for i in range(37)]    # 37 > chunk of 8
+    eng = _engine(cfg, params, sched=SchedulerConfig(
+        prefix_block=4, prefill_chunk=8, enable_prefix_cache=False))
+    req = Request(prompt=prompt, max_new_tokens=6)
+    eng.submit(req)
+    eng.run_until_idle()
+    assert req.generated == _ref_generate(cfg, params, prompt, 6)
+
+
+def test_interleaved_decode_not_starved(served):
+    """Chunked prefill of a long prompt must not stall a running decode:
+    the running request keeps emitting one token per tick."""
+    cfg, params = served
+    eng = _engine(cfg, params, sched=SchedulerConfig(
+        prefix_block=4, prefill_chunk=4))
+    r1 = Request(prompt=[5, 6, 7], max_new_tokens=12)
+    eng.submit(r1)
+    eng.step()                       # r1 admitted + first decode
+    tokens_before = len(r1.generated)
+    r2 = Request(prompt=[(i * 5) % 110 + 1 for i in range(30)],
+                 max_new_tokens=4)
+    eng.submit(r2)
+    eng.step()                       # r2 admitted; r1 must still progress
+    assert len(r1.generated) > tokens_before
+    eng.run_until_idle()
+    assert r1.generated == _ref_generate(cfg, params, [5, 6, 7], 12)
+    assert r2.generated == _ref_generate(cfg, params, r2.prompt, 4)
+
+
+# ------------------------------------------------------------ eviction
+def test_eviction_under_ledger_pressure(served):
+    """A tiny cache budget forces LRU eviction; outputs stay exact and
+    the cache ledger never overflows."""
+    cfg, params = served
+    eng = _engine(cfg, params, sched=SchedulerConfig(
+        prefix_block=4, prefill_chunk=8, cache_capacity_tokens=16))
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(1, 120, 12))) for _ in range(6)]
+    reqs = [Request(prompt=p, max_new_tokens=3) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+        eng.run_until_idle()
+    pc = eng.prefix_cache
+    assert pc.evicted_nodes > 0
+    assert pc.cached_tokens <= 16
+    assert pc.ledger.free_blocks >= 0
+    for p, r in zip(prompts, reqs):
+        assert r.generated == _ref_generate(cfg, params, p, 3)
+
+
+def test_refcount_blocks_eviction():
+    """Pinned paths survive eviction pressure; unpinned LRU leaves go."""
+    axes = {"k": ("act_batch", "act_kvseq")}
+    pc = PrefixCache(axes, block_size=2, capacity_tokens=8)  # 4 nodes max
+
+    def seg_fn(tag):
+        return lambda s, e: {"k": np.full((1, e - s), tag, np.float32)}
+
+    a = pc.insert("t", [1, 2, 3, 4], seg_fn(1.0))    # 2 nodes
+    b = pc.insert("t", [9, 8, 7, 6], seg_fn(2.0))    # 2 nodes -> full
+    assert pc.n_nodes == 4 and pc.ledger.free_blocks == 0
+    pc.unlock(b)                                     # b evictable, a pinned
+    c = pc.insert("t", [5, 5, 5, 5], seg_fn(3.0))    # needs 2 evictions
+    assert pc.n_nodes == 4
+    assert pc.match("t", [1, 2, 3, 4]).length == 4   # pinned path intact
+    assert pc.match("t", [9, 8, 7, 6]).length == 0   # LRU path evicted
+    pc.unlock(a), pc.unlock(c)
+    # fully pinned tree refuses eviction entirely
+    pc2 = PrefixCache(axes, block_size=2, capacity_tokens=4)
+    locked = pc2.insert("t", [1, 2, 3, 4], seg_fn(1.0))
+    assert len(locked) == 2
+    assert pc2.evict(5) == 0
+    pc2.unlock(locked)
+    assert pc2.evict(5) == 2
+
+
+def test_insert_never_evicts_its_own_path():
+    """Eviction during insert must exclude the path being extended —
+    evicting the leaf we are about to hang a child off would orphan the
+    child while it still holds a ledger block (permanent capacity leak)."""
+    axes = {"k": ("act_batch", "act_kvseq")}
+    seg = lambda s, e: {"k": np.zeros((1, e - s))}
+    # full ledger, only evictable node IS the insertion path: stop early
+    pc = PrefixCache(axes, block_size=2, capacity_tokens=2)
+    a = pc.insert("t", [1, 2], seg)
+    pc.unlock(a)
+    b = pc.insert("t", [1, 2, 3, 4], seg)
+    assert b == []                                   # refused, not orphaned
+    assert pc.match("t", [1, 2]).length == 2         # path intact
+    assert pc.evict(10) == 1
+    assert pc.ledger.free_blocks == pc.ledger.total_blocks  # no leak
+    # with an unrelated evictable sibling, the extension succeeds
+    pc2 = PrefixCache(axes, block_size=2, capacity_tokens=4)
+    pc2.unlock(pc2.insert("t", [1, 2], seg))
+    pc2.unlock(pc2.insert("t", [9, 9], seg))
+    pc2.unlock(pc2.insert("t", [1, 2, 3, 4], seg))   # evicts [9,9], not [1,2]
+    assert pc2.match("t", [1, 2, 3, 4]).length == 4
+    assert pc2.match("t", [9, 9]).length == 0
+    assert pc2.evict(10) == 2
+    assert pc2.ledger.free_blocks == pc2.ledger.total_blocks
+
+
+# ------------------------------------------------------------ isolation
+def test_namespace_isolation(served):
+    """The same prompt under another tenant's namespace gets no reuse."""
+    cfg, params = served
+    eng = _engine(cfg, params)
+    prompt = [11, 12, 13, 14, 15, 16, 17, 18]
+    r1 = Request(prompt=list(prompt), max_new_tokens=4, namespace="proj-a")
+    eng.submit(r1)
+    eng.run_until_idle()
+    # proj-a's prefill is indexed under proj-a only
+    assert eng.prefix_match_len("proj-a", prompt) > 0
+    assert eng.prefix_match_len("proj-b", prompt) == 0
+    r2 = Request(prompt=list(prompt), max_new_tokens=4, namespace="proj-b")
+    r3 = Request(prompt=list(prompt), max_new_tokens=4, namespace="proj-a")
+    eng.submit(r2), eng.submit(r3)
+    eng.run_until_idle()
+    ref = _ref_generate(cfg, params, prompt, 4)
+    assert r1.generated == ref and r2.generated == ref and r3.generated == ref
+    ms = eng.metrics.requests
+    assert ms[r2.request_id].n_cached == 0        # cross-tenant: no reuse
+    assert ms[r3.request_id].n_cached > 0         # same tenant: reuse
+
+
+# ------------------------------------------------------------ properties
+@settings(max_examples=30, deadline=None)
+@given(data=st.lists(st.lists(st.integers(0, 3), min_size=0, max_size=12),
+                     min_size=1, max_size=6),
+       query=st.lists(st.integers(0, 3), min_size=0, max_size=12),
+       bs=st.integers(1, 4))
+def test_match_never_exceeds_stored_prefix(data, query, bs):
+    """Longest-prefix match equals the brute-force longest whole-block
+    common prefix over everything inserted — never more."""
+    axes = {"k": ("act_batch", "act_kvseq")}
+    pc = PrefixCache(axes, block_size=bs, capacity_tokens=10_000)
+    for seq in data:
+        pc.insert("ns", seq, lambda s, e: {"k": np.zeros((1, e - s))})
+    got = pc.match("ns", query).length
+    brute = 0
+    for seq in data:
+        stored = (len(seq) // bs) * bs            # whole blocks only
+        common = 0
+        while (common < min(stored, len(query))
+               and seq[common] == query[common]):
+            common += 1
+        brute = max(brute, (common // bs) * bs)
+    assert got == brute
+    assert got <= len(query) and got % bs == 0
+    if got:
+        seg = pc.gather(pc.match("ns", query), got)
+        assert seg["k"].shape == (1, got)
+
+
+def test_supports_prefix_cache_gating(tiny_cfg):
+    from repro.configs import get_config
+    assert supports_prefix_cache(tiny_cfg)                      # GQA
+    assert not supports_prefix_cache(get_config("mamba2-1.3b"))  # SSM state
+    assert not supports_prefix_cache(get_config("whisper-small"))  # enc-dec
+    assert not supports_prefix_cache(get_config("internvl2-1b"))   # vision
+
+
+# ------------------------------------------------------------ routing
+def test_gateway_prefix_affinity_and_namespace(served):
+    from repro.core.gateway import Gateway, ModelEntry
+    cfg, params = served
+    t = itertools.count()
+    gw = Gateway(clock=lambda: float(next(t)) * 0.01)
+    gw.vet_model(ModelEntry("tiny", "qwen", 0.1, 0.2), cfg)
+    engines = [_engine(cfg, params, name=f"e{i}", max_batch=2) for i in (0, 1)]
+    gw.bind_endpoints("tiny", engines)
+    key = gw.mint_key("proj-a", budget_usd=100.0)
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3]
+    out1 = gw.completion(api_key=key.key, model="tiny", prompt=prompt,
+                         max_tokens=4)
+    # same project + same prefix -> affinity routes to the warm replica
+    out2 = gw.completion(api_key=key.key, model="tiny",
+                         prompt=prompt + [7, 7], max_tokens=4)
+    assert out2["usage"]["engine"] == out1["usage"]["engine"]
+    assert out1["tokens"] == _ref_generate(cfg, params, prompt, 4)
+    # another project is namespace-isolated: no cached tokens for it,
+    # even for the byte-identical prompt
+    key_b = gw.mint_key("proj-b", budget_usd=100.0)
+    out_b = gw.completion(api_key=key_b.key, model="tiny", prompt=prompt,
+                          max_tokens=4)
+    eng_b = {e.name: e for e in engines}[out_b["usage"]["engine"]]
+    assert eng_b.metrics.requests[out_b["id"]].n_cached == 0
+    assert out_b["tokens"] == out1["tokens"]      # same math, no reuse
+
+
+def test_ha_route_prefix_affinity(served):
+    from repro.core.ha import ClusterMesh, Site
+    cfg, params = served
+    e_cold = _engine(cfg, params, name="cold", max_batch=2)
+    e_warm = _engine(cfg, params, name="warm", max_batch=2)
+    prompt = [9, 9, 8, 8, 7, 7, 6, 6]
+    r = Request(prompt=list(prompt), max_new_tokens=3, namespace="p")
+    e_warm.submit(r)
+    e_warm.run_until_idle()
+    mesh = ClusterMesh([Site("a", [e_cold]), Site("b", [e_warm])])
+    site, eng = mesh.route(prompt=prompt + [5, 4], namespace="p")
+    assert eng is e_warm and site.name == "b"
+    # no prompt -> legacy least-loaded routing still works
+    site, eng = mesh.route(prefer="a")
+    assert site.name == "a"
+    # warm replica down -> affinity falls back to the healthy one
+    e_warm.healthy = False
+    site, eng = mesh.route(prompt=prompt, namespace="p")
+    assert eng is e_cold

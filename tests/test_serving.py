@@ -78,8 +78,45 @@ def test_engine_rejects_overlong(served):
     eng = InferenceEngine(cfg, params, max_batch=1, capacity=32)
     req = Request(prompt=list(range(1, 30)), max_new_tokens=16)
     eng.submit(req)
-    eng.run_until_idle()
+    s = eng.run_until_idle()
     assert req.done and req.generated == []  # capacity-rejected
+    # an impossible request is an explicit rejection, not a silent finish
+    assert s["rejected"] == 1 and s["completed"] == 0
+    assert eng.metrics.requests[req.request_id].status == "rejected"
+
+
+def test_rejection_does_not_pollute_latency_metrics(served):
+    """summary() stays robust with a mix of rejected and served requests:
+    rejects never enter TTFT/ITL/E2EL quantiles."""
+    cfg, params = served
+    t = itertools.count()
+    eng = InferenceEngine(cfg, params, max_batch=1, capacity=64,
+                          clock=lambda: float(next(t)))
+    good = Request(prompt=[1, 2, 3], max_new_tokens=4)
+    bad = Request(prompt=list(range(1, 80)), max_new_tokens=16)
+    eng.submit(bad)
+    eng.submit(good)
+    s = eng.run_until_idle()
+    assert s["rejected"] == 1 and s["completed"] == 1
+    assert s["generated_tokens"] == 4
+    assert s["ttft_p50_s"] > 0 and s["e2el_mean_s"] >= s["ttft_p50_s"]
+
+
+def test_admit_tick_still_decodes(served):
+    """Regression for the old admit/decode coupling: a tick that admits a
+    queued request must still decode the running batch (a deep queue used
+    to stall every running request)."""
+    cfg, params = served
+    eng = InferenceEngine(cfg, params, max_batch=1, capacity=64)
+    r1 = Request(prompt=[5, 6, 7], max_new_tokens=8)
+    r2 = Request(prompt=[9, 10], max_new_tokens=2)
+    eng.submit(r1)
+    eng.step()                  # admits r1 (prefill token) + decodes
+    assert len(r1.generated) == 2
+    eng.submit(r2)              # r2 queues behind r1 (single slot)
+    n = len(r1.generated)
+    eng.step()                  # r2 cannot be admitted; r1 still decodes
+    assert len(r1.generated) == n + 1
 
 
 def test_block_ledger_admission():
@@ -90,6 +127,21 @@ def test_block_ledger_admission():
     assert not led.can_admit("c", 10)        # full
     led.release("a")
     assert led.can_admit("c", 10)
+
+
+def test_block_ledger_readmission_idempotent():
+    """can_admit/admit are rid-aware: blocks a request already holds count
+    toward its own allowance, so re-admitting the same rid never
+    double-charges the pool."""
+    led = BlockLedger(capacity_tokens=256, block_size=64)  # 4 blocks
+    led.admit("a", 128)                      # 2 blocks
+    led.admit("b", 128)                      # 2 blocks -> pool full
+    assert not led.can_admit("c", 10)
+    assert led.can_admit("a", 128)           # same footprint: idempotent
+    assert led.can_admit("a", 100)           # shrink: fine
+    led.admit("a", 100)
+    assert led.free_blocks == 0              # still 2+2 blocks held
+    assert not led.can_admit("a", 200)       # growth beyond pool refused
 
 
 @settings(max_examples=10, deadline=None)
