@@ -1,23 +1,33 @@
-"""Paper §5.2: serving metrics (QPS, TTFT, ITL, E2EL).
+"""Paper §5.2: serving metrics (QPS, TTFT, ITL, E2EL) + paged-KV A/B.
 
-Two reproductions:
+Reproductions:
 1. measured: the continuous-batching engine on a tiny model on CPU, with
    the paper's two workload mixes (70B-style: medium prompts / moderate
    responses; 8B-style: short prompts / long-form generation) scaled down.
    Reproduces the paper's qualitative finding: the long-generation mix has
-   far higher E2EL despite lower per-token latency pressure.
+   far higher E2EL despite lower per-token latency pressure.  Rows include
+   decode tokens/sec and peak KV blocks in use.
 2. analytic: ITL for Apertus-8B/70B-class configs on the v5e target from
    the decode roofline (paper reference points: ~11 ms and ~42 ms).
 3. shared-system-prompt mix: the multi-tenant gateway pattern (every
    request of a project carries the same long system prefix) with the
    radix prefix cache on vs. off — reports TTFT, prefill tokens saved,
    and hit rate, and checks decoded outputs are identical
-   token-for-token (see src/repro/serving/README.md).
+   token-for-token across cache on/off AND across the paged/dense KV
+   layouts (see src/repro/serving/README.md).
+4. paged-vs-dense: same total KV budget, same per-request capacity — the
+   paged engine allocates blocks on demand, so it sustains a larger
+   concurrent decode batch than the dense engine (which pins
+   max_batch x capacity up front) and reports decode tokens/sec for both.
+
+CLI: ``--paged`` (default) / ``--dense`` select the KV layout for the
+measured mixes; ``--smoke`` runs the fast subset (3 + 4) for CI.
 """
 from __future__ import annotations
 
+import argparse
 import itertools
-from typing import List
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,14 +42,25 @@ from repro.serving.scheduler import SchedulerConfig
 HBM_BW = 819e9
 PEAK = 197e12
 
+_STATE = {}
 
-def _mk_engine(max_batch=4, capacity=160, sched=None):
-    cfg = scaled_down(get_config("apertus-8b"), num_layers=2, d_model=64,
-                      d_ff=128, vocab_size=256, num_heads=2,
-                      num_kv_heads=2, head_dim=32)
-    params = M.init(cfg, jax.random.PRNGKey(0))
+
+def _tiny():
+    if "cfg" not in _STATE:
+        cfg = scaled_down(get_config("apertus-8b"), num_layers=2, d_model=64,
+                          d_ff=128, vocab_size=256, num_heads=2,
+                          num_kv_heads=2, head_dim=32)
+        _STATE["cfg"] = cfg
+        _STATE["params"] = M.init(cfg, jax.random.PRNGKey(0))
+    return _STATE["cfg"], _STATE["params"]
+
+
+def _mk_engine(max_batch=4, capacity=160, sched=None, paged=None,
+               pool_tokens=None):
+    cfg, params = _tiny()
     return InferenceEngine(cfg, params, max_batch=max_batch,
-                           capacity=capacity, sched=sched)
+                           capacity=capacity, sched=sched, paged=paged,
+                           pool_tokens=pool_tokens)
 
 
 def _mix(engine, rng, n_req, prompt_rng, gen_rng):
@@ -53,22 +74,29 @@ def _mix(engine, rng, n_req, prompt_rng, gen_rng):
     return engine.run_until_idle()
 
 
-def measured_rows() -> List[str]:
+def measured_rows(paged: Optional[bool] = None) -> List[str]:
     rng = np.random.default_rng(0)
+    tag_kv = "paged" if (paged or paged is None) else "dense"
     # 70B-style mix: prompts 100-800 -> 10-80; responses 200-500 -> 20-50
-    e1 = _mk_engine()
+    e1 = _mk_engine(paged=paged)
     s1 = _mix(e1, rng, 12, (10, 80), (20, 50))
     # 8B-style mix: prompts <200 -> <20; long-form 3000+ -> 100+
-    e2 = _mk_engine(capacity=192)
+    e2 = _mk_engine(capacity=192, paged=paged)
     s2 = _mix(e2, rng, 12, (4, 20), (100, 128))
     rows = []
-    for tag, s in (("mix70b", s1), ("mix8b_longform", s2)):
+    for tag, s, e in (("mix70b", s1, e1), ("mix8b_longform", s2, e2)):
+        kv = e.kv_stats()
         rows.append(f"serve_{tag}_ttft_p50,{s['ttft_p50_s'] * 1e6:.0f},"
                     f"p99_s={s['ttft_p99_s']:.3f}")
         rows.append(f"serve_{tag}_itl_mean,{s['itl_mean_s'] * 1e6:.0f},"
                     f"tokens={s['generated_tokens']}")
         rows.append(f"serve_{tag}_e2el_mean,{s['e2el_mean_s'] * 1e6:.0f},"
                     f"qps={s['qps']:.3f}")
+        rows.append(f"serve_{tag}_decode_tokens_per_s,"
+                    f"{s['tokens_per_s']:.1f},kv={tag_kv}")
+        rows.append(f"serve_{tag}_kv_blocks_peak,{kv['kv_blocks_peak']},"
+                    f"of_total={kv['kv_blocks_total']}"
+                    f" block_tokens={kv['kv_block_size']}")
     # paper's qualitative claim: long-form mix E2EL >> medium mix E2EL
     ratio = s2["e2el_mean_s"] / s1["e2el_mean_s"]
     rows.append(f"serve_longform_e2el_ratio,{ratio * 1e6:.0f},"
@@ -77,29 +105,37 @@ def measured_rows() -> List[str]:
 
 
 def shared_prefix_rows() -> List[str]:
-    """Multi-tenant shared-system-prompt mix, prefix cache on vs. off.
+    """Multi-tenant shared-system-prompt mix: prefix cache on vs. off and
+    paged vs. dense KV.
 
     Every request of the project carries the same 48-token system prompt
     plus a short unique user turn — the dominant pattern behind the
-    paper's shared gateway.  The acceptance bar is >= 30% of prefill
-    tokens served from cache with token-identical outputs."""
+    paper's shared gateway.  Acceptance: >= 30% of prefill tokens served
+    from cache, outputs token-identical across cache on/off AND across
+    the paged/dense layouts (the paged hit is copy-free: physical blocks
+    are refcount-spliced into the request's block table)."""
     rng = np.random.default_rng(7)
     system = list(map(int, rng.integers(1, 255, 48)))
     prompts = [system + list(map(int, rng.integers(1, 255,
                                                    int(rng.integers(8, 24)))))
                for _ in range(12)]
-    outs, sums = {}, {}
-    for on in (True, False):
-        eng = _mk_engine(capacity=192, sched=SchedulerConfig(
-            enable_prefix_cache=on, prefix_block=8, prefill_chunk=32))
+    outs, sums, engines = {}, {}, {}
+    cases = [("paged_on", True, True), ("paged_off", True, False),
+             ("dense_on", False, True)]
+    for name, paged, cache_on in cases:
+        eng = _mk_engine(capacity=192, paged=paged, sched=SchedulerConfig(
+            enable_prefix_cache=cache_on, prefix_block=8, prefill_chunk=32))
         reqs = [Request(prompt=list(p), max_new_tokens=24,
                         namespace="proj") for p in prompts]
         for r in reqs:
             eng.submit(r)
-        sums[on] = eng.run_until_idle()
-        outs[on] = [r.generated for r in reqs]
-    identical = int(outs[True] == outs[False])
-    s_on, s_off = sums[True], sums[False]
+        sums[name] = eng.run_until_idle()
+        outs[name] = [r.generated for r in reqs]
+        engines[name] = eng
+    identical = int(outs["paged_on"] == outs["paged_off"])
+    paged_eq_dense = int(outs["paged_on"] == outs["dense_on"])
+    s_on, s_off = sums["paged_on"], sums["paged_off"]
+    kv_on = engines["paged_on"].kv_stats()
     rows = [
         f"serve_sharedprefix_cache_on_ttft_p50,{s_on['ttft_p50_s'] * 1e6:.0f},"
         f"cached_p50_s={s_on['ttft_cached_p50_s']:.4f}"
@@ -111,11 +147,70 @@ def shared_prefix_rows() -> List[str]:
         f"of_total={s_on['prompt_tokens']}",
         f"serve_sharedprefix_hit_rate_pct,"
         f"{s_on['prefix_hit_rate'] * 100:.1f},target>=30",
+        f"serve_sharedprefix_decode_tokens_per_s,"
+        f"{s_on['tokens_per_s']:.1f},kv=paged",
+        f"serve_sharedprefix_kv_blocks_peak,{kv_on['kv_blocks_peak']},"
+        f"shared_blocks_counted_once block_tokens={kv_on['kv_block_size']}",
         f"serve_sharedprefix_outputs_identical,{identical},"
         f"token-for-token vs cache-off",
+        f"serve_sharedprefix_paged_equals_dense,{paged_eq_dense},"
+        f"token-for-token vs dense KV",
     ]
     assert identical, "prefix cache changed decoded tokens"
+    assert paged_eq_dense, "paged KV changed decoded tokens"
     assert s_on["prefix_hit_rate"] >= 0.30, s_on["prefix_hit_rate"]
+    return rows
+
+
+def paged_vs_dense_rows(smoke: bool = False) -> List[str]:
+    """Same KV budget (1024 cache tokens), same per-request capacity
+    (256): the dense layout can only preallocate 4 slots; the paged
+    layout runs 8 slots over an on-demand pool and serves short requests
+    at twice the concurrency."""
+    budget, capacity = 1024, 256
+    gen = 12 if smoke else 24
+    n_req = 8
+    sched = SchedulerConfig(enable_prefix_cache=False, admit_per_tick=8,
+                            prefill_chunk=32)
+    rng = np.random.default_rng(11)
+    prompts = [list(map(int, rng.integers(1, 255, 12))) for _ in range(n_req)]
+    res = {}
+    for mode, paged, mb in (("dense", False, budget // capacity),
+                            ("paged", True, 8)):
+        eng = _mk_engine(max_batch=mb, capacity=capacity, sched=sched,
+                         paged=paged,
+                         pool_tokens=budget if paged else None)
+        reqs = [Request(prompt=list(p), max_new_tokens=gen) for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        peak = 0
+        while eng.num_active:
+            eng.step()
+            peak = max(peak, len(eng.running))
+        s = eng.metrics.summary()
+        kv = eng.kv_stats()
+        res[mode] = (peak, s, kv, [r.generated for r in reqs])
+    rows = []
+    for mode in ("dense", "paged"):
+        peak, s, kv, _ = res[mode]
+        rows.append(
+            f"serve_{mode}_concurrent_batch_peak,{peak},"
+            f"budget_tokens={budget} capacity={capacity}")
+        rows.append(
+            f"serve_{mode}_decode_tokens_per_s,{s['tokens_per_s']:.1f},"
+            f"generated={s['generated_tokens']}")
+        rows.append(
+            f"serve_{mode}_kv_blocks_peak,{kv['kv_blocks_peak']},"
+            f"block_tokens={kv['kv_block_size']}"
+            f" peak_kv_tokens={kv['kv_blocks_peak'] * kv['kv_block_size']}")
+    assert res["paged"][3] == res["dense"][3], \
+        "paged KV changed decoded tokens"
+    assert res["paged"][0] > res["dense"][0], (
+        f"paged sustained {res['paged'][0]} concurrent <= "
+        f"dense {res['dense'][0]} under the same budget")
+    rows.append(f"serve_paged_batch_gain,"
+                f"{res['paged'][0] / res['dense'][0]:.2f},"
+                f"paged_peak/dense_peak under equal KV budget")
     return rows
 
 
@@ -141,9 +236,22 @@ def analytic_rows() -> List[str]:
     return rows
 
 
-def run() -> List[str]:
-    return measured_rows() + shared_prefix_rows() + analytic_rows()
+def run(paged: Optional[bool] = None, smoke: bool = False) -> List[str]:
+    if smoke:
+        return shared_prefix_rows() + paged_vs_dense_rows(smoke=True)
+    return (measured_rows(paged) + shared_prefix_rows()
+            + paged_vs_dense_rows() + analytic_rows())
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    ap = argparse.ArgumentParser()
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--paged", action="store_true",
+                   help="paged KV for the measured mixes (default)")
+    g.add_argument("--dense", action="store_true",
+                   help="dense KV for the measured mixes (A/B baseline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: shared-prefix + paged-vs-dense")
+    args = ap.parse_args()
+    paged = False if args.dense else True
+    print("\n".join(run(paged=paged, smoke=args.smoke)))

@@ -8,9 +8,12 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.ref import decode_ref
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_decode_ref
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rmsnorm.kernel import rmsnorm
@@ -61,6 +64,40 @@ def run() -> List[str]:
     hbm = 2 * B * S * KV * D * 4
     rows.append(f"kernel_decode_interpret,{t_kern:.0f},"
                 f"ref_us={t_ref:.0f};kv_bytes={hbm}")
+
+    # paged vs dense decode attention: same logical sequences, KV split
+    # into a permuted physical block pool (B4 H16/KV8 S2048 D128, bs 256)
+    B, H, KV, S, D, bs = 4, 16, 8, 2048, 128, 256
+    W = S // bs
+    ks = jax.random.split(key, 3)
+    q1 = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    lens = jnp.full((B,), S, jnp.int32)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(np.arange(1, 1 + B * W))
+    kp = np.zeros((1 + B * W, bs, KV, D), np.float32)
+    vp = np.zeros_like(kp)
+    bt = np.zeros((B, W), np.int32)
+    it = iter(perm)
+    for b in range(B):
+        for j in range(W):
+            pid = int(next(it))
+            kp[pid] = np.asarray(kc[b, j * bs:(j + 1) * bs])
+            vp[pid] = np.asarray(vc[b, j * bs:(j + 1) * bs])
+            bt[b, j] = pid
+    kp, vp, bt = jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(bt)
+    t_paged = _t(jax.jit(lambda a, k, v, t, l: paged_decode_attention(
+        a, k, v, t, l, interpret=True)), q1, kp, vp, bt, lens)
+    t_dense = _t(jax.jit(lambda a, b2, c, l: decode_attention(
+        a, b2, c, l, blk_k=bs, interpret=True)), q1, kc, vc, lens)
+    t_pref = _t(jax.jit(paged_decode_ref), q1, kp, vp, bt, lens)
+    err = float(jnp.max(jnp.abs(
+        paged_decode_attention(q1, kp, vp, bt, lens, interpret=True)
+        - decode_attention(q1, kc, vc, lens, blk_k=bs, interpret=True))))
+    rows.append(f"kernel_paged_decode_interpret,{t_paged:.0f},"
+                f"dense_us={t_dense:.0f};gather_ref_us={t_pref:.0f};"
+                f"max_err_vs_dense={err:.1e};block_tokens={bs}")
 
     # ssd: BH8 L1024 P64 N64 chunk 128
     BH, L, P, N = 8, 1024, 64, 64

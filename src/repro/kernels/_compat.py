@@ -1,0 +1,12 @@
+"""Version shim for Pallas TPU API renames.
+
+``pltpu.TPUCompilerParams`` became ``pltpu.CompilerParams`` in newer JAX;
+kernels import the name from here so they run on both (the container pins
+an older jaxlib than CI).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -1,0 +1,129 @@
+"""Pallas TPU paged flash-decode: one query token per sequence against a
+*paged* KV cache, GQA.
+
+The KV cache is a shared physical pool of fixed-size blocks —
+``(num_blocks, block_size, KV, D)`` — and each sequence names its blocks
+through a block table ``(B, max_blocks)`` of physical ids.  The grid is
+(batch, table_column) with the table dimension sequential; both the block
+table and the per-sequence valid lengths arrive via scalar prefetch
+(SMEM), so the *index map itself* walks the table: the BlockSpec for K/V
+resolves ``bt[b, j]`` before the kernel body runs and DMAs exactly that
+physical block into VMEM.  No gathered per-sequence copy of the cache is
+ever materialized in HBM — that gather is what the dense fallback and the
+jnp oracle (``ref.py``) pay for.
+
+Online-softmax state for all H heads is carried in VMEM scratch exactly
+like the dense flash-decode kernel (``kernels/decode_attention``), whose
+outputs this kernel must match bit-for-bit on equal pool layouts (the
+parity tests permute tables to prove layout independence).
+
+Physical block 0 is reserved as a null block: table entries past a
+sequence's length point at it, the ``k_start < length`` guard skips their
+compute, and the tail-block mask covers a partially-filled last block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, blk: int, G: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)          # logical block index within the sequence
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    k_start = j * blk
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (H, D)
+        k = k_ref[0].astype(jnp.float32)                  # (blk, KV*D)
+        H, D = q.shape
+        KV = k.shape[-1] // D
+        k = k.reshape(blk, KV, D)
+        v = v_ref[0].astype(jnp.float32).reshape(blk, KV, D)
+        scale = 1.0 / (D ** 0.5)
+        qg = q.reshape(KV, G, D)
+        s = jnp.einsum("kgd,skd->kgs", qg * scale, k,
+                       preferred_element_type=jnp.float32)  # (KV,G,blk)
+        s = s.reshape(H, blk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[...]                               # (H, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+        pv = jnp.einsum("kgs,skd->kgd", p.reshape(KV, G, blk), v,
+                        preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv.reshape(H, D)
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, D); k_pool/v_pool: (num_blocks, block_size, KV, D);
+    block_tables: (B, max_blocks) int32 physical block ids; lengths: (B,)
+    valid tokens per sequence.  Returns (B, H, D).
+
+    Table entries at or past ``ceil(length / block_size)`` are never read
+    (their grid steps are skipped), so callers may pad rows with any valid
+    id — the serving layer uses the reserved null block 0.
+    """
+    B, H, D = q.shape
+    nb, blk, KV, _ = k_pool.shape
+    G = H // KV
+    W = block_tables.shape[1]
+    kr = k_pool.reshape(nb, blk, KV * D)
+    vr = v_pool.reshape(nb, blk, KV * D)
+
+    grid = (B, W)
+    kernel = functools.partial(_paged_decode_kernel, blk=blk, G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, D), lambda b, j, lens, bt: (b, 0, 0)),
+                pl.BlockSpec((1, blk, KV * D),
+                             lambda b, j, lens, bt: (bt[b, j], 0, 0)),
+                pl.BlockSpec((1, blk, KV * D),
+                             lambda b, j, lens, bt: (bt[b, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, D),
+                                   lambda b, j, lens, bt: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), q, kr, vr)
+    return out

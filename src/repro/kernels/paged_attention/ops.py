@@ -1,0 +1,17 @@
+"""Jit'd wrapper for paged flash-decode (model layout, CPU interpret
+fallback)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+
+
+@jax.jit
+def paged_decode(q, k_pool, v_pool, block_tables, lengths):
+    """q: (B,1,H,D); pools: (num_blocks, block_size, KV, D);
+    block_tables: (B, max_blocks); lengths: (B,) -> (B,1,H,D)."""
+    o = paged_decode_attention(q[:, 0], k_pool, v_pool, block_tables,
+                               lengths,
+                               interpret=jax.default_backend() == "cpu")
+    return o[:, None]

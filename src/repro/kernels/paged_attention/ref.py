@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for paged flash-decode: materialize the gather the
+kernel avoids, then run the dense decode oracle."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.ref import decode_ref
+
+
+def paged_decode_ref(q, k_pool, v_pool, block_tables, lengths) -> jax.Array:
+    """q: (B,H,D); k_pool/v_pool: (num_blocks, block_size, KV, D);
+    block_tables: (B, max_blocks); lengths: (B,)."""
+    B = q.shape[0]
+    _, blk, KV, D = k_pool.shape
+    W = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(B, W * blk, KV, D)
+    v = v_pool[block_tables].reshape(B, W * blk, KV, D)
+    return decode_ref(q, k, v, lengths)

@@ -30,6 +30,12 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=256)
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense per-slot KV layout (default: "
+                         "paged on supported architectures)")
+    ap.add_argument("--pool-tokens", type=int, default=None,
+                    help="paged KV pool size in tokens (default: "
+                         "max_batch * capacity)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,7 +57,9 @@ def main():
                 print(f"no usable checkpoint ({e}); serving random init")
 
     eng = InferenceEngine(cfg, params, max_batch=args.max_batch,
-                          capacity=args.capacity)
+                          capacity=args.capacity,
+                          paged=False if args.dense else None,
+                          pool_tokens=args.pool_tokens)
     gw = Gateway()
     gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
     gw.bind_endpoints(cfg.name, [eng])

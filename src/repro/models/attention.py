@@ -185,14 +185,37 @@ def decode_attention(q, k_cache, v_cache, lengths):
     return o.reshape(B, 1, H, hd)
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
+    """One-token attention against a *paged* cache (jnp oracle).
+
+    q: (B,1,H,hd); k_pool/v_pool: (num_blocks, block_size, KV, hd) shared
+    physical pool; block_tables: (B, max_blocks) int32 physical block ids;
+    lengths: (B,) valid tokens (the new token's KV must already be
+    written).  Gathers each sequence's blocks into logical order and runs
+    the dense decode math — the Pallas kernel
+    (``repro.kernels.paged_attention``) implements the same contract on
+    TPU by walking the table in SMEM instead of materializing the gather.
+    """
+    B = q.shape[0]
+    _, blk, KV, hd = k_pool.shape
+    W = block_tables.shape[1]
+    k_seq = k_pool[block_tables].reshape(B, W * blk, KV, hd)
+    v_seq = v_pool[block_tables].reshape(B, W * blk, KV, hd)
+    return decode_attention(q, k_seq, v_seq, lengths)
+
+
 def attention_block(cfg: ModelConfig, p, x, positions, *,
                     mode: str, cache=None, lengths=None,
-                    kv_valid_len=None, causal: bool = True):
+                    kv_valid_len=None, causal: bool = True,
+                    block_tables=None):
     """Full attention sublayer.  Returns (out (B,S,d), new_cache or None).
 
     mode: "train" | "prefill" | "decode".
     cache (decode): dict(k=(B,Smax,KV,hd), v=...); ``lengths`` (B,) counts
-    valid entries *including* the token being decoded.
+    valid entries *including* the token being decoded.  With
+    ``block_tables`` (B, max_blocks), cache leaves are instead pool-shaped
+    (num_blocks, block_size, KV, hd) and the new token's KV is scattered
+    into its sequence's current block.
     """
     B = x.shape[0]
     dt = x.dtype
@@ -208,6 +231,17 @@ def attention_block(cfg: ModelConfig, p, x, positions, *,
         new_cache = None
         if mode == "prefill":
             new_cache = {"k": k.astype(dt), "v": v.astype(dt)}
+    elif block_tables is not None:
+        q, k, v = project_qkv(cfg, p, x, positions)
+        blk = cache["k"].shape[1]
+        idx = lengths - 1
+        pb = jnp.take_along_axis(block_tables, (idx // blk)[:, None],
+                                 axis=1)[:, 0]
+        off = idx % blk
+        k_cache = cache["k"].at[pb, off].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[pb, off].set(v[:, 0].astype(cache["v"].dtype))
+        o = paged_decode_attention(q, k_cache, v_cache, block_tables, lengths)
+        new_cache = {"k": k_cache, "v": v_cache}
     else:
         q, k, v = project_qkv(cfg, p, x, positions)
         idx = (lengths - 1)  # slot of the current token

@@ -77,8 +77,10 @@ def _gather_fsdp(p, specs):
 
 def apply_layer(cfg: ModelConfig, p, x, positions, *, mixer: str, ffn: str,
                 mode: str, cache=None, lengths=None, causal: bool = True,
-                enc_out=None, cross_cache=None):
-    """Returns (x, new_cache, new_cross_cache, aux)."""
+                enc_out=None, cross_cache=None, block_tables=None):
+    """Returns (x, new_cache, new_cross_cache, aux).  ``block_tables``
+    switches attention mixers to the paged-pool decode path (SSM mixers
+    have no per-position KV and never see it)."""
     if sharding.active() is not None:
         E_pad = p["moe"]["w_gate"].shape[0] if ffn == "moe" else None
         spec_tree = (dec_layer_specs(cfg) if "cross" in p
@@ -113,11 +115,11 @@ def apply_layer(cfg: ModelConfig, p, x, positions, *, mixer: str, ffn: str,
         if mixer == "gqa":
             o, new_cache = attn_mod.attention_block(
                 cfg, p["mixer"], h, positions, mode=mode, cache=cache,
-                lengths=lengths, causal=causal)
+                lengths=lengths, causal=causal, block_tables=block_tables)
         elif mixer == "mla":
             o, new_cache = mla_mod.mla_block(
                 cfg, p["mixer"], h, positions, mode=mode, cache=cache,
-                lengths=lengths)
+                lengths=lengths, block_tables=block_tables)
         elif mixer == "mamba":
             o, new_cache = ssm_mod.mamba_block(
                 cfg, p["mixer"], h, mode=mode, cache=cache)

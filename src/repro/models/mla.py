@@ -74,9 +74,11 @@ def _latent_kv(cfg, p, x, positions):
 
 
 def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
-              cache=None, lengths=None):
+              cache=None, lengths=None, block_tables=None):
     """Returns (out, new_cache).  cache: {"ckv": (B,Smax,kvl),
-    "kpe": (B,Smax,rope)}."""
+    "kpe": (B,Smax,rope)} — or, with ``block_tables`` (B, max_blocks),
+    pool-shaped {"ckv": (num_blocks, block_size, kvl), ...} with the new
+    latent scattered into the sequence's current block."""
     B, S, _ = x.shape
     h = cfg.num_heads
     nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -111,12 +113,30 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
     # ---- decode: absorbed-weight attention in latent space ----
     assert S == 1
     idx = lengths - 1
-    ckv_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
-        c, u, (i, 0)))(cache["ckv"], c_kv.astype(cache["ckv"].dtype), idx)
-    kpe_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
-        c, u, (i, 0)))(cache["kpe"], k_pe.astype(cache["kpe"].dtype), idx)
-    ckv_c = sharding.constrain(ckv_c, ("act_batch", "act_kvseq", None))
-    kpe_c = sharding.constrain(kpe_c, ("act_batch", "act_kvseq", None))
+    if block_tables is not None:
+        blk = cache["ckv"].shape[1]
+        pb = jnp.take_along_axis(block_tables, (idx // blk)[:, None],
+                                 axis=1)[:, 0]
+        off = idx % blk
+        new_cache = {
+            "ckv": cache["ckv"].at[pb, off].set(
+                c_kv[:, 0].astype(cache["ckv"].dtype)),
+            "kpe": cache["kpe"].at[pb, off].set(
+                k_pe[:, 0].astype(cache["kpe"].dtype)),
+        }
+        # gather each sequence's blocks into logical order (jnp oracle;
+        # a paged-MLA Pallas kernel would walk the table in SMEM instead)
+        W = block_tables.shape[1]
+        ckv_c = new_cache["ckv"][block_tables].reshape(B, W * blk, kvl)
+        kpe_c = new_cache["kpe"][block_tables].reshape(B, W * blk, rope)
+    else:
+        ckv_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0)))(cache["ckv"], c_kv.astype(cache["ckv"].dtype), idx)
+        kpe_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0)))(cache["kpe"], k_pe.astype(cache["kpe"].dtype), idx)
+        ckv_c = sharding.constrain(ckv_c, ("act_batch", "act_kvseq", None))
+        kpe_c = sharding.constrain(kpe_c, ("act_batch", "act_kvseq", None))
+        new_cache = {"ckv": ckv_c, "kpe": kpe_c}
 
     wuk = p["wuk"].reshape(kvl, h, nope)
     # absorb W_UK into q:  q_lat (B,h,kvl); cache operands stay bf16 with
@@ -140,4 +160,4 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
                    preferred_element_type=jnp.float32)
     o = o.reshape(B, 1, h * vd).astype(dt)
     out = jnp.einsum("bsq,qd->bsd", o, p["wo"])
-    return out, {"ckv": ckv_c, "kpe": kpe_c}
+    return out, new_cache

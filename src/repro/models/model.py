@@ -206,6 +206,44 @@ def make_cache(cfg: ModelConfig, B: int, capacity: int,
     return _materialize(cache_struct(cfg, B, capacity, dtype), abstract)
 
 
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """True iff decode can run over a paged block pool: every cache leaf
+    carries adjacent (act_batch, act_kvseq) axes — pure-attention GQA/MLA
+    stacks.  SSM/hybrid state caches have no per-position KV; encoder-
+    decoder carries a fixed cross cache; vision-prefixed models key their
+    cache on non-token inputs.  All of those keep the dense per-slot path.
+    """
+    if getattr(cfg, "is_encoder_decoder", False):
+        return False
+    if getattr(cfg, "frontend", "text") == "vision":
+        return False
+    if stack_plan(cfg)["kind"] != "uniform":
+        return False
+    leaves = jax.tree.leaves(cache_axes(cfg),
+                             is_leaf=lambda x: isinstance(x, tuple))
+    for ax in leaves:
+        if "act_kvseq" not in ax or "act_batch" not in ax:
+            return False
+        if ax.index("act_kvseq") != ax.index("act_batch") + 1:
+            return False
+    return True
+
+
+def make_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    dtype=jnp.bfloat16, abstract: bool = False):
+    """Shared physical KV pool for paged decode.
+
+    Structurally this *is* a cache with ``batch == num_blocks`` and
+    ``capacity == block_size``: each batch row is one physical block, and
+    block tables map (sequence, logical block) -> row.  Every layer leaf
+    indexes rows identically, so one block id spans the whole stack and
+    allocation is accounted in token blocks, not per-layer bytes.
+    """
+    if not supports_paged_cache(cfg):
+        raise ValueError("architecture has no position-sliceable KV cache")
+    return make_cache(cfg, num_blocks, block_size, dtype, abstract)
+
+
 def pad_cache(cfg: ModelConfig, cache, capacity: int):
     """Pad the KV-sequence dim of every cache entry up to ``capacity``
     (prefill returns caches sized to the prompt; the engine/serve loop
@@ -244,7 +282,7 @@ def _maybe_remat(cfg, fn, mode):
 
 def _scan_stack(cfg: ModelConfig, stack_p, x, positions, *, mixer, ffn,
                 mode, cache=None, lengths=None, causal=True, enc_out=None,
-                cross_cache=None):
+                cross_cache=None, block_tables=None):
     """Scan a homogeneous stacked layer group."""
     xs: Dict[str, Any] = {"p": stack_p}
     if cache is not None:
@@ -260,7 +298,7 @@ def _scan_stack(cfg: ModelConfig, stack_p, x, positions, *, mixer, ffn,
         h, nc, ncross, a = apply_layer(
             cfg, layer_in["p"], h, positions, mixer=mixer, ffn=ffn,
             mode=mode, cache=cl, lengths=lengths, causal=causal,
-            enc_out=enc_out, cross_cache=crl)
+            enc_out=enc_out, cross_cache=crl, block_tables=block_tables)
         ys = {}
         if nc is not None:
             ys["cache"] = nc
@@ -326,11 +364,13 @@ def tokens_dtype(params):
 
 # --------------------------------------------------------------- forward
 def _backbone(cfg: ModelConfig, params, x, positions, *, mode,
-              cache=None, lengths=None, enc_out=None):
+              cache=None, lengths=None, enc_out=None, block_tables=None):
     """Run all decoder layers.  Returns (hidden, aux, new_cache)."""
     plan = stack_plan(cfg)
     new_cache: Dict[str, Any] = {}
     aux = jnp.zeros((), jnp.float32)
+    if block_tables is not None and plan["kind"] != "uniform":
+        raise ValueError("paged decode requires a uniform attention stack")
 
     if plan["kind"] == "uniform":
         if plan["first"]:
@@ -339,7 +379,8 @@ def _backbone(cfg: ModelConfig, params, x, positions, *, mode,
                 cl = cache["first"][i] if cache is not None else None
                 x, nc, _, a = apply_layer(
                     cfg, params["first"][i], x, positions, mixer=m, ffn=f,
-                    mode=mode, cache=cl, lengths=lengths)
+                    mode=mode, cache=cl, lengths=lengths,
+                    block_tables=block_tables)
                 aux += a
                 firsts.append(nc)
             if firsts and firsts[0] is not None:
@@ -348,7 +389,7 @@ def _backbone(cfg: ModelConfig, params, x, positions, *, mode,
             cfg, params["stack"], x, positions, mixer=plan["mixer"],
             ffn=plan["ffn"], mode=mode,
             cache=cache["stack"] if cache is not None else None,
-            lengths=lengths)
+            lengths=lengths, block_tables=block_tables)
         aux += a
         if ys and "cache" in ys:
             new_cache["stack"] = ys["cache"]
@@ -517,6 +558,25 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, lengths):
                                 cache=cache, lengths=lengths)
     logits = unembed(cfg, params["embed"], x[:, 0]).astype(jnp.float32)
     return logits, new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params, tokens, pool, block_tables,
+                      lengths):
+    """One decode step over a paged KV pool (see :func:`make_paged_pool`).
+
+    tokens (B,1) int32; block_tables (B, max_blocks) int32 physical block
+    ids; lengths (B,) valid tokens including this one.  The new token's KV
+    is scattered into block ``block_tables[b, (len-1) // block_size]`` at
+    offset ``(len-1) % block_size``; attention reads through the table.
+    Returns (logits (B,V), new_pool).
+    """
+    pos = (lengths - 1)[:, None]
+    x = embed_tokens(cfg, params["embed"], tokens, pos)
+    x, _, new_pool = _backbone(cfg, params, x, pos, mode="decode",
+                               cache=pool, lengths=lengths,
+                               block_tables=block_tables)
+    logits = unembed(cfg, params["embed"], x[:, 0]).astype(jnp.float32)
+    return logits, new_pool
 
 
 # --------------------------------------------------------------- specs

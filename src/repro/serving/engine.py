@@ -1,10 +1,19 @@
 """Continuous-batching inference engine (the vLLM analogue, §4.4/§6.5).
 
 One engine = one model replica: a fixed decode batch of ``max_batch``
-slots over a dense KV cache, a waiting queue with block-ledger admission,
-bucketed prefill (pow2 buckets bound recompilation), and per-request
-TTFT/ITL/E2EL metrics.  Scheduling policy — admission, chunked prefill,
-and automatic radix-tree prefix reuse — lives in
+slots, a waiting queue, bucketed prefill (pow2 buckets bound
+recompilation), and per-request TTFT/ITL/E2EL metrics.  KV storage is
+*paged* by default on architectures with position-sliceable caches
+(GQA/MLA): a shared block pool + per-slot block tables
+(:class:`~repro.serving.kvcache.PagedCacheSlots`), with copy-free prefix
+sharing and preemption instead of over-commit.  SSM/hybrid,
+encoder-decoder, and vision-prefixed models fall back to the dense
+per-slot layout with block-ledger admission.  Decode and sampling are
+fused in one jitted step (per-slot temperature/top-k/top-p vectors), so
+a micro-step costs one device round-trip for the whole batch.
+
+Scheduling policy — admission, chunked prefill, automatic radix-tree
+prefix reuse, preemption — lives in
 :class:`repro.serving.scheduler.ChunkedPrefillScheduler` (design notes in
 serving/README.md).  The gateway (repro.core.gateway) routes requests
 across replicas with prefix affinity; HA (repro.core.ha) runs replicas
@@ -23,9 +32,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.serving.kvcache import BlockLedger, CacheSlots
+from repro.serving.kvcache import BlockLedger, CacheSlots, PagedCacheSlots
 from repro.serving.metrics import MetricsCollector
-from repro.serving.sampling import sample
+from repro.serving.sampling import sample, sample_batched
 from repro.serving.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 
 
@@ -43,6 +52,9 @@ class Request:
     # filled by the engine:
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # generated tokens already folded into the prompt by preemption —
+    # repeated preemption must fold only the tokens emitted since
+    n_folded: int = 0
 
 
 class InferenceEngine:
@@ -50,11 +62,28 @@ class InferenceEngine:
                  capacity: int = 512, block_size: int = 64,
                  clock: Callable[[], float] = time.monotonic,
                  seed: int = 0, name: str = "engine0",
-                 sched: Optional[SchedulerConfig] = None):
+                 sched: Optional[SchedulerConfig] = None,
+                 paged: Optional[bool] = None,
+                 pool_tokens: Optional[int] = None):
+        """``paged=None`` auto-selects the paged KV path when the
+        architecture supports it.  ``pool_tokens`` sizes the shared block
+        pool (default ``max_batch * capacity`` — the dense footprint);
+        because paged blocks are allocated on demand, a pool smaller than
+        ``max_batch * capacity`` still serves ``max_batch`` concurrent
+        sequences whenever their live lengths fit.  The paged pool's
+        token-block size is the scheduler's ``prefix_block`` so radix
+        nodes map 1:1 onto physical blocks (copy-free sharing)."""
         self.cfg, self.params = cfg, params
         self.name = name
         self.clock = clock
-        self.slots = CacheSlots(cfg, max_batch, capacity)
+        self.paged = M.supports_paged_cache(cfg) if paged is None else paged
+        sched = sched or SchedulerConfig()
+        if self.paged:
+            self.slots = PagedCacheSlots(
+                cfg, max_batch, capacity, block_size=sched.prefix_block,
+                pool_tokens=pool_tokens)
+        else:
+            self.slots = CacheSlots(cfg, max_batch, capacity)
         self.ledger = BlockLedger(capacity * max_batch, block_size)
         self.capacity = capacity
         self.queue: deque[Request] = deque()
@@ -67,8 +96,28 @@ class InferenceEngine:
 
         self._prefill = jax.jit(
             lambda p, b: M.prefill(cfg, p, b))
-        self._decode = jax.jit(
-            lambda p, t, c, l: M.decode_step(cfg, p, t, c, l))
+
+        # decode + batched sampling fused in one jitted step: per-slot
+        # temperature/top-k/top-p vectors in, sampled tokens out — the
+        # scheduler does a single coalesced device_get per micro-step.
+        # ``greedy`` is static: the all-greedy batch (the common case)
+        # skips the two full-vocab sorts of the filtered sampler
+        def _fused(p, t, c, l, key, temps, tks, tps, greedy):
+            logits, nc = M.decode_step(cfg, p, t, c, l)
+            if greedy:
+                return jnp.argmax(logits, -1).astype(jnp.int32), nc
+            return sample_batched(logits, key, temps, tks, tps), nc
+
+        def _fused_paged(p, t, pool, bt, l, key, temps, tks, tps, greedy):
+            logits, np_ = M.decode_step_paged(cfg, p, t, pool, bt, l)
+            if greedy:
+                return jnp.argmax(logits, -1).astype(jnp.int32), np_
+            return sample_batched(logits, key, temps, tks, tps), np_
+
+        self._decode_sample = jax.jit(_fused, static_argnums=(8,))
+        self._decode_sample_paged = jax.jit(_fused_paged,
+                                            donate_argnums=(2,),
+                                            static_argnums=(9,))
         self.scheduler = ChunkedPrefillScheduler(self, sched)
 
     # ------------------------------------------------------------ API
@@ -91,6 +140,22 @@ class InferenceEngine:
         """Longest cached prefix for this prompt (0 when caching is off or
         the architecture is unsupported) — used for affinity routing."""
         return self.scheduler.match_len(namespace, tokens)
+
+    def kv_stats(self) -> Dict[str, int]:
+        """KV-memory accounting in blocks: live + peak usage, and total.
+        Paged engines report real pool blocks (shared prefix blocks count
+        once); dense engines report ledger reservations."""
+        if self.paged:
+            bp = self.slots.bp
+            return {"kv_blocks_used": bp.num_used,
+                    "kv_blocks_peak": bp.peak_used,
+                    "kv_blocks_total": bp.num_blocks - 1,
+                    "kv_block_size": self.slots.block_size}
+        return {"kv_blocks_used": self.ledger.total_blocks
+                - self.ledger.free_blocks,
+                "kv_blocks_peak": self.ledger.peak_blocks,
+                "kv_blocks_total": self.ledger.total_blocks,
+                "kv_block_size": self.ledger.block_size}
 
     # ------------------------------------------------------------ steps
     def _sample(self, logits, req: Request):

@@ -1,21 +1,31 @@
-"""KV-cache slot management + block-ledger admission control.
+"""KV-cache storage + block accounting for the serving engine.
 
-TPU-idiomatic adaptation of vLLM's paged KV cache (DESIGN.md §2): TPU
-serving stacks keep *dense per-slot* KV buffers with length masking (GPU
-paged-attention's random block gathers defeat the MXU/VMEM layout), while
-capacity accounting still happens in fixed-size blocks so the scheduler
-admits requests exactly like vLLM does (no admission -> request waits,
-preventing cache OOM).  The radix prefix cache reuses both pieces:
-``CacheSlots.extract`` slices stored KV segments out of a slot and a
-dedicated ``BlockLedger`` accounts cached blocks (see README.md).
+Two storage layouts (README.md "Paged KV" section):
+
+- ``CacheSlots`` — the original *dense* per-slot layout: ``max_batch``
+  preallocated rows of ``capacity`` positions each, length-masked.  Kept
+  as the fallback for architectures without position-sliceable KV
+  (SSM/hybrid state, encoder-decoder, vision-prefixed).
+- ``BlockPool`` + ``PagedCacheSlots`` — vLLM-style paged layout: one
+  shared physical pool of ``block_size``-token blocks
+  (``M.make_paged_pool``) plus per-slot block tables.  Blocks are
+  allocated on demand and ref-counted, so memory tracks *actual* sequence
+  lengths (not worst-case capacity) and the radix prefix cache shares
+  physical blocks with running requests instead of copying KV segments.
+
+``BlockLedger`` is the admission-control account for the dense path (and
+the node budget of the prefix cache); the paged path accounts in real
+pool blocks instead.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
@@ -51,6 +61,7 @@ class BlockLedger:
         self.block_size = block_size
         self.total_blocks = capacity_tokens // block_size
         self.used: Dict[str, int] = {}
+        self.peak_blocks = 0
 
     def blocks_for(self, tokens: int) -> int:
         return -(-tokens // self.block_size)
@@ -58,6 +69,10 @@ class BlockLedger:
     @property
     def free_blocks(self) -> int:
         return self.total_blocks - sum(self.used.values())
+
+    def _note_peak(self):
+        self.peak_blocks = max(self.peak_blocks,
+                               self.total_blocks - self.free_blocks)
 
     def can_admit(self, rid: str, tokens: int) -> bool:
         """Admission check for ``rid``.  Blocks ``rid`` already holds count
@@ -71,10 +86,25 @@ class BlockLedger:
         if need > self.free_blocks + self.used.get(rid, 0):
             raise RuntimeError("KV cache exhausted")
         self.used[rid] = need
+        self._note_peak()
 
     def grow(self, rid: str, tokens: int):
-        self.used[rid] = max(self.used.get(rid, 0),
-                             self.blocks_for(tokens))
+        """Grow ``rid``'s reservation to cover ``tokens``.
+
+        Never over-commits: growth past the pool raises so the caller can
+        preempt a running request (or reject) instead of silently handing
+        out blocks that do not exist.
+        """
+        need = self.blocks_for(tokens)
+        held = self.used.get(rid, 0)
+        if need <= held:
+            return
+        if need - held > self.free_blocks:
+            raise RuntimeError(
+                f"KV cache exhausted: {rid} needs {need - held} more "
+                f"block(s), {self.free_blocks} free — preempt or reject")
+        self.used[rid] = need
+        self._note_peak()
 
     def release(self, rid: str):
         self.used.pop(rid, None)
@@ -90,7 +120,8 @@ class CacheSlots:
         self.capacity = capacity
         self.cache = M.make_cache(cfg, max_batch, capacity, dtype)
         self.lengths = jnp.ones((max_batch,), jnp.int32)  # 1 = inert slot
-        self.free: List[int] = list(range(max_batch))
+        # deque: allocate() pops the head, release() appends — O(1) FIFO
+        self.free: Deque[int] = deque(range(max_batch))
         self.slot_owner: Dict[int, str] = {}
         self._axes = M.cache_axes(cfg)
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
@@ -115,7 +146,7 @@ class CacheSlots:
     def allocate(self, rid: str) -> Optional[int]:
         if not self.free:
             return None
-        slot = self.free.pop(0)
+        slot = self.free.popleft()
         self.slot_owner[slot] = rid
         return slot
 
@@ -151,3 +182,220 @@ class CacheSlots:
     @property
     def active_slots(self) -> List[int]:
         return sorted(self.slot_owner)
+
+
+# ------------------------------------------------------------------ paged
+NULL_BLOCK = 0   # reserved physical block: writes from inert slots and
+                 # reads past a sequence's length land here, never on data
+
+
+class BlockPool:
+    """Ref-counted allocator over the physical blocks of a paged pool.
+
+    One block id spans every layer leaf of the pool (see
+    ``M.make_paged_pool``).  Ids are handed out with refcount 1;
+    ``incref`` lets the prefix cache and prefix-sharing requests hold the
+    same physical block, and ``decref`` returns it to the free list only
+    when the last holder lets go.  Block 0 is the reserved null block and
+    is never allocated.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("pool needs at least one allocatable block")
+        self.num_blocks = num_blocks
+        self.free: Deque[int] = deque(range(1, num_blocks))
+        self.refs: Dict[int, int] = {}
+        self.peak_used = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def num_used(self) -> int:
+        return (self.num_blocks - 1) - len(self.free)
+
+    def alloc(self, n: int = 1) -> Optional[List[int]]:
+        """Allocate ``n`` blocks (refcount 1 each), all-or-nothing."""
+        if n > len(self.free):
+            return None
+        ids = [self.free.popleft() for _ in range(n)]
+        for b in ids:
+            self.refs[b] = 1
+        self.peak_used = max(self.peak_used, self.num_used)
+        return ids
+
+    def incref(self, ids: Sequence[int]):
+        for b in ids:
+            if b not in self.refs:
+                raise ValueError(f"incref on unallocated block {b}")
+            self.refs[b] += 1
+
+    def decref(self, ids: Sequence[int]) -> int:
+        """Drop one reference per id; returns how many blocks were freed."""
+        freed = 0
+        for b in ids:
+            r = self.refs.get(b)
+            if r is None:
+                raise ValueError(f"decref on unallocated block {b}")
+            if r > 1:
+                self.refs[b] = r - 1
+            else:
+                del self.refs[b]
+                self.free.append(b)
+                freed += 1
+        return freed
+
+
+class PagedCacheSlots:
+    """Paged counterpart of :class:`CacheSlots`.
+
+    ``max_batch`` block-table rows (one per decode slot) over a shared
+    :class:`BlockPool` of ``pool_tokens // block_size`` physical blocks.
+    A slot's KV lives wherever its table points, so
+
+    - memory tracks actual lengths: short sequences hold few blocks, and
+      more than ``pool_tokens / capacity`` sequences can run concurrently
+      whenever their live lengths fit (the dense layout pins
+      ``max_batch × capacity`` up front);
+    - a prefix-cache hit is a table splice + refcount bump
+      (``adopt_prefix``) — no KV bytes move in either direction;
+    - growth is a real allocation (``ensure_capacity``), so running out
+      of blocks is an explicit event the scheduler answers with tree
+      eviction or preemption, never a silent over-commit.
+
+    Shared (adopted) blocks are read-only by construction: the prefix
+    cache stores only *whole* prompt blocks, and a sequence writes
+    strictly after its adopted prefix, in blocks it allocated privately.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_batch: int, capacity: int,
+                 dtype=jnp.bfloat16, block_size: int = 16,
+                 pool_tokens: Optional[int] = None):
+        self.cfg = cfg
+        self.B = max_batch
+        self.capacity = capacity
+        self.block_size = block_size
+        self.blocks_per_seq = -(-capacity // block_size)
+        pool_tokens = (max_batch * capacity if pool_tokens is None
+                       else pool_tokens)
+        num_blocks = 1 + max(pool_tokens // block_size, self.blocks_per_seq)
+        self.pool = M.make_paged_pool(cfg, num_blocks, block_size, dtype)
+        self.bp = BlockPool(num_blocks)
+        self.tables = np.full((max_batch, self.blocks_per_seq), NULL_BLOCK,
+                              np.int32)
+        self.lengths = np.ones((max_batch,), np.int32)  # 1 = inert slot
+        self.seq_blocks: Dict[int, List[int]] = {}
+        self.free: Deque[int] = deque(range(max_batch))
+        self.slot_owner: Dict[int, str] = {}
+        self._axes = M.cache_axes(cfg)
+        self._tables_dev = None
+        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ tables
+    def tables_device(self) -> jax.Array:
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self.tables)
+        return self._tables_dev
+
+    def _touch_tables(self):
+        self._tables_dev = None
+
+    # ------------------------------------------------------------ slots
+    def allocate(self, rid: str) -> Optional[int]:
+        if not self.free:
+            return None
+        slot = self.free.popleft()
+        self.slot_owner[slot] = rid
+        return slot
+
+    def release(self, slot: int):
+        self.slot_owner.pop(slot, None)
+        ids = self.seq_blocks.pop(slot, [])
+        if ids:
+            self.bp.decref(ids)
+        self.tables[slot, :] = NULL_BLOCK
+        self._touch_tables()
+        self.lengths[slot] = 1
+        self.free.append(slot)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self.slot_owner)
+
+    # ------------------------------------------------------------ blocks
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def ensure_capacity(self, slot: int, new_len: int) -> bool:
+        """Allocate blocks so positions ``[0, new_len)`` are addressable.
+        False when the pool cannot supply them (caller reclaims/preempts)."""
+        have = self.seq_blocks.setdefault(slot, [])
+        need = self.blocks_for(new_len)
+        if need <= len(have):
+            return True
+        if need > self.blocks_per_seq:
+            return False
+        ids = self.bp.alloc(need - len(have))
+        if ids is None:
+            return False
+        self.tables[slot, len(have):need] = ids
+        have.extend(ids)
+        self._touch_tables()
+        return True
+
+    def adopt_prefix(self, slot: int, ids: Sequence[int], length: int):
+        """Copy-free prefix hit: splice shared physical blocks into this
+        slot's table (refcount bump — the blocks themselves never move)."""
+        assert length == len(ids) * self.block_size, "whole blocks only"
+        assert not self.seq_blocks.get(slot), "adopt into a fresh slot"
+        self.bp.incref(ids)
+        self.seq_blocks[slot] = list(ids)
+        self.tables[slot, :len(ids)] = ids
+        self._touch_tables()
+        self.lengths[slot] = length
+
+    def block_ids(self, slot: int) -> List[int]:
+        return list(self.seq_blocks.get(slot, []))
+
+    # ------------------------------------------------------------ prefill
+    def _scatter_impl(self, pool, prefill_cache, ids):
+        """Write a single-sequence prefill cache (1, S, ...) into the
+        ``len(ids)`` physical blocks named by ``ids``."""
+        nblk = ids.shape[0]
+        blk = self.block_size
+
+        def one(leaves, ax):
+            dst, src = leaves
+            bi = ax.index("act_batch")
+            ki = ax.index("act_kvseq")
+            src = src.astype(dst.dtype)
+            span = nblk * blk
+            if src.shape[ki] < span:
+                pads = [(0, 0)] * src.ndim
+                pads[ki] = (0, span - src.shape[ki])
+                src = jnp.pad(src, pads)
+            idx = [slice(None)] * src.ndim
+            idx[ki] = slice(0, span)
+            src = src[tuple(idx)]
+            shape = list(src.shape)
+            shape[bi:ki + 1] = [nblk, blk]
+            src = src.reshape(shape)
+            d = jnp.moveaxis(dst, bi, 0)
+            s = jnp.moveaxis(src, bi, 0)
+            return jnp.moveaxis(d.at[ids].set(s), 0, bi)
+
+        return tree_multi(one, [pool, prefill_cache], self._axes)
+
+    def insert_prefill(self, slot: int, prefill_cache, length: int):
+        """Scatter a prefill cache for positions ``[0, length)`` into the
+        slot's (already allocated) blocks.  Positions past ``length``
+        inside the last block hold padding until decode overwrites them;
+        attention masks them via ``lengths``."""
+        nblk = self.blocks_for(length)
+        ids = self.seq_blocks.get(slot, [])
+        assert len(ids) >= nblk, "ensure_capacity() before insert_prefill()"
+        self.pool = self._scatter(self.pool, prefill_cache,
+                                  jnp.asarray(ids[:nblk], jnp.int32))
+        self.lengths[slot] = length

@@ -29,6 +29,7 @@ class RequestMetrics:
     finish: Optional[float] = None
     status: str = STATUS_ACTIVE
     n_cached: int = 0       # prompt tokens served from the prefix cache
+    n_preempted: int = 0    # times this request was preempted + requeued
     token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
@@ -61,8 +62,12 @@ class MetricsCollector:
 
     def prefix_hit(self, rid: str, n_cached: int):
         """Record that ``n_cached`` prompt tokens were reused from the
-        prefix cache (prefill compute the engine did NOT spend)."""
-        self.requests[rid].n_cached = n_cached
+        prefix cache (prefill compute the engine did NOT spend).  Clamped
+        to the originally submitted prompt length: a preemption-resumed
+        request re-prefills its own generated tokens via the cache, and
+        counting those would push prefix_hit_rate past 1.0."""
+        r = self.requests[rid]
+        r.n_cached = max(r.n_cached, min(n_cached, r.n_prompt))
 
     def token(self, rid: str, t: float):
         r = self.requests[rid]
@@ -74,6 +79,12 @@ class MetricsCollector:
         r = self.requests[rid]
         r.finish = t
         r.status = STATUS_FINISHED
+
+    def preempt(self, rid: str, t: float):
+        """The paged scheduler reclaimed this request's KV blocks and
+        returned it to the queue (it resumes by re-prefilling its prompt
+        plus already-generated tokens — usually a prefix-cache hit)."""
+        self.requests[rid].n_preempted += 1
 
     def reject(self, rid: str, t: float):
         """The request was refused admission (e.g. prompt + generation
@@ -106,6 +117,7 @@ class MetricsCollector:
         return {
             "completed": len(done),
             "rejected": len(rejected),
+            "preempted": sum(r.n_preempted for r in vals),
             "qps": len(done) / span if done and span > 0 else float("nan"),
             "ttft_p50_s": self._pct(ttfts, 50),
             "ttft_p99_s": self._pct(ttfts, 99),

@@ -82,26 +82,11 @@ def supports_prefix_cache(cfg) -> bool:
     """True iff every cache leaf is position-sliceable along the sequence.
 
     SSM / hybrid states have no per-position KV; encoder-decoder and
-    vision-prefixed models key their cache on non-token inputs.
-    """
-    if getattr(cfg, "is_encoder_decoder", False):
-        return False
-    if getattr(cfg, "frontend", "text") == "vision":
-        return False
+    vision-prefixed models key their cache on non-token inputs.  This is
+    the same architecture class that can page its KV, so the single
+    predicate lives in the model layer (one gate, no drift)."""
     from repro.models import model as M
-    leaves: List[tuple] = []
-
-    def collect(t):
-        if isinstance(t, dict):
-            for v in t.values():
-                collect(v)
-        elif isinstance(t, list):
-            for v in t:
-                collect(v)
-        else:
-            leaves.append(t)
-    collect(M.cache_axes(cfg))
-    return all("act_kvseq" in ax for ax in leaves)
+    return M.supports_paged_cache(cfg)
 
 
 # ------------------------------------------------------------------ the tree
@@ -268,11 +253,21 @@ class PrefixCache:
                 child.refs = 1
                 node.children[block] = child
                 self.ledger.admit(f"pfx{child.node_id}", self.block_size)
+                self._on_store(child)
                 created.append(child)
             child.last_use = tick
             path_ids.add(child.node_id)
             node = child
         return created
+
+    # ------------------------------------------------------ payload hooks
+    def _on_store(self, node: _Node):
+        """Called once per newly stored node (payload already in
+        ``node.seg``).  The paged subclass ref-bumps the block pool."""
+
+    def _release_payload(self, node: _Node):
+        """Called when a node is evicted, before its payload is dropped.
+        The paged subclass returns the physical block to the pool."""
 
     # ------------------------------------------------------------ eviction
     def _evictable(self, exclude=frozenset()) -> List[_Node]:
@@ -294,6 +289,7 @@ class PrefixCache:
         victim = min(cands, key=lambda n: n.last_use)
         victim.parent.children.pop(victim.block, None)
         self.ledger.release(f"pfx{victim.node_id}")
+        self._release_payload(victim)
         victim.seg = None
         self.evicted_nodes += 1
         return True
@@ -316,3 +312,54 @@ class PrefixCache:
             "hit_tokens": self.hit_tokens,
             "evicted_nodes": self.evicted_nodes,
         }
+
+
+# ------------------------------------------------------------------ paged
+class PagedPrefixCache(PrefixCache):
+    """Radix tree whose node payload is a *physical block id* into a
+    shared :class:`~repro.serving.kvcache.BlockPool` — the zero-copy
+    prefix cache of the paged KV path (README.md).
+
+    Storing a prompt block is a refcount bump on the block the request
+    already prefilled; serving a hit is a refcount bump + table splice
+    into the new request's block table.  No KV tensor is copied in either
+    direction (``gather`` is disabled to make that a hard guarantee).
+    Evicting a node drops the tree's reference; the block returns to the
+    pool only once no running request shares it.
+
+    The ``extract`` callable passed to :meth:`PrefixCache.insert` must
+    return the prompt's physical block id for positions ``[start, end)``
+    (the scheduler reads it off the slot's block table).  Tree size is
+    still budgeted through the base ledger so the cache cannot pin the
+    whole pool; pool pressure additionally evicts on demand via
+    ``evict``/``evictable_blocks``.
+    """
+
+    def __init__(self, pool, *, block_size: int = 16,
+                 capacity_tokens: int = 4096):
+        super().__init__(None, block_size=block_size,
+                         capacity_tokens=capacity_tokens)
+        self.pool = pool
+
+    def _on_store(self, node):
+        self.pool.incref([node.seg])
+
+    def _release_payload(self, node):
+        self.pool.decref([node.seg])
+
+    def gather(self, match: Match, length: Optional[int] = None):
+        raise RuntimeError(
+            "PagedPrefixCache is zero-copy: splice block ids "
+            "(gather_block_ids) instead of gathering KV segments")
+
+    def gather_block_ids(self, match: Match, n_blocks: int) -> List[int]:
+        """Physical block ids for the first ``n_blocks`` matched blocks."""
+        if not 0 < n_blocks <= len(match.nodes):
+            raise ValueError(f"n_blocks {n_blocks} outside "
+                             f"(0, {len(match.nodes)}]")
+        return [n.seg for n in match.nodes[:n_blocks]]
+
+    def evictable_blocks(self) -> int:
+        """How many pool blocks eviction could release right now (upper
+        bound: a block shared with a running request frees nothing)."""
+        return len(self._evictable())

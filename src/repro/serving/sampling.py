@@ -1,4 +1,13 @@
-"""Token sampling: greedy / temperature / top-k / top-p (jit-able)."""
+"""Token sampling: greedy / temperature / top-k / top-p (jit-able).
+
+Two entry points: :func:`sample` filters one (B, V) batch with *shared*
+scalar parameters (Python-level branching, one compile per setting), and
+:func:`sample_batched` takes *per-row* parameter vectors with purely
+traced control flow, so the engine can fuse one sampling call for a whole
+continuous batch — mixed greedy/temperature/top-k/top-p requests — inside
+the jitted decode step.  Rows with ``temperature <= 0`` reduce to argmax
+exactly, so greedy outputs are identical between the two paths.
+"""
 from __future__ import annotations
 
 import jax
@@ -25,3 +34,34 @@ def sample(logits: jax.Array, key: jax.Array, *, temperature: float = 0.0,
         cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, NEG, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_batched(logits: jax.Array, key: jax.Array,
+                   temperature: jax.Array, top_k: jax.Array,
+                   top_p: jax.Array) -> jax.Array:
+    """Per-row sampling over one batch: logits (B, V) fp32; temperature
+    (B,) fp32; top_k (B,) int32 (0 disables); top_p (B,) fp32 (1.0
+    disables).  Returns (B,) int32 token ids.
+
+    The per-row filters mirror :func:`sample` exactly — kth-largest
+    cutoff for top-k, smallest cumulative-probability set for top-p over
+    the already-top-k-filtered logits — but with traced parameters, so a
+    batch mixing settings compiles once.
+    """
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k: kth-largest value per row (k = V disables the filter)
+    desc = jnp.sort(l, axis=-1)[:, ::-1]
+    k_eff = jnp.where(top_k > 0, jnp.minimum(top_k, V), V)
+    kth = jnp.take_along_axis(desc, (k_eff - 1)[:, None], axis=-1)
+    l = jnp.where(l < kth, NEG, l)
+    # top-p on the filtered logits: smallest set with cum prob >= top_p
+    desc = jnp.sort(l, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cut_idx = jnp.sum(cum < top_p[:, None], axis=-1)
+    cutoff = jnp.take_along_axis(desc, cut_idx[:, None], axis=-1)
+    l = jnp.where(l < cutoff, NEG, l)
+    sampled = jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)

@@ -8,8 +8,11 @@ scratch.  This policy object replaces it (see README.md):
 - **Admission** pops up to ``admit_per_tick`` requests per tick.  Each
   admitted request first runs a longest-prefix match against the radix
   prefix cache (:mod:`repro.serving.prefix_cache`); the matched KV
-  segment is inserted into the request's slot and only the uncached
-  suffix needs compute.
+  becomes the request's cache prefix and only the uncached suffix needs
+  compute.  On the *paged* KV path the hit is copy-free — the matched
+  physical blocks are spliced into the request's block table with a
+  refcount bump.  On the dense fallback the matched segment is copied
+  into the request's slot.
 - **Decode runs every tick.**  Running requests emit at least one token
   per tick regardless of admission activity.
 - **Chunked prefill.**  Uncached suffixes are consumed through the
@@ -17,24 +20,34 @@ scratch.  This policy object replaces it (see README.md):
   request per tick, as micro-steps in which *every* running slot
   advances: prefilling slots consume their next prompt token while
   decoding slots keep emitting.  A long prefill therefore never stalls
-  a running decode (the old loop's ITL cliff).  A prompt longer than
-  ``prefill_chunk`` with no cache hit one-shot-prefills its first chunk
-  and streams the rest the same way.
+  a running decode (the old loop's ITL cliff).
+- **Fused batched sampling.**  Each micro-step makes one jitted
+  decode+sample call with per-slot temperature/top-k/top-p vectors and
+  one coalesced ``device_get`` of the sampled tokens — not a per-slot
+  ``int(tok[0])`` sync per running request.
+- **Preemption, not over-commit (paged).**  Decode growth allocates real
+  pool blocks.  On exhaustion the scheduler first evicts unpinned prefix
+  tree leaves, then preempts the *latest-admitted* running request: its
+  blocks are freed and it returns to the queue head with its generated
+  tokens folded into the prompt, so resumption re-prefills (usually a
+  prefix-cache hit) and continues token-exactly.
 
 Exactness: suffix tokens pass through ``decode_step`` at their true
 positions against the already-written prefix KV, which is the same math
 as a full prefill (causal attention, identical RoPE positions); the
-engine-vs-reference tests pin this token-for-token.
+engine-vs-reference tests pin this token-for-token for both KV layouts.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.prefix_cache import (Match, PrefixCache,
+from repro.serving.prefix_cache import (Match, PagedPrefixCache, PrefixCache,
                                         supports_prefix_cache)
 
 
@@ -45,8 +58,11 @@ class SchedulerConfig:
     # one-shot prefill size cap for cache-miss prompts
     prefill_chunk: int = 512
     enable_prefix_cache: bool = True
+    # token-block size of the radix tree; on the paged KV path this is
+    # also the physical pool block size (node <-> block, 1:1)
     prefix_block: int = 16
     # KV token budget of the prefix cache; default = one full slot batch
+    # (dense) / the pool size (paged)
     cache_capacity_tokens: Optional[int] = None
 
 
@@ -64,20 +80,34 @@ class ChunkedPrefillScheduler:
         from repro.models import model as M
         self.eng = engine
         self.config = config or SchedulerConfig()
+        self.paged = getattr(engine, "paged", False)
         self.supported = supports_prefix_cache(engine.cfg)
         self.prefix_cache: Optional[PrefixCache] = None
         if self.config.enable_prefix_cache and self.supported:
-            cap = (self.config.cache_capacity_tokens
-                   if self.config.cache_capacity_tokens is not None
-                   else engine.capacity * engine.slots.B)
-            self.prefix_cache = PrefixCache(
-                M.cache_axes(engine.cfg),
-                block_size=self.config.prefix_block,
-                capacity_tokens=cap)
+            if self.paged:
+                cap = (self.config.cache_capacity_tokens
+                       if self.config.cache_capacity_tokens is not None
+                       else (engine.slots.bp.num_blocks - 1)
+                       * engine.slots.block_size)
+                self.prefix_cache = PagedPrefixCache(
+                    engine.slots.bp,
+                    block_size=engine.slots.block_size,
+                    capacity_tokens=cap)
+            else:
+                cap = (self.config.cache_capacity_tokens
+                       if self.config.cache_capacity_tokens is not None
+                       else engine.capacity * engine.slots.B)
+                self.prefix_cache = PrefixCache(
+                    M.cache_axes(engine.cfg),
+                    block_size=self.config.prefix_block,
+                    capacity_tokens=cap)
         # slot -> index of the next prompt token to stream through decode
         self.pending: Dict[int, int] = {}
         # request_id -> pinned radix nodes (unpinned at finish/release)
         self._locked: Dict[str, List] = {}
+        # slot -> admission sequence number (preemption picks the max)
+        self._admit_order: Dict[int, int] = {}
+        self._admit_seq = itertools.count()
 
     # ------------------------------------------------------------ tick
     def tick(self):
@@ -101,41 +131,76 @@ class ChunkedPrefillScheduler:
         if not eng.queue or not eng.slots.free:
             return False
         req = eng.queue[0]
-        need = len(req.prompt) + req.max_new_tokens
+        # a preempted request resumes with its generated tokens folded
+        # into the prompt; only the *remaining* budget counts
+        need = (len(req.prompt) + req.max_new_tokens - len(req.generated))
         if need > eng.capacity:
             # can never fit: explicit rejection, not a silent "finish"
             eng.queue.popleft()
             req.done = True
             eng.metrics.reject(req.request_id, eng.clock())
             return True      # queue progressed; keep admitting
-        if not eng.ledger.can_admit(req.request_id, need):
+        n = len(req.prompt)
+        chunk0 = n
+        if self.supported and n > self.config.prefill_chunk:
+            chunk0 = self.config.prefill_chunk
+        if self.paged:
+            # worst-case (cache-miss) block need for the first chunk;
+            # eviction of unpinned tree leaves can free at most
+            # evictable_blocks() more
+            avail = eng.slots.bp.num_free
+            if self.prefix_cache is not None:
+                avail += self.prefix_cache.evictable_blocks()
+            if eng.slots.blocks_for(chunk0) > avail:
+                return False
+        elif not eng.ledger.can_admit(req.request_id, need):
             return False
         eng.queue.popleft()
-        eng.ledger.admit(req.request_id, need)
+        if not self.paged:
+            eng.ledger.admit(req.request_id, need)
         slot = eng.slots.allocate(req.request_id)
         eng.metrics.prefill_start(req.request_id, eng.clock())
 
-        n = len(req.prompt)
         cached = 0
         if self.prefix_cache is not None and not req.extras:
             m: Match = self.prefix_cache.match(req.namespace, req.prompt)
-            cached = min(m.length, n - 1)
+            if self.paged:
+                bs = eng.slots.block_size
+                n_use = min(len(m.nodes), (n - 1) // bs)
+                cached = n_use * bs
+            else:
+                cached = min(m.length, n - 1)
             # take the hit only when streaming the uncached suffix costs
             # no more model launches than the miss path (one one-shot
             # prefill chunk + streamed tail) — a short cached prefix on a
-            # long prompt would otherwise *worsen* TTFT
+            # long prompt would otherwise *worsen* TTFT.  Paged hits are
+            # whole-block, losing up to block_size-1 cached tokens to
+            # rounding; grant exactly that slack so accept decisions
+            # match the dense (token-granular) policy
             miss_launches = 1 + max(0, n - self.config.prefill_chunk)
+            if self.paged:
+                miss_launches += eng.slots.block_size - 1
             if cached > 0 and n - cached <= miss_launches:
-                self.prefix_cache.lock(m.nodes)
-                self._locked.setdefault(req.request_id, []).extend(m.nodes)
-                seg = self.prefix_cache.gather(m, cached)
-                seg = self._pad_segment(seg, min(_bucket(cached),
-                                                 eng.capacity))
-                eng.slots.insert(slot, seg, cached)
+                if self.paged:
+                    nodes = m.nodes[:n_use]
+                    self.prefix_cache.lock(nodes)
+                    self._locked.setdefault(req.request_id, []).extend(nodes)
+                    ids = self.prefix_cache.gather_block_ids(m, n_use)
+                    # copy-free: refcount bump + table splice, no KV moved
+                    eng.slots.adopt_prefix(slot, ids, cached)
+                else:
+                    self.prefix_cache.lock(m.nodes)
+                    self._locked.setdefault(req.request_id,
+                                            []).extend(m.nodes)
+                    seg = self.prefix_cache.gather(m, cached)
+                    seg = self._pad_segment(seg, min(_bucket(cached),
+                                                     eng.capacity))
+                    eng.slots.insert(slot, seg, cached)
                 eng.metrics.prefix_hit(req.request_id, cached)
             else:
                 cached = 0
         eng.running[slot] = req
+        self._admit_order[slot] = next(self._admit_seq)
 
         if cached > 0:
             # stream the uncached suffix through decode micro-steps
@@ -144,9 +209,15 @@ class ChunkedPrefillScheduler:
 
         # cache miss: one-shot prefill of the first chunk (the whole
         # prompt unless it exceeds prefill_chunk on a chunkable model)
-        chunk = n
-        if self.supported and n > self.config.prefill_chunk:
-            chunk = self.config.prefill_chunk
+        chunk = chunk0
+        if self.paged and not self._ensure_blocks(slot, chunk):
+            # pool exhausted even after eviction: put the request back
+            # and wait for blocks to free up
+            eng.running.pop(slot, None)
+            self._admit_order.pop(slot, None)
+            eng.slots.release(slot)
+            eng.queue.appendleft(req)
+            return False
         pad = _bucket(chunk)
         toks = np.zeros((1, pad), np.int32)
         toks[0, :chunk] = req.prompt[:chunk]
@@ -158,8 +229,11 @@ class ChunkedPrefillScheduler:
             batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
         logits, cache, _ = eng._prefill(eng.params, batch)
         from repro.models import model as M
-        cache = M.pad_cache(eng.cfg, cache, eng.capacity)
-        eng.slots.insert(slot, cache, chunk + n_front)
+        if self.paged:
+            eng.slots.insert_prefill(slot, cache, chunk + n_front)
+        else:
+            cache = M.pad_cache(eng.cfg, cache, eng.capacity)
+            eng.slots.insert(slot, cache, chunk + n_front)
 
         if chunk < n:
             self.pending[slot] = chunk
@@ -183,6 +257,67 @@ class ChunkedPrefillScheduler:
             return jnp.pad(arr, pads)
         return tree_walk(one, seg, self.eng.slots._axes)
 
+    # ------------------------------------------------------ paged memory
+    def _ensure_blocks(self, slot: int, new_len: int) -> bool:
+        """ensure_capacity with tree-eviction fallback (no preemption)."""
+        eng = self.eng
+        if eng.slots.ensure_capacity(slot, new_len):
+            return True
+        need = (eng.slots.blocks_for(new_len)
+                - len(eng.slots.seq_blocks.get(slot, [])))
+        self._reclaim(need)
+        return eng.slots.ensure_capacity(slot, new_len)
+
+    def _reclaim(self, n_blocks: int) -> bool:
+        """Evict unpinned prefix-tree leaves until the pool has
+        ``n_blocks`` free (shared leaves may free nothing — their blocks
+        survive until the last running holder releases)."""
+        bp = self.eng.slots.bp
+        pc = self.prefix_cache
+        while bp.num_free < n_blocks:
+            if pc is None or not pc._evict_one():
+                return False
+        return True
+
+    def _preempt_latest(self):
+        """Free the latest-admitted running request's blocks and return
+        it to the queue head.  Its generated tokens are folded into the
+        prompt, so re-admission re-prefills (typically a prefix-cache
+        hit) and generation resumes token-exactly."""
+        eng = self.eng
+        slot = max(eng.running, key=lambda s: self._admit_order.get(s, -1))
+        req = eng.running.pop(slot)
+        self.pending.pop(slot, None)
+        self._admit_order.pop(slot, None)
+        if self.prefix_cache is not None:
+            nodes = self._locked.pop(req.request_id, None)
+            if nodes:
+                self.prefix_cache.unlock(nodes)
+        fresh = req.generated[req.n_folded:]
+        if fresh:
+            req.prompt = list(req.prompt) + list(fresh)
+            req.n_folded = len(req.generated)
+        eng.slots.release(slot)
+        eng.ledger.release(req.request_id)
+        eng.queue.appendleft(req)
+        eng.metrics.preempt(req.request_id, eng.clock())
+
+    def _grow_all(self):
+        """Allocate the next-position block for every running slot,
+        preempting latest-admitted requests when the pool (plus tree
+        eviction) cannot supply them."""
+        eng = self.eng
+        while eng.running:
+            stuck = None
+            for slot in sorted(eng.running):
+                if not self._ensure_blocks(slot,
+                                           int(eng.slots.lengths[slot]) + 1):
+                    stuck = slot
+                    break
+            if stuck is None:
+                return
+            self._preempt_latest()
+
     # ------------------------------------------------------------ decode
     def _decode_tick(self):
         if not self.eng.running:
@@ -199,27 +334,52 @@ class ChunkedPrefillScheduler:
                 break
 
     def _micro_step(self):
-        """One batched decode step.  Prefilling slots consume their next
-        prompt token; decoding slots feed their last sampled token (its
-        KV gets written now) and emit a new one."""
+        """One fused decode+sample step.  Prefilling slots consume their
+        next prompt token; decoding slots feed their last sampled token
+        (its KV gets written now) and emit a new one.  Sampling runs
+        batched inside the jitted step; the sampled tokens come back in
+        one coalesced transfer."""
         eng = self.eng
+        if eng.paged:
+            self._grow_all()
         if not eng.running:
             return
         B = eng.slots.B
         toks = np.zeros((B, 1), np.int32)
         advance = np.zeros((B,), bool)
+        temps = np.zeros((B,), np.float32)
+        tks = np.zeros((B,), np.int32)
+        tps = np.ones((B,), np.float32)
         for slot, req in eng.running.items():
             advance[slot] = True
             if slot in self.pending:
                 toks[slot, 0] = req.prompt[self.pending[slot]]
             else:
                 toks[slot, 0] = req.generated[-1]
-        lengths = jnp.where(jnp.asarray(advance),
-                            eng.slots.lengths + 1, eng.slots.lengths)
-        logits, new_cache = eng._decode(
-            eng.params, jnp.asarray(toks), eng.slots.cache, lengths)
-        eng.slots.cache = new_cache
+            temps[slot] = req.temperature
+            tks[slot] = req.top_k
+            tps[slot] = req.top_p
+        greedy = bool(np.all(temps <= 0.0))
+        eng.key, key = jax.random.split(eng.key)
+        if eng.paged:
+            lengths = np.where(advance, eng.slots.lengths + 1,
+                               eng.slots.lengths).astype(np.int32)
+            out, new_pool = eng._decode_sample_paged(
+                eng.params, jnp.asarray(toks), eng.slots.pool,
+                eng.slots.tables_device(), jnp.asarray(lengths), key,
+                jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps),
+                greedy)
+            eng.slots.pool = new_pool
+        else:
+            lengths = jnp.where(jnp.asarray(advance),
+                                eng.slots.lengths + 1, eng.slots.lengths)
+            out, new_cache = eng._decode_sample(
+                eng.params, jnp.asarray(toks), eng.slots.cache, lengths,
+                key, jnp.asarray(temps), jnp.asarray(tks),
+                jnp.asarray(tps), greedy)
+            eng.slots.cache = new_cache
         eng.slots.lengths = lengths
+        sampled = np.asarray(out)          # one device_get for the batch
         for slot, req in list(eng.running.items()):
             if slot in self.pending:
                 self.pending[slot] += 1
@@ -228,11 +388,9 @@ class ChunkedPrefillScheduler:
                     # next-token logits — prefill is complete
                     del self.pending[slot]
                     self._store_prompt(slot, req)
-                    tok = eng._sample(logits[slot:slot + 1], req)
-                    self._emit(slot, req, int(tok[0]))
+                    self._emit(slot, req, int(sampled[slot]))
             else:
-                tok = eng._sample(logits[slot:slot + 1], req)
-                self._emit(slot, req, int(tok[0]))
+                self._emit(slot, req, int(sampled[slot]))
 
     # ------------------------------------------------------------ lifecycle
     def _store_prompt(self, slot: int, req):
@@ -242,9 +400,17 @@ class ChunkedPrefillScheduler:
             return
         if len(req.prompt) < self.prefix_cache.block_size:
             return
-        new = self.prefix_cache.insert(
-            req.namespace, req.prompt,
-            lambda s, e: self.eng.slots.extract(slot, s, e))
+        if self.paged:
+            # zero-copy: donate the slot's own physical block ids (the
+            # tree refcounts them; nothing is extracted or copied)
+            ids = self.eng.slots.block_ids(slot)
+            bs = self.eng.slots.block_size
+            new = self.prefix_cache.insert(
+                req.namespace, req.prompt, lambda s, e: ids[s // bs])
+        else:
+            new = self.prefix_cache.insert(
+                req.namespace, req.prompt,
+                lambda s, e: self.eng.slots.extract(slot, s, e))
         if new:
             self._locked.setdefault(req.request_id, []).extend(new)
 
@@ -260,6 +426,7 @@ class ChunkedPrefillScheduler:
             eng.slots.release(slot)
             eng.running.pop(slot, None)
             self.pending.pop(slot, None)
+            self._admit_order.pop(slot, None)
             if self.prefix_cache is not None:
                 nodes = self._locked.pop(req.request_id, None)
                 if nodes:
