@@ -27,9 +27,9 @@ from repro.finetune.evals import CapabilityGuard, evaluate
 from repro.finetune.lora import lora_init, lora_merge
 from repro.finetune.quantize import dequantize_tree, quantize_tree, quantized_bytes
 from repro.finetune.recipes import resolve
-from repro.finetune.sft import make_lora_sft_step
+from repro.finetune.sft import make_lora_sft_step, publish_adapter
 from repro.models import model as M
-from repro.serving.engine import InferenceEngine
+from repro.serving.engine import InferenceEngine, Request
 from repro.training.optimizer import OptConfig, opt_init
 from repro.training.trainer import (SimulatedNodeFailure, Trainer,
                                     TrainerConfig)
@@ -130,6 +130,7 @@ def main():
             ad, st, m = step(ad, st, pb)
             acc = float(m["preference_accuracy"])
         print(f"  align (DPO): preference accuracy {acc:.2f}")
+        ctx.state["adapters"] = ad
         ctx.state["aligned"] = lora_merge(base, ad, lcfg)
         aid = ctx.register("align", "adapter", "adapters/dpo-v1",
                            parent_stages=["sft"])
@@ -183,11 +184,39 @@ def main():
         out = gw.completion(api_key=key.key, model="tiny-v1",
                             prompt=[3, 5, 7, 11], max_tokens=12)
         print(f"  deployed + served: {out['tokens']}")
+
+        # multi-tenant alternative: the same fine-tune served as a LoRA
+        # adapter over the *base* weights (no merge, no per-tenant
+        # replica) — registered into the engine's adapter pool and
+        # addressed as model@adapter through the gateway.  Must match
+        # the merged-weights route token-for-token.
+        mt = InferenceEngine(cfg, ctx.state["base"], max_batch=2,
+                             capacity=96, name="eng-multi",
+                             adapter_slots=2)
+        publish_adapter(mt, "dpo-v1", ctx.state["adapters"],
+                        ctx.state["lcfg"])
+        gw.vet_model(ModelEntry("tiny-v1-lora", cfg.name, 0.1, 0.3), cfg)
+        gw.bind_endpoints("tiny-v1-lora", [mt])
+        gw.own_adapter("dpo-v1", "pilot-user")   # tenant-private fine-tune
+        out_ad = gw.completion(api_key=key.key,
+                               model="tiny-v1-lora@dpo-v1",
+                               prompt=[3, 5, 7, 11], max_tokens=12)
+        merged_eng = InferenceEngine(cfg, ctx.state["aligned"],
+                                     max_batch=2, capacity=96,
+                                     name="eng-merged")
+        ref = Request(prompt=[3, 5, 7, 11], max_new_tokens=12)
+        merged_eng.submit(ref)
+        merged_eng.run_until_idle()
+        same = out_ad["tokens"] == ref.generated
+        print(f"  multi-LoRA serve (tiny-v1-lora@dpo-v1): "
+              f"{out_ad['tokens']} merged-route-identical={same}")
+        print(f"  usage by adapter: {gw.usage_by_adapter()}")
         aid = ctx.register("deploy", "model", "endpoints/tiny-v1",
                            parent_stages=["release"])
         return StageResult("deploy", aid,
-                           {"served": len(out["tokens"])},
-                           passed=len(out["tokens"]) == 12)
+                           {"served": len(out["tokens"]),
+                            "adapter_route_identical": same},
+                           passed=len(out["tokens"]) == 12 and same)
 
     pipe = LifecyclePipeline(
         [Stage("data", stage_data), Stage("pretrain", stage_pretrain),

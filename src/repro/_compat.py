@@ -1,0 +1,23 @@
+"""Version shims for jax API moves (non-Pallas; Pallas renames live in
+``repro.kernels._compat``).
+
+``jax.tree.flatten_with_path`` / ``jax.tree.map_with_path`` appeared in
+jax 0.4.35+ as aliases of the long-standing ``jax.tree_util`` functions;
+the container pins an older jaxlib than CI, so checkpointing and LoRA
+import the names from here and run on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def tree_flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path`` with a ``jax.tree_util`` fallback.
+
+    Returns ``(leaves, treedef)`` where leaves are ``(key_path, leaf)``
+    pairs, identical on both jax versions.
+    """
+    fn = getattr(jax.tree, "flatten_with_path", None)
+    if fn is None:
+        fn = jax.tree_util.tree_flatten_with_path
+    return fn(tree, is_leaf=is_leaf)

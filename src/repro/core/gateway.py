@@ -7,6 +7,10 @@
   rejects over-budget / over-rate / unauthorized calls.
 - Model onboarding is declarative and passes a vetting step that checks
   the projected footprint and reserves failover capacity for hot models.
+- ``model@adapter`` names route to a replica whose LoRA adapter pool
+  holds the tenant's adapter (multi-LoRA serving: many fine-tunes share
+  one deployment's weights); usage is metered per adapter as well as per
+  project.
 """
 from __future__ import annotations
 
@@ -14,9 +18,10 @@ import dataclasses
 import itertools
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.serving.adapters import adapter_namespace
 from repro.serving.engine import InferenceEngine, Request
 
 
@@ -65,6 +70,10 @@ class Gateway:
         self.models: Dict[str, ModelEntry] = {}
         self.endpoints: Dict[str, List[InferenceEngine]] = {}
         self._windows: Dict[str, deque] = {}
+        # adapter -> owning project.  An owned adapter is a tenant's
+        # private fine-tune: only that project's keys may serve it.
+        # Unowned adapters stay open (shared/demo adapters).
+        self.adapter_owners: Dict[str, str] = {}
         self.usage_log: List[Dict[str, Any]] = []
         self._ids = itertools.count(1)
 
@@ -92,7 +101,22 @@ class Gateway:
     def bind_endpoints(self, model: str, engines: List[InferenceEngine]):
         self.endpoints[model] = list(engines)
 
+    def own_adapter(self, adapter: str, project: str):
+        """Record ``project`` as the owner of ``adapter``: a fine-tune
+        can regurgitate its training data, so an owned adapter is only
+        servable by its owner's keys (base-model ACLs are not enough)."""
+        self.adapter_owners[adapter] = project
+
     # ----------------------------------------------------------- checks
+    @staticmethod
+    def split_model(name: str) -> Tuple[str, str]:
+        """``"qwen@tenant-a"`` -> ``("qwen", "tenant-a")``; plain names
+        are the base model.  ACLs/vetting apply to the base model — an
+        adapter is a tenant artifact *within* a deployment, not a
+        separately onboarded model."""
+        base, _, adapter = name.partition("@")
+        return base, adapter
+
     def _check(self, key: str, model: str) -> ApiKey:
         if key not in self.keys:
             raise Unauthorized("unknown api key")
@@ -113,37 +137,65 @@ class Gateway:
         return k
 
     def _pick(self, model: str, prompt: Optional[List[int]] = None,
-              namespace: str = "") -> InferenceEngine:
+              namespace: str = "", adapter: str = "") -> InferenceEngine:
         """Least-loaded healthy replica, with prefix affinity: when a
         prompt is given, prefer the replica whose radix tree holds the
-        longest matching prefix (ties fall back to load)."""
+        longest matching prefix (ties fall back to load).  With an
+        ``adapter``, only replicas whose pool has it registered are
+        eligible; among those, replicas where it is already
+        device-resident (no load on admit) win ties."""
         engines = [e for e in self.endpoints.get(model, []) if e.healthy]
         if not engines:
             raise GatewayError(f"no healthy endpoint for {model}")
+        if adapter:
+            engines = [e for e in engines if e.adapters is not None
+                       and e.adapters.has(adapter)]
+            if not engines:
+                # same message as the ownership check: a tenant must not
+                # be able to distinguish "exists but private" from
+                # "doesn't exist" (adapter-enumeration oracle)
+                raise Unauthorized(f"adapter {adapter!r} not available")
+            resident = lambda e: int(adapter in e.adapters.resident)  # noqa: E731
+        else:
+            resident = lambda e: 0  # noqa: E731
         if prompt:
             return max(engines,
                        key=lambda e: (e.prefix_match_len(namespace, prompt),
-                                      -e.num_active))
-        return min(engines, key=lambda e: e.num_active)
+                                      resident(e), -e.num_active))
+        return max(engines, key=lambda e: (resident(e), -e.num_active))
 
     # ----------------------------------------------------------- serve
     def completion(self, *, api_key: str, model: str, prompt: List[int],
                    max_tokens: int = 16, temperature: float = 0.0,
                    run: bool = True) -> Dict[str, Any]:
-        k = self._check(api_key, model)
-        # the prefix-cache namespace is the key's project: tenants never
-        # reuse (or even observe timing of) another tenant's cached KV
-        eng = self._pick(model, prompt=list(prompt), namespace=k.project)
+        """``model`` may be ``"name"`` (base) or ``"name@adapter"`` (the
+        tenant's LoRA fine-tune served from the same weights)."""
+        base, adapter = self.split_model(model)
+        k = self._check(api_key, base)
+        owner = self.adapter_owners.get(adapter) if adapter else None
+        if owner is not None and owner != k.project:
+            # deliberately identical to the not-registered error: do not
+            # confirm existence or leak the owning project
+            raise Unauthorized(f"adapter {adapter!r} not available")
+        # the prefix-cache namespace is the key's project (extended by
+        # the adapter id for adapter'd calls): tenants never reuse (or
+        # even observe timing of) another tenant's — or another
+        # adapter's — cached KV
+        ns = adapter_namespace(k.project, adapter)
+        eng = self._pick(base, prompt=list(prompt), namespace=ns,
+                         adapter=adapter)
         req = Request(prompt=list(prompt), max_new_tokens=max_tokens,
-                      temperature=temperature, namespace=k.project)
+                      temperature=temperature, namespace=k.project,
+                      adapter=adapter)
         rid = eng.submit(req)
         if run:
             eng.run_until_idle()
-        me = self.models[model]
+        me = self.models[base]
         cost = (len(prompt) * me.usd_per_1k_prompt
                 + len(req.generated) * me.usd_per_1k_completion) / 1000.0
         k.spent_usd += cost
-        rec = {"request_id": rid, "project": k.project, "model": model,
+        rec = {"request_id": rid, "project": k.project, "model": base,
+               "adapter": adapter,
                "prompt_tokens": len(prompt),
                "completion_tokens": len(req.generated),
                "cost_usd": cost, "engine": eng.name}
@@ -151,10 +203,10 @@ class Gateway:
         return {"id": rid, "tokens": req.generated, "usage": rec}
 
     # ----------------------------------------------------------- reports
-    def usage_by_project(self) -> Dict[str, Dict[str, float]]:
+    def _aggregate(self, key_fn) -> Dict[str, Dict[str, float]]:
         out: Dict[str, Dict[str, float]] = {}
         for rec in self.usage_log:
-            d = out.setdefault(rec["project"],
+            d = out.setdefault(key_fn(rec),
                                {"requests": 0, "prompt_tokens": 0,
                                 "completion_tokens": 0, "cost_usd": 0.0})
             d["requests"] += 1
@@ -162,3 +214,14 @@ class Gateway:
             d["completion_tokens"] += rec["completion_tokens"]
             d["cost_usd"] += rec["cost_usd"]
         return out
+
+    def usage_by_project(self) -> Dict[str, Dict[str, float]]:
+        return self._aggregate(lambda rec: rec["project"])
+
+    def usage_by_adapter(self) -> Dict[str, Dict[str, float]]:
+        """Per-served-variant accounting: key is ``model`` for base calls
+        and ``model@adapter`` for adapter'd calls — the billing view of
+        multi-LoRA serving (one deployment, many tenants' fine-tunes)."""
+        return self._aggregate(
+            lambda rec: rec["model"] + (f"@{rec['adapter']}"
+                                        if rec.get("adapter") else ""))

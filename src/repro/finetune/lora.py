@@ -14,6 +14,8 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro._compat import tree_flatten_with_path
+
 # default targets per mixer family; attention-specific entries are simply
 # absent in attention-free archs (see recipes.applicability)
 DEFAULT_TARGETS = ("wq", "wk", "wv", "wo", "wuk", "wuv", "wuq")
@@ -41,7 +43,7 @@ def lora_init(params, lcfg: LoraConfig, key: jax.Array,
               dtype=jnp.float32):
     """Adapters {path_str: {"a": (..., din, r), "b": (..., r, dout)}}."""
     adapters = {}
-    leaves = jax.tree.flatten_with_path(params)[0]
+    leaves = tree_flatten_with_path(params)[0]
     keys = jax.random.split(key, max(len(leaves), 1))
     for (path, leaf), k in zip(leaves, keys):
         if _leaf_name(path) not in lcfg.targets or leaf.ndim < 2:
@@ -56,7 +58,7 @@ def lora_init(params, lcfg: LoraConfig, key: jax.Array,
 
 def lora_merge(params, adapters, lcfg: LoraConfig, dtype=None):
     """Materialize merged weights; non-target leaves pass through."""
-    flat = jax.tree.flatten_with_path(params)
+    flat = tree_flatten_with_path(params)
     out = []
     for path, leaf in flat[0]:
         ks = jax.tree_util.keystr(path)
@@ -83,4 +85,32 @@ def lora_export(adapters) -> Dict[str, jnp.ndarray]:
     for k, ab in adapters.items():
         out[f"{k}.a"] = ab["a"]
         out[f"{k}.b"] = ab["b"]
+    return out
+
+
+def lora_randomize(adapters, key: jax.Array, scale: float = 0.05):
+    """Give the zero-init B matrices small random values.
+
+    A freshly ``lora_init``'d adapter is an *exact* zero delta (that is
+    the identity-at-init guarantee); demos, benchmarks, and tests need
+    adapters that actually shift outputs without running an SFT loop —
+    this stands in for training."""
+    out = {}
+    for name, ab in adapters.items():
+        key, k2 = jax.random.split(key)
+        out[name] = {"a": ab["a"],
+                     "b": scale * jax.random.normal(k2, ab["b"].shape,
+                                                    ab["b"].dtype)}
+    return out
+
+
+def lora_unflatten(flat: Dict[str, jnp.ndarray]):
+    """Invert :func:`lora_export`: flat ``{"<path>.a": arr}`` back to the
+    nested ``{path: {"a", "b"}}`` adapter tree (so a stored artifact can
+    be trained further or registered with a serving ``AdapterPool``)."""
+    out: Dict[str, Dict[str, jnp.ndarray]] = {}
+    for k, v in flat.items():
+        if not (k.endswith(".a") or k.endswith(".b")):
+            raise ValueError(f"not an exported adapter leaf: {k!r}")
+        out.setdefault(k[:-2], {})[k[-1]] = v
     return out

@@ -1,5 +1,9 @@
 """Supervised fine-tuning: masked-CE over responses, full-parameter or
-LoRA.  The LoRA step differentiates only the adapter tree (base frozen)."""
+LoRA.  The LoRA step differentiates only the adapter tree (base frozen).
+
+A trained adapter tree goes straight to serving via
+:func:`publish_adapter` — no weight merge, no per-tenant model replica
+(the shared-platform economics the paper is about)."""
 from __future__ import annotations
 
 from typing import Callable, Optional
@@ -38,6 +42,16 @@ def make_lora_sft_step(cfg: ModelConfig, opt_cfg: OptConfig,
         return adapters, opt_state, dict(metrics, grad_norm=gnorm, lr=lr)
 
     return step
+
+
+def publish_adapter(pool, name: str, adapters, lcfg: LoraConfig) -> str:
+    """Export a trained LoRA adapter tree directly into a serving
+    adapter pool (``serving.adapters.AdapterPool`` or an engine with
+    ``adapter_slots > 0``) — the fine-tune -> serve handoff without
+    ``lora_merge``.  Returns ``name`` (the id requests use)."""
+    register = getattr(pool, "register_adapter", None) or pool.register
+    register(name, adapters, lcfg)
+    return name
 
 
 class LoraSFTData:

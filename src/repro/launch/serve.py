@@ -36,6 +36,14 @@ def main():
     ap.add_argument("--pool-tokens", type=int, default=None,
                     help="paged KV pool size in tokens (default: "
                          "max_batch * capacity)")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="serve N demo LoRA adapters (tenant0..N-1) from "
+                         "one adapter pool; requests round-robin across "
+                         "base and model@tenantI")
+    ap.add_argument("--adapter-slots", type=int, default=None,
+                    help="device-resident adapter slots (default: "
+                         "min(--adapters, 4); fewer than --adapters "
+                         "exercises LRU eviction)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -56,10 +64,27 @@ def main():
             except Exception as e:  # noqa: BLE001
                 print(f"no usable checkpoint ({e}); serving random init")
 
+    adapter_slots = (min(args.adapters, 4) if args.adapter_slots is None
+                     else args.adapter_slots)
+    if args.adapters and adapter_slots < 1:
+        ap.error("--adapters requires --adapter-slots >= 1")
     eng = InferenceEngine(cfg, params, max_batch=args.max_batch,
                           capacity=args.capacity,
                           paged=False if args.dense else None,
-                          pool_tokens=args.pool_tokens)
+                          pool_tokens=args.pool_tokens,
+                          adapter_slots=adapter_slots)
+    names = [cfg.name]
+    if args.adapters:
+        from repro.finetune.lora import (LoraConfig, lora_init,
+                                         lora_randomize)
+        from repro.finetune.sft import publish_adapter
+        lcfg = LoraConfig(rank=4)
+        for i in range(args.adapters):
+            ad = lora_randomize(
+                lora_init(params, lcfg, jax.random.PRNGKey(100 + i)),
+                jax.random.PRNGKey(200 + i))
+            publish_adapter(eng, f"tenant{i}", ad, lcfg)
+            names.append(f"{cfg.name}@tenant{i}")
     gw = Gateway()
     gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
     gw.bind_endpoints(cfg.name, [eng])
@@ -69,12 +94,16 @@ def main():
     for i in range(args.requests):
         prompt = [int(x) for x in rng.integers(1, cfg.vocab_size - 1,
                                                4 + i % 5)]
-        out = gw.completion(api_key=key.key, model=cfg.name, prompt=prompt,
+        model = names[i % len(names)]
+        out = gw.completion(api_key=key.key, model=model, prompt=prompt,
                             max_tokens=args.max_tokens,
                             temperature=args.temperature)
-        print(f"req{i}: prompt={prompt} -> {out['tokens']}")
+        print(f"req{i}: model={model} prompt={prompt} -> {out['tokens']}")
     s = eng.metrics.summary()
     print("metrics:", {k: round(v, 4) for k, v in s.items()})
+    if args.adapters:
+        print("adapter pool:", eng.adapter_stats())
+        print("usage by adapter:", gw.usage_by_adapter())
     print("usage:", gw.usage_by_project())
 
 

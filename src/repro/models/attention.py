@@ -21,6 +21,23 @@ from repro.parallel import sharding
 NEG_INF = -1e30
 
 
+def lora_shift(x, ab, adapter_ids):
+    """Batched multi-LoRA delta (the Punica/S-LoRA BGMV oracle).
+
+    x: (B,S,din); ab: stacked adapter pair {"a": (K, din, r),
+    "b": (K, r, dout)} with slot 0 all-zero (= base model); adapter_ids:
+    (B,) int32 per-sequence adapter indices.  Each row adds its *own*
+    adapter's low-rank shift ``x @ A[id] @ B[id]`` (any alpha/rank scale
+    is folded into B at registration), so one fused step serves a batch
+    mixing several adapters with base-model rows.  Accumulates in fp32
+    and casts back so base-row results keep the base dtype.
+    """
+    a = jnp.take(ab["a"], adapter_ids, axis=0).astype(jnp.float32)
+    b = jnp.take(ab["b"], adapter_ids, axis=0).astype(jnp.float32)
+    t = jnp.einsum("bsd,bdr->bsr", x.astype(jnp.float32), a)
+    return jnp.einsum("bsr,bro->bso", t, b).astype(x.dtype)
+
+
 def attn_specs(cfg: ModelConfig):
     d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     s = {
@@ -36,13 +53,24 @@ def attn_specs(cfg: ModelConfig):
     return s
 
 
-def project_qkv(cfg: ModelConfig, p, x, positions, rope: bool = True):
-    """x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+def project_qkv(cfg: ModelConfig, p, x, positions, rope: bool = True,
+                lora=None, adapter_ids=None):
+    """x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd).  ``lora`` holds
+    per-target stacked adapter pairs (see :func:`lora_shift`); deltas are
+    added to the flat projections, before RoPE — exactly where a merged
+    ``W + scale*A@B`` weight would land them."""
     B, S, _ = x.shape
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
     k = jnp.einsum("bsd,dq->bsq", x, p["wk"])
     v = jnp.einsum("bsd,dq->bsq", x, p["wv"])
+    if lora:
+        if "wq" in lora:
+            q = q + lora_shift(x, lora["wq"], adapter_ids)
+        if "wk" in lora:
+            k = k + lora_shift(x, lora["wk"], adapter_ids)
+        if "wv" in lora:
+            v = v + lora_shift(x, lora["wv"], adapter_ids)
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, h, hd)
@@ -207,7 +235,7 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
 def attention_block(cfg: ModelConfig, p, x, positions, *,
                     mode: str, cache=None, lengths=None,
                     kv_valid_len=None, causal: bool = True,
-                    block_tables=None):
+                    block_tables=None, lora=None, adapter_ids=None):
     """Full attention sublayer.  Returns (out (B,S,d), new_cache or None).
 
     mode: "train" | "prefill" | "decode".
@@ -215,12 +243,15 @@ def attention_block(cfg: ModelConfig, p, x, positions, *,
     valid entries *including* the token being decoded.  With
     ``block_tables`` (B, max_blocks), cache leaves are instead pool-shaped
     (num_blocks, block_size, KV, hd) and the new token's KV is scattered
-    into its sequence's current block.
+    into its sequence's current block.  ``lora`` + ``adapter_ids`` apply
+    per-row multi-LoRA shifts to the targeted projections (see
+    :func:`lora_shift`); adapter id 0 is the base model.
     """
     B = x.shape[0]
     dt = x.dtype
     if mode in ("train", "prefill"):
-        q, k, v = project_qkv(cfg, p, x, positions)
+        q, k, v = project_qkv(cfg, p, x, positions,
+                              lora=lora, adapter_ids=adapter_ids)
         if cfg.attn_impl == "naive":
             o = naive_attention(q, k, v, causal=causal,
                                 kv_valid_len=kv_valid_len)
@@ -232,7 +263,8 @@ def attention_block(cfg: ModelConfig, p, x, positions, *,
         if mode == "prefill":
             new_cache = {"k": k.astype(dt), "v": v.astype(dt)}
     elif block_tables is not None:
-        q, k, v = project_qkv(cfg, p, x, positions)
+        q, k, v = project_qkv(cfg, p, x, positions,
+                              lora=lora, adapter_ids=adapter_ids)
         blk = cache["k"].shape[1]
         idx = lengths - 1
         pb = jnp.take_along_axis(block_tables, (idx // blk)[:, None],
@@ -243,7 +275,8 @@ def attention_block(cfg: ModelConfig, p, x, positions, *,
         o = paged_decode_attention(q, k_cache, v_cache, block_tables, lengths)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
-        q, k, v = project_qkv(cfg, p, x, positions)
+        q, k, v = project_qkv(cfg, p, x, positions,
+                              lora=lora, adapter_ids=adapter_ids)
         idx = (lengths - 1)  # slot of the current token
         k_cache = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
             c, kk, (i, 0, 0)))(cache["k"], k.astype(cache["k"].dtype), idx)
@@ -257,6 +290,8 @@ def attention_block(cfg: ModelConfig, p, x, positions, *,
         new_cache = {"k": k_cache, "v": v_cache}
     o2 = o.reshape(B, o.shape[1], -1).astype(dt)
     out = jnp.einsum("bsq,qd->bsd", o2, p["wo"])
+    if lora and "wo" in lora:
+        out = out + lora_shift(o2, lora["wo"], adapter_ids)
     out = sharding.constrain(out, ("act_batch", "act_qseq", None))
     return out, new_cache
 

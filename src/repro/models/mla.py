@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.attention import blockwise_attention, naive_attention, NEG_INF
+from repro.models.attention import (NEG_INF, blockwise_attention, lora_shift,
+                                    naive_attention)
 from repro.models.layers import apply_rope
 from repro.models.param import ParamSpec
 from repro.parallel import sharding
@@ -45,7 +46,7 @@ def _rmsnorm(x, scale, eps):
     return (y * scale.astype(jnp.float32)).astype(x.dtype)
 
 
-def _project_q(cfg, p, x, positions):
+def _project_q(cfg, p, x, positions, lora=None, adapter_ids=None):
     B, S, _ = x.shape
     h = cfg.num_heads
     nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
@@ -53,8 +54,12 @@ def _project_q(cfg, p, x, positions):
         cq = _rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]),
                       p["q_norm"], cfg.norm_eps)
         q = jnp.einsum("bsr,rq->bsq", cq, p["wuq"])
+        if lora and "wuq" in lora:
+            q = q + lora_shift(cq, lora["wuq"], adapter_ids)
     else:
         q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+        if lora and "wq" in lora:
+            q = q + lora_shift(x, lora["wq"], adapter_ids)
     q = q.reshape(B, S, h, nope + rope)
     q_nope, q_pe = q[..., :nope], q[..., nope:]
     q_pe = apply_rope(q_pe, positions, cfg, rope)
@@ -74,11 +79,20 @@ def _latent_kv(cfg, p, x, positions):
 
 
 def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
-              cache=None, lengths=None, block_tables=None):
+              cache=None, lengths=None, block_tables=None, lora=None,
+              adapter_ids=None):
     """Returns (out, new_cache).  cache: {"ckv": (B,Smax,kvl),
     "kpe": (B,Smax,rope)} — or, with ``block_tables`` (B, max_blocks),
     pool-shaped {"ckv": (num_blocks, block_size, kvl), ...} with the new
-    latent scattered into the sequence's current block."""
+    latent scattered into the sequence's current block.
+
+    ``lora`` + ``adapter_ids`` add per-row multi-LoRA shifts.  Train/
+    prefill applies them to the decompressed projections directly; decode
+    folds them into the *absorbed-weight* formulation: a ``wuk`` adapter
+    shifts the latent query (``q_lat += (q_nope @ B_k^T) @ A_k^T``) and a
+    ``wuv`` adapter shifts the output (``o += (ctx @ A_v) @ B_v``), which
+    is algebraically identical to decoding with merged weights.
+    """
     B, S, _ = x.shape
     h = cfg.num_heads
     nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -86,14 +100,19 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
     dt = x.dtype
     scale_dim = nope + rope
 
-    q_nope, q_pe = _project_q(cfg, p, x, positions)
+    q_nope, q_pe = _project_q(cfg, p, x, positions, lora, adapter_ids)
     c_kv, k_pe = _latent_kv(cfg, p, x, positions)
 
     if mode in ("train", "prefill"):
         # Decompress and run standard MHA (G=1) with concatenated heads.
-        k_nope = jnp.einsum("bsr,rq->bsq", c_kv, p["wuk"]).reshape(
-            B, S, h, nope)
-        v = jnp.einsum("bsr,rq->bsq", c_kv, p["wuv"]).reshape(B, S, h, vd)
+        k_nope = jnp.einsum("bsr,rq->bsq", c_kv, p["wuk"])
+        v = jnp.einsum("bsr,rq->bsq", c_kv, p["wuv"])
+        if lora and "wuk" in lora:
+            k_nope = k_nope + lora_shift(c_kv, lora["wuk"], adapter_ids)
+        if lora and "wuv" in lora:
+            v = v + lora_shift(c_kv, lora["wuv"], adapter_ids)
+        k_nope = k_nope.reshape(B, S, h, nope)
+        v = v.reshape(B, S, h, vd)
         q = jnp.concatenate([q_nope, q_pe], -1)
         k = jnp.concatenate(
             [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, h, rope))],
@@ -105,6 +124,8 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
         o = attn(q, k, vpad, causal=True)[..., :vd]
         o = o.reshape(B, S, h * vd).astype(dt)
         out = jnp.einsum("bsq,qd->bsd", o, p["wo"])
+        if lora and "wo" in lora:
+            out = out + lora_shift(o, lora["wo"], adapter_ids)
         new_cache = None
         if mode == "prefill":
             new_cache = {"ckv": c_kv.astype(dt), "kpe": k_pe.astype(dt)}
@@ -143,6 +164,16 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
     # f32 accumulation (no full-cache f32 copies)
     q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], wuk,
                        preferred_element_type=jnp.float32)
+    if lora and "wuk" in lora:
+        # absorbed wuk adapter: contract the per-row B then A factor so
+        # the (kvl, h*nope) weight delta is never materialized
+        bk = jnp.take(lora["wuk"]["b"], adapter_ids, axis=0).reshape(
+            B, -1, h, nope).astype(jnp.float32)
+        ak = jnp.take(lora["wuk"]["a"], adapter_ids, axis=0).astype(
+            jnp.float32)
+        t = jnp.einsum("bhn,brhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       bk)
+        q_lat = q_lat + jnp.einsum("bhr,bkr->bhk", t, ak)
     s_lat = jnp.einsum("bhr,bsr->bhs", q_lat.astype(ckv_c.dtype), ckv_c,
                        preferred_element_type=jnp.float32)
     s_pe = jnp.einsum("bhp,bsp->bhs", q_pe[:, 0].astype(kpe_c.dtype),
@@ -158,6 +189,15 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
     wuv = p["wuv"].reshape(kvl, h, vd)
     o = jnp.einsum("bhr,rhv->bhv", ctx.astype(wuv.dtype), wuv,
                    preferred_element_type=jnp.float32)
+    if lora and "wuv" in lora:
+        av = jnp.take(lora["wuv"]["a"], adapter_ids, axis=0).astype(
+            jnp.float32)
+        bv = jnp.take(lora["wuv"]["b"], adapter_ids, axis=0).reshape(
+            B, -1, h, vd).astype(jnp.float32)
+        t = jnp.einsum("bhk,bkr->bhr", ctx.astype(jnp.float32), av)
+        o = o + jnp.einsum("bhr,brhv->bhv", t, bv)
     o = o.reshape(B, 1, h * vd).astype(dt)
     out = jnp.einsum("bsq,qd->bsd", o, p["wo"])
+    if lora and "wo" in lora:
+        out = out + lora_shift(o, lora["wo"], adapter_ids)
     return out, new_cache

@@ -282,13 +282,18 @@ def _maybe_remat(cfg, fn, mode):
 
 def _scan_stack(cfg: ModelConfig, stack_p, x, positions, *, mixer, ffn,
                 mode, cache=None, lengths=None, causal=True, enc_out=None,
-                cross_cache=None, block_tables=None):
-    """Scan a homogeneous stacked layer group."""
+                cross_cache=None, block_tables=None, lora=None,
+                adapter_ids=None):
+    """Scan a homogeneous stacked layer group.  ``lora`` leaves carry the
+    same leading layer axis as the stacked params, so the scan slices a
+    per-layer adapter stack alongside each layer's weights."""
     xs: Dict[str, Any] = {"p": stack_p}
     if cache is not None:
         xs["cache"] = cache
     if cross_cache is not None:
         xs["cross"] = cross_cache
+    if lora is not None:
+        xs["lora"] = lora
     is_dec = "cross" in stack_p
 
     def body(carry, layer_in):
@@ -298,7 +303,8 @@ def _scan_stack(cfg: ModelConfig, stack_p, x, positions, *, mixer, ffn,
         h, nc, ncross, a = apply_layer(
             cfg, layer_in["p"], h, positions, mixer=mixer, ffn=ffn,
             mode=mode, cache=cl, lengths=lengths, causal=causal,
-            enc_out=enc_out, cross_cache=crl, block_tables=block_tables)
+            enc_out=enc_out, cross_cache=crl, block_tables=block_tables,
+            lora=layer_in.get("lora"), adapter_ids=adapter_ids)
         ys = {}
         if nc is not None:
             ys["cache"] = nc
@@ -364,23 +370,35 @@ def tokens_dtype(params):
 
 # --------------------------------------------------------------- forward
 def _backbone(cfg: ModelConfig, params, x, positions, *, mode,
-              cache=None, lengths=None, enc_out=None, block_tables=None):
-    """Run all decoder layers.  Returns (hidden, aux, new_cache)."""
+              cache=None, lengths=None, enc_out=None, block_tables=None,
+              lora=None, adapter_ids=None):
+    """Run all decoder layers.  Returns (hidden, aux, new_cache).
+
+    ``lora`` is a stacked multi-LoRA adapter tree mirroring the params
+    layout (``{"stack": ..., "first": [...]}``, see
+    ``serving.adapters.AdapterPool``) and ``adapter_ids`` (B,) selects
+    each row's adapter (0 = base).  Only uniform attention stacks support
+    it — the same gating as the paged KV path."""
     plan = stack_plan(cfg)
     new_cache: Dict[str, Any] = {}
     aux = jnp.zeros((), jnp.float32)
     if block_tables is not None and plan["kind"] != "uniform":
         raise ValueError("paged decode requires a uniform attention stack")
+    if lora is not None and plan["kind"] != "uniform":
+        raise ValueError("multi-LoRA requires a uniform attention stack")
 
     if plan["kind"] == "uniform":
         if plan["first"]:
             firsts = []
             for i, (m, f) in enumerate(plan["first"]):
                 cl = cache["first"][i] if cache is not None else None
+                lf = (lora["first"][i]
+                      if lora is not None and "first" in lora else None)
                 x, nc, _, a = apply_layer(
                     cfg, params["first"][i], x, positions, mixer=m, ffn=f,
                     mode=mode, cache=cl, lengths=lengths,
-                    block_tables=block_tables)
+                    block_tables=block_tables, lora=lf,
+                    adapter_ids=adapter_ids)
                 aux += a
                 firsts.append(nc)
             if firsts and firsts[0] is not None:
@@ -389,7 +407,9 @@ def _backbone(cfg: ModelConfig, params, x, positions, *, mode,
             cfg, params["stack"], x, positions, mixer=plan["mixer"],
             ffn=plan["ffn"], mode=mode,
             cache=cache["stack"] if cache is not None else None,
-            lengths=lengths, block_tables=block_tables)
+            lengths=lengths, block_tables=block_tables,
+            lora=lora.get("stack") if lora is not None else None,
+            adapter_ids=adapter_ids)
         aux += a
         if ys and "cache" in ys:
             new_cache["stack"] = ys["cache"]
@@ -524,11 +544,14 @@ def sequence_logprob(cfg: ModelConfig, params, batch) -> jax.Array:
 
 
 # --------------------------------------------------------------- serving
-def prefill(cfg: ModelConfig, params, batch):
+def prefill(cfg: ModelConfig, params, batch, *, lora=None,
+            adapter_ids=None):
     """Returns (next-token logits (B,V), cache, lengths).
 
     batch: tokens (B,S) (+ vision_embeds / frames), prompt_lengths (B,).
     Cache entries are sized to S (the engine re-pads to capacity).
+    ``lora`` + ``adapter_ids`` (B,) apply per-row multi-LoRA adapters
+    (id 0 = base) — see :func:`_backbone`.
     """
     lengths = batch["prompt_lengths"]
     if cfg.is_encoder_decoder:
@@ -540,7 +563,8 @@ def prefill(cfg: ModelConfig, params, batch):
                                   enc_out=enc_out)
     else:
         x, pos = _embed_lm(cfg, params, batch)
-        x, aux, cache = _backbone(cfg, params, x, pos, mode="prefill")
+        x, aux, cache = _backbone(cfg, params, x, pos, mode="prefill",
+                                  lora=lora, adapter_ids=adapter_ids)
     # next-token logits at the last valid position of each sequence
     idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
     x_last = jnp.take_along_axis(x, idx[:, None, None].astype(jnp.int32)
@@ -549,32 +573,38 @@ def prefill(cfg: ModelConfig, params, batch):
     return logits, cache, aux
 
 
-def decode_step(cfg: ModelConfig, params, tokens, cache, lengths):
+def decode_step(cfg: ModelConfig, params, tokens, cache, lengths, *,
+                lora=None, adapter_ids=None):
     """One decode step.  tokens (B,1) int32; lengths (B,) counts valid
-    entries including this token.  Returns (logits (B,V), new_cache)."""
+    entries including this token.  Returns (logits (B,V), new_cache).
+    ``lora`` + ``adapter_ids`` (B,) select a per-row LoRA adapter (0 =
+    base), so one fused step serves a batch mixing tenants."""
     pos = (lengths - 1)[:, None]
     x = embed_tokens(cfg, params["embed"], tokens, pos)
     x, _, new_cache = _backbone(cfg, params, x, pos, mode="decode",
-                                cache=cache, lengths=lengths)
+                                cache=cache, lengths=lengths,
+                                lora=lora, adapter_ids=adapter_ids)
     logits = unembed(cfg, params["embed"], x[:, 0]).astype(jnp.float32)
     return logits, new_cache
 
 
 def decode_step_paged(cfg: ModelConfig, params, tokens, pool, block_tables,
-                      lengths):
+                      lengths, *, lora=None, adapter_ids=None):
     """One decode step over a paged KV pool (see :func:`make_paged_pool`).
 
     tokens (B,1) int32; block_tables (B, max_blocks) int32 physical block
     ids; lengths (B,) valid tokens including this one.  The new token's KV
     is scattered into block ``block_tables[b, (len-1) // block_size]`` at
     offset ``(len-1) % block_size``; attention reads through the table.
-    Returns (logits (B,V), new_pool).
+    ``lora`` + ``adapter_ids`` (B,) select a per-row LoRA adapter (0 =
+    base).  Returns (logits (B,V), new_pool).
     """
     pos = (lengths - 1)[:, None]
     x = embed_tokens(cfg, params["embed"], tokens, pos)
     x, _, new_pool = _backbone(cfg, params, x, pos, mode="decode",
                                cache=pool, lengths=lengths,
-                               block_tables=block_tables)
+                               block_tables=block_tables,
+                               lora=lora, adapter_ids=adapter_ids)
     logits = unembed(cfg, params["embed"], x[:, 0]).astype(jnp.float32)
     return logits, new_pool
 

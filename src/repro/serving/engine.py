@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.serving.adapters import AdapterPool, supports_multi_lora
 from repro.serving.kvcache import BlockLedger, CacheSlots, PagedCacheSlots
 from repro.serving.metrics import MetricsCollector
 from repro.serving.sampling import sample, sample_batched
@@ -48,6 +49,7 @@ class Request:
     eos_id: int = -1
     request_id: str = ""
     namespace: str = ""      # prefix-cache isolation domain (tenant/project)
+    adapter: str = ""        # LoRA adapter name ("" = base model)
     extras: Optional[Dict[str, Any]] = None   # vision_embeds / frames
     # filled by the engine:
     generated: List[int] = dataclasses.field(default_factory=list)
@@ -64,7 +66,9 @@ class InferenceEngine:
                  seed: int = 0, name: str = "engine0",
                  sched: Optional[SchedulerConfig] = None,
                  paged: Optional[bool] = None,
-                 pool_tokens: Optional[int] = None):
+                 pool_tokens: Optional[int] = None,
+                 adapter_slots: int = 0,
+                 adapter_rank_bucket: int = 8):
         """``paged=None`` auto-selects the paged KV path when the
         architecture supports it.  ``pool_tokens`` sizes the shared block
         pool (default ``max_batch * capacity`` — the dense footprint);
@@ -72,11 +76,22 @@ class InferenceEngine:
         ``max_batch * capacity`` still serves ``max_batch`` concurrent
         sequences whenever their live lengths fit.  The paged pool's
         token-block size is the scheduler's ``prefix_block`` so radix
-        nodes map 1:1 onto physical blocks (copy-free sharing)."""
+        nodes map 1:1 onto physical blocks (copy-free sharing).
+
+        ``adapter_slots > 0`` enables multi-tenant LoRA serving: an
+        :class:`~repro.serving.adapters.AdapterPool` with that many
+        device-resident adapter slots (ranks padded to
+        ``adapter_rank_bucket``).  Requests name an adapter via
+        ``Request.adapter``; base and adapter'd requests share every
+        fused decode step."""
         self.cfg, self.params = cfg, params
         self.name = name
         self.clock = clock
         self.paged = M.supports_paged_cache(cfg) if paged is None else paged
+        self.adapters: Optional[AdapterPool] = None
+        if adapter_slots > 0:
+            self.adapters = AdapterPool(cfg, params, slots=adapter_slots,
+                                        rank_bucket=adapter_rank_bucket)
         sched = sched or SchedulerConfig()
         if self.paged:
             self.slots = PagedCacheSlots(
@@ -95,32 +110,56 @@ class InferenceEngine:
         self.steps = 0
 
         self._prefill = jax.jit(
-            lambda p, b: M.prefill(cfg, p, b))
+            lambda p, b, lo, ai: M.prefill(cfg, p, b, lora=lo,
+                                           adapter_ids=ai))
 
         # decode + batched sampling fused in one jitted step: per-slot
         # temperature/top-k/top-p vectors in, sampled tokens out — the
         # scheduler does a single coalesced device_get per micro-step.
         # ``greedy`` is static: the all-greedy batch (the common case)
-        # skips the two full-vocab sorts of the filtered sampler
-        def _fused(p, t, c, l, key, temps, tks, tps, greedy):
-            logits, nc = M.decode_step(cfg, p, t, c, l)
+        # skips the two full-vocab sorts of the filtered sampler.
+        # ``lo``/``ai`` are the stacked adapter tree + per-slot adapter
+        # ids (both None on engines without an adapter pool) — multi-LoRA
+        # rides the same micro-step, no extra launches.
+        def _fused(p, t, c, l, key, temps, tks, tps, lo, ai, greedy):
+            logits, nc = M.decode_step(cfg, p, t, c, l, lora=lo,
+                                       adapter_ids=ai)
             if greedy:
                 return jnp.argmax(logits, -1).astype(jnp.int32), nc
             return sample_batched(logits, key, temps, tks, tps), nc
 
-        def _fused_paged(p, t, pool, bt, l, key, temps, tks, tps, greedy):
-            logits, np_ = M.decode_step_paged(cfg, p, t, pool, bt, l)
+        def _fused_paged(p, t, pool, bt, l, key, temps, tks, tps, lo, ai,
+                         greedy):
+            logits, np_ = M.decode_step_paged(cfg, p, t, pool, bt, l,
+                                              lora=lo, adapter_ids=ai)
             if greedy:
                 return jnp.argmax(logits, -1).astype(jnp.int32), np_
             return sample_batched(logits, key, temps, tks, tps), np_
 
-        self._decode_sample = jax.jit(_fused, static_argnums=(8,))
+        self._decode_sample = jax.jit(_fused, static_argnums=(10,))
         self._decode_sample_paged = jax.jit(_fused_paged,
                                             donate_argnums=(2,),
-                                            static_argnums=(9,))
+                                            static_argnums=(11,))
         self.scheduler = ChunkedPrefillScheduler(self, sched)
 
     # ------------------------------------------------------------ API
+    def register_adapter(self, name: str, adapters, lcfg) -> None:
+        """Publish a trained LoRA adapter to this engine's pool so
+        requests can name it via ``Request.adapter`` (or the gateway's
+        ``model@adapter``)."""
+        if self.adapters is None:
+            raise RuntimeError(
+                "engine has no adapter pool (construct with "
+                "adapter_slots > 0)")
+        self.adapters.register(name, adapters, lcfg)
+
+    def adapter_stats(self) -> Dict[str, int]:
+        """Adapter-pool counters (zeros when multi-LoRA is disabled)."""
+        if self.adapters is None:
+            return {"registered": 0, "resident": 0, "pinned": 0,
+                    "slots": 0, "loads": 0, "evictions": 0}
+        return self.adapters.stats()
+
     def submit(self, req: Request) -> str:
         if not req.request_id:
             req.request_id = f"{self.name}-r{next(self._ids)}"

@@ -55,7 +55,23 @@ def tree_multi(fn, trees, axes):
 
 
 class BlockLedger:
-    """Block accounting (block_size tokens per block) for admission."""
+    """Admission-control accounting in ``block_size``-token blocks.
+
+    A pure bookkeeping object — it reserves *budget*, not storage: the
+    dense engine charges each request's worst case (prompt + generation
+    budget) here before touching a slot, and the prefix cache uses a
+    dedicated ledger as its node budget.  Invariants:
+
+    - Reservations are **rid-keyed and idempotent**: ``can_admit``/
+      ``admit`` count blocks ``rid`` already holds toward its allowance,
+      so re-admitting a retried request never double-charges.
+    - **Never over-commits**: ``admit``/``grow`` raise once the pool is
+      exhausted rather than silently handing out blocks that do not
+      exist — the caller must preempt or reject (the PR-2 fix; the old
+      ``grow`` silently over-committed).
+    - ``release`` is unconditional and forgets the rid entirely;
+      ``peak_blocks`` tracks the high-water mark for ``kv_stats``.
+    """
 
     def __init__(self, capacity_tokens: int, block_size: int = 128):
         self.block_size = block_size
@@ -193,11 +209,26 @@ class BlockPool:
     """Ref-counted allocator over the physical blocks of a paged pool.
 
     One block id spans every layer leaf of the pool (see
-    ``M.make_paged_pool``).  Ids are handed out with refcount 1;
-    ``incref`` lets the prefix cache and prefix-sharing requests hold the
-    same physical block, and ``decref`` returns it to the free list only
-    when the last holder lets go.  Block 0 is the reserved null block and
-    is never allocated.
+    ``M.make_paged_pool``), so allocation is accounted in token blocks,
+    not per-layer bytes.  Invariants:
+
+    - **Null block**: block 0 is reserved and never allocated.  Inert
+      decode slots scatter their (masked) writes there and block-table
+      tails point there; the attention length mask guarantees it is
+      never *read*, so no live KV can be corrupted by an idle slot.
+    - **Refcount lifecycle**: ``alloc`` hands out ids at refcount 1
+      (all-or-nothing for multi-block requests); ``incref`` adds holders
+      — the radix prefix tree (one ref per stored node) and every
+      running request that adopted the block via a prefix hit;
+      ``decref`` frees a block only at refcount 0.  Consequence: tree
+      eviction never invalidates a running request, and slot release
+      never invalidates the tree.
+    - **Shared blocks are read-only by construction**: the tree stores
+      only whole prompt blocks, and a sequence writes strictly after its
+      adopted prefix, in blocks it allocated privately — so a refcount
+      > 1 block is never written.
+    - ``incref``/``decref`` on an unallocated id raise — refcount bugs
+      surface immediately instead of corrupting the free list.
     """
 
     def __init__(self, num_blocks: int):
@@ -268,6 +299,14 @@ class PagedCacheSlots:
     Shared (adopted) blocks are read-only by construction: the prefix
     cache stores only *whole* prompt blocks, and a sequence writes
     strictly after its adopted prefix, in blocks it allocated privately.
+
+    Slot invariants: an inert slot has ``lengths[slot] == 1`` and a
+    table full of ``NULL_BLOCK`` entries, so its decode-step writes land
+    in the null block and its reads are masked out; ``release`` decrefs
+    exactly the blocks in ``seq_blocks[slot]`` (the slot's own + adopted
+    ids) and resets the table row.  ``tables_device`` caches the device
+    copy of the table matrix and every table mutation invalidates it
+    (``_touch_tables``), so a micro-step uploads tables at most once.
     """
 
     def __init__(self, cfg: ModelConfig, max_batch: int, capacity: int,

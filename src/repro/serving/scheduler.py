@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.adapters import adapter_namespace
 from repro.serving.prefix_cache import (Match, PagedPrefixCache, PrefixCache,
                                         supports_prefix_cache)
 
@@ -108,6 +109,8 @@ class ChunkedPrefillScheduler:
         # slot -> admission sequence number (preemption picks the max)
         self._admit_order: Dict[int, int] = {}
         self._admit_seq = itertools.count()
+        # slot -> device adapter id (rows without an entry decode as base)
+        self._slot_adapter: Dict[int, int] = {}
 
     # ------------------------------------------------------------ tick
     def tick(self):
@@ -125,6 +128,13 @@ class ChunkedPrefillScheduler:
             return 0
         return self.prefix_cache.match_len(namespace, tokens)
 
+    @staticmethod
+    def _ns(req) -> str:
+        """Prefix-cache namespace: KV computed under a LoRA adapter is
+        only reusable under that same adapter, so adapter'd requests get
+        a dedicated radix tree within their tenant namespace."""
+        return adapter_namespace(req.namespace, req.adapter)
+
     # ------------------------------------------------------------ admission
     def _admit_one(self) -> bool:
         eng = self.eng
@@ -134,8 +144,10 @@ class ChunkedPrefillScheduler:
         # a preempted request resumes with its generated tokens folded
         # into the prompt; only the *remaining* budget counts
         need = (len(req.prompt) + req.max_new_tokens - len(req.generated))
-        if need > eng.capacity:
-            # can never fit: explicit rejection, not a silent "finish"
+        if need > eng.capacity or (req.adapter and (
+                eng.adapters is None or not eng.adapters.has(req.adapter))):
+            # can never fit / names an unknown adapter: explicit
+            # rejection, not a silent "finish"
             eng.queue.popleft()
             req.done = True
             eng.metrics.reject(req.request_id, eng.clock())
@@ -155,15 +167,25 @@ class ChunkedPrefillScheduler:
                 return False
         elif not eng.ledger.can_admit(req.request_id, need):
             return False
+        aid = 0
+        if req.adapter:
+            # load-or-pin the adapter (refcount++).  None means every
+            # device adapter slot is pinned by an in-flight request —
+            # leave the request queued and retry next tick.
+            aid = eng.adapters.acquire(req.adapter)
+            if aid is None:
+                return False
         eng.queue.popleft()
         if not self.paged:
             eng.ledger.admit(req.request_id, need)
         slot = eng.slots.allocate(req.request_id)
+        if aid:
+            self._slot_adapter[slot] = aid
         eng.metrics.prefill_start(req.request_id, eng.clock())
 
         cached = 0
         if self.prefix_cache is not None and not req.extras:
-            m: Match = self.prefix_cache.match(req.namespace, req.prompt)
+            m: Match = self.prefix_cache.match(self._ns(req), req.prompt)
             if self.paged:
                 bs = eng.slots.block_size
                 n_use = min(len(m.nodes), (n - 1) // bs)
@@ -215,6 +237,7 @@ class ChunkedPrefillScheduler:
             # and wait for blocks to free up
             eng.running.pop(slot, None)
             self._admit_order.pop(slot, None)
+            self._release_adapter(slot, req)
             eng.slots.release(slot)
             eng.queue.appendleft(req)
             return False
@@ -227,7 +250,8 @@ class ChunkedPrefillScheduler:
                  "prompt_lengths": jnp.asarray([chunk + n_front], jnp.int32)}
         if req.extras:
             batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
-        logits, cache, _ = eng._prefill(eng.params, batch)
+        lo, ai = self._lora_args([aid])
+        logits, cache, _ = eng._prefill(eng.params, batch, lo, ai)
         from repro.models import model as M
         if self.paged:
             eng.slots.insert_prefill(slot, cache, chunk + n_front)
@@ -242,6 +266,22 @@ class ChunkedPrefillScheduler:
             tok = eng._sample(logits, req)
             self._emit(slot, req, int(tok[0]))
         return True
+
+    def _lora_args(self, ids):
+        """(lora_tree, adapter_ids) for a model call — (None, None) on
+        engines without an adapter pool, so the jit signature never
+        changes mid-run."""
+        if self.eng.adapters is None:
+            return None, None
+        return (self.eng.adapters.lora_tree(),
+                jnp.asarray(np.asarray(ids, np.int32)))
+
+    def _release_adapter(self, slot: int, req):
+        """Unpin the request's adapter (refcount--; the weights stay
+        resident for LRU reuse).  Keyed on the slot's pin entry so every
+        ``acquire`` is paired with exactly one ``release``."""
+        if self._slot_adapter.pop(slot, None) is not None:
+            self.eng.adapters.release(req.adapter)
 
     def _pad_segment(self, seg, target: int):
         """Pad a gathered segment's kvseq up to ``target`` so the slot
@@ -289,6 +329,7 @@ class ChunkedPrefillScheduler:
         req = eng.running.pop(slot)
         self.pending.pop(slot, None)
         self._admit_order.pop(slot, None)
+        self._release_adapter(slot, req)
         if self.prefix_cache is not None:
             nodes = self._locked.pop(req.request_id, None)
             if nodes:
@@ -360,6 +401,10 @@ class ChunkedPrefillScheduler:
             tks[slot] = req.top_k
             tps[slot] = req.top_p
         greedy = bool(np.all(temps <= 0.0))
+        aids = np.zeros((B,), np.int32)
+        for slot, idx in self._slot_adapter.items():
+            aids[slot] = idx
+        lo, ai = self._lora_args(aids)
         eng.key, key = jax.random.split(eng.key)
         if eng.paged:
             lengths = np.where(advance, eng.slots.lengths + 1,
@@ -368,7 +413,7 @@ class ChunkedPrefillScheduler:
                 eng.params, jnp.asarray(toks), eng.slots.pool,
                 eng.slots.tables_device(), jnp.asarray(lengths), key,
                 jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps),
-                greedy)
+                lo, ai, greedy)
             eng.slots.pool = new_pool
         else:
             lengths = jnp.where(jnp.asarray(advance),
@@ -376,7 +421,7 @@ class ChunkedPrefillScheduler:
             out, new_cache = eng._decode_sample(
                 eng.params, jnp.asarray(toks), eng.slots.cache, lengths,
                 key, jnp.asarray(temps), jnp.asarray(tks),
-                jnp.asarray(tps), greedy)
+                jnp.asarray(tps), lo, ai, greedy)
             eng.slots.cache = new_cache
         eng.slots.lengths = lengths
         sampled = np.asarray(out)          # one device_get for the batch
@@ -406,10 +451,10 @@ class ChunkedPrefillScheduler:
             ids = self.eng.slots.block_ids(slot)
             bs = self.eng.slots.block_size
             new = self.prefix_cache.insert(
-                req.namespace, req.prompt, lambda s, e: ids[s // bs])
+                self._ns(req), req.prompt, lambda s, e: ids[s // bs])
         else:
             new = self.prefix_cache.insert(
-                req.namespace, req.prompt,
+                self._ns(req), req.prompt,
                 lambda s, e: self.eng.slots.extract(slot, s, e))
         if new:
             self._locked.setdefault(req.request_id, []).extend(new)
@@ -427,6 +472,7 @@ class ChunkedPrefillScheduler:
             eng.running.pop(slot, None)
             self.pending.pop(slot, None)
             self._admit_order.pop(slot, None)
+            self._release_adapter(slot, req)
             if self.prefix_cache is not None:
                 nodes = self._locked.pop(req.request_id, None)
                 if nodes:

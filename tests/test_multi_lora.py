@@ -1,0 +1,286 @@
+"""Multi-tenant LoRA serving: adapter-pool LRU/refcount semantics and
+token-exactness of batched multi-LoRA decode vs ``lora_merge`` baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.finetune.lora import (LoraConfig, lora_export, lora_init,
+                                 lora_merge, lora_randomize, lora_unflatten)
+from repro.models import model as M
+from repro.serving.adapters import (AdapterPool, adapter_namespace,
+                                    supports_multi_lora)
+from repro.serving.engine import InferenceEngine, Request
+
+LCFG = LoraConfig(rank=4)
+
+
+def _mk_adapter(params, seed):
+    return lora_randomize(lora_init(params, LCFG, jax.random.PRNGKey(seed)),
+                          jax.random.PRNGKey(seed + 1000))
+
+
+def _engine_generate(cfg, params, prompts, n, cap=128, **kw):
+    """Single-tenant baseline: the same engine machinery on (merged)
+    weights.  The acceptance bar is token-identity between the mixed
+    multi-LoRA batch and a ``lora_merge``d single-tenant *run* — both
+    sides go through identical bucketing/scheduling, so the only delta
+    is factored-vs-merged weights."""
+    eng = InferenceEngine(cfg, params, max_batch=4, capacity=cap, **kw)
+    reqs = [Request(prompt=list(p), max_new_tokens=n) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return [r.generated for r in reqs]
+
+
+@pytest.fixture(scope="module")
+def tenants(tiny_cfg, tiny_params):
+    return {f"t{i}": _mk_adapter(tiny_params, i) for i in range(4)}
+
+
+# ------------------------------------------------------------------ pool
+def test_pool_lru_eviction_order(tiny_cfg, tiny_params, tenants):
+    pool = AdapterPool(tiny_cfg, tiny_params, slots=2)
+    for n, ad in tenants.items():
+        pool.register(n, ad, LCFG)
+    pool.acquire("t0"), pool.release("t0")
+    pool.acquire("t1"), pool.release("t1")
+    assert pool.resident == ["t0", "t1"]
+    pool.acquire("t2")                      # evicts LRU = t0
+    pool.release("t2")
+    assert pool.resident == ["t1", "t2"]
+    assert pool.evictions == 1
+    pool.acquire("t1"), pool.release("t1")  # touch t1 -> t2 becomes LRU
+    pool.acquire("t3")                      # evicts t2, not t1
+    pool.release("t3")
+    assert pool.resident == ["t1", "t3"]
+
+
+def test_pool_refcount_pins_resident(tiny_cfg, tiny_params, tenants):
+    pool = AdapterPool(tiny_cfg, tiny_params, slots=1)
+    pool.register("t0", tenants["t0"], LCFG)
+    pool.register("t1", tenants["t1"], LCFG)
+    idx = pool.acquire("t0")
+    assert idx == 1
+    # the only slot is pinned: t1 cannot displace it
+    assert pool.acquire("t1") is None
+    assert pool.resident == ["t0"]
+    # double-pin then single-release still pins
+    assert pool.acquire("t0") == idx
+    pool.release("t0")
+    assert pool.acquire("t1") is None
+    pool.release("t0")
+    assert pool.acquire("t1") == 1          # unpinned -> evictable
+    assert pool.resident == ["t1"]
+    assert pool.evictions == 1
+    # unbalanced release is a refcount bug and must surface immediately
+    with pytest.raises(ValueError, match="unpinned"):
+        pool.release("t0")
+
+
+def test_pool_reregister_evicted(tiny_cfg, tiny_params, tenants):
+    pool = AdapterPool(tiny_cfg, tiny_params, slots=1)
+    pool.register("t0", tenants["t0"], LCFG)
+    pool.register("t1", tenants["t1"], LCFG)
+    pool.acquire("t0"), pool.release("t0")
+    pool.acquire("t1"), pool.release("t1")  # evicts t0
+    assert pool.resident == ["t1"]
+    loads0 = pool.loads
+    # re-register the evicted id with *different* weights; re-acquire
+    # must reload the new host copy
+    pool.register("t0", tenants["t2"], LCFG)
+    assert pool.acquire("t0") == 1
+    assert pool.loads == loads0 + 1
+    tree = pool.lora_tree()
+    got = np.asarray(tree["stack"]["mixer"]["wq"]["b"][:, 1, :4, :])
+    want = np.asarray(tenants["t2"]
+                      ["['stack']['mixer']['wq']"]["b"]) * LCFG.scale
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    pool.release("t0")
+
+
+def test_pool_rejects_unsupported_targets(tiny_cfg, tiny_params):
+    pool = AdapterPool(tiny_cfg, tiny_params, slots=1)
+    bad = {"['stack']['mlp']['gate']": {
+        "a": np.zeros((2, 64, 4), np.float32),
+        "b": np.zeros((2, 4, 128), np.float32)}}
+    with pytest.raises(ValueError, match="does not serve"):
+        pool.register("bad", bad, LCFG)
+    big_cfg = LoraConfig(rank=64)   # exceeds the pool's rank bucket (8)
+    big = lora_init(tiny_params, big_cfg, jax.random.PRNGKey(9))
+    with pytest.raises(ValueError, match="rank"):
+        pool.register("toobig", big, big_cfg)
+
+
+def test_pool_accepts_exported_form(tiny_cfg, tiny_params, tenants):
+    pool = AdapterPool(tiny_cfg, tiny_params, slots=1)
+    flat = lora_export(tenants["t0"])
+    pool.register("t0", flat, LCFG)
+    assert pool.acquire("t0") == 1
+    pool.release("t0")
+    # and the artifact round-trip reproduces the nested tree
+    nested = lora_unflatten(flat)
+    assert set(nested) == set(tenants["t0"])
+
+
+def test_supports_multi_lora_gating():
+    assert not supports_multi_lora(scaled_down(
+        get_config("mamba2-1.3b"), num_layers=2, d_model=64, d_ff=128,
+        vocab_size=128))
+    assert adapter_namespace("proj", "") == "proj"
+    assert adapter_namespace("proj", "t0") != adapter_namespace("proj", "t1")
+
+
+# ------------------------------------------------------------------ engine
+def _run_mix(cfg, params, tenants, *, paged, slots, gen=6):
+    eng = InferenceEngine(cfg, params, max_batch=4, capacity=128,
+                          paged=paged, adapter_slots=slots)
+    for n, ad in tenants.items():
+        eng.register_adapter(n, ad, LCFG)
+    rng = np.random.default_rng(3)
+    names = list(tenants) + ["", ""]       # >= 4 adapters + base rows
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size - 1, 5 + i)))
+               for i in range(len(names))]
+    reqs = [Request(prompt=list(p), max_new_tokens=gen, adapter=nm)
+            for p, nm in zip(prompts, names)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return eng, names, prompts, reqs
+
+
+def _check_vs_merged(cfg, base_params, tenants, names, prompts, reqs,
+                     gen, paged=None, cap=128):
+    merged = {"": base_params}
+    merged.update({n: lora_merge(base_params, ad, LCFG)
+                   for n, ad in tenants.items()})
+    for variant in sorted(set(names)):
+        idxs = [i for i, nm in enumerate(names) if nm == variant]
+        refs = _engine_generate(cfg, merged[variant],
+                                [prompts[i] for i in idxs], gen,
+                                cap=cap, paged=paged)
+        for i, ref in zip(idxs, refs):
+            assert reqs[i].generated == ref, (variant, prompts[i])
+
+
+def test_mixed_batch_matches_merged_paged(tiny_cfg, tiny_params, tenants):
+    eng, names, prompts, reqs = _run_mix(tiny_cfg, tiny_params, tenants,
+                                         paged=None, slots=4)
+    assert eng.paged
+    _check_vs_merged(tiny_cfg, tiny_params, tenants, names, prompts,
+                     reqs, 6)
+
+
+def test_mixed_batch_matches_merged_dense(tiny_cfg, tiny_params, tenants):
+    _, names, prompts, reqs = _run_mix(tiny_cfg, tiny_params, tenants,
+                                       paged=False, slots=4)
+    _check_vs_merged(tiny_cfg, tiny_params, tenants, names, prompts,
+                     reqs, 6, paged=False)
+
+
+def test_slot_pressure_pins_and_completes(tiny_cfg, tiny_params, tenants):
+    # 4 distinct adapters through 2 device slots: admission must wait for
+    # pins to release, evict LRU residents, and still finish token-exact
+    eng, names, prompts, reqs = _run_mix(tiny_cfg, tiny_params, tenants,
+                                         paged=None, slots=2)
+    assert all(r.done for r in reqs)
+    st = eng.adapter_stats()
+    assert st["evictions"] >= 1 and st["loads"] >= 4
+    _check_vs_merged(tiny_cfg, tiny_params, tenants, names, prompts,
+                     reqs, 6)
+
+
+def test_unknown_adapter_rejected(tiny_cfg, tiny_params):
+    eng = InferenceEngine(tiny_cfg, tiny_params, max_batch=2, capacity=64,
+                          adapter_slots=1)
+    req = Request(prompt=[1, 2, 3], max_new_tokens=4, adapter="nope")
+    eng.submit(req)
+    s = eng.run_until_idle()
+    assert req.done and req.generated == []
+    assert s["rejected"] == 1
+
+
+def test_prefix_cache_isolated_per_adapter(tiny_cfg, tiny_params, tenants):
+    # identical prompts under base / t0 / t1 share *no* cached KV: each
+    # variant's output must match its own merged-weights reference even
+    # after another variant prefilled the same tokens first
+    eng = InferenceEngine(tiny_cfg, tiny_params, max_batch=2, capacity=128,
+                          adapter_slots=2)
+    for n in ("t0", "t1"):
+        eng.register_adapter(n, tenants[n], LCFG)
+    prompt = list(range(1, 40))            # long enough to index blocks
+    outs = {}
+    for nm in ("", "t0", "t1", "", "t0"):
+        r = Request(prompt=list(prompt), max_new_tokens=5, adapter=nm)
+        eng.submit(r)
+        eng.run_until_idle()
+        outs.setdefault(nm, []).append(r.generated)
+    merged = {n: lora_merge(tiny_params, tenants[n], LCFG)
+              for n in ("t0", "t1")}
+    assert outs[""][0] == outs[""][1] == _engine_generate(
+        tiny_cfg, tiny_params, [prompt], 5)[0]
+    assert outs["t0"][0] == outs["t0"][1] == _engine_generate(
+        tiny_cfg, merged["t0"], [prompt], 5)[0]
+    assert outs["t1"][0] == _engine_generate(
+        tiny_cfg, merged["t1"], [prompt], 5)[0]
+    # the three variants genuinely decode differently...
+    assert len({tuple(outs[""][0]), tuple(outs["t0"][0]),
+                tuple(outs["t1"][0])}) == 3
+    # ...and the repeat visits *were* cache hits within their own
+    # namespace
+    assert eng.metrics.summary()["prefill_tokens_saved"] > 0
+
+
+def test_gateway_adapter_ownership(tiny_cfg, tiny_params, tenants):
+    from repro.core.gateway import Gateway, ModelEntry, Unauthorized
+    eng = InferenceEngine(tiny_cfg, tiny_params, max_batch=2, capacity=64,
+                          adapter_slots=2)
+    eng.register_adapter("t0", tenants["t0"], LCFG)
+    gw = Gateway()
+    gw.vet_model(ModelEntry("m", tiny_cfg.name, 0.1, 0.3), tiny_cfg)
+    gw.bind_endpoints("m", [eng])
+    gw.own_adapter("t0", "tenant-b")
+    key_a = gw.mint_key("tenant-a")
+    key_b = gw.mint_key("tenant-b")
+    with pytest.raises(Unauthorized, match="not available") as e_owned:
+        gw.completion(api_key=key_a.key, model="m@t0", prompt=[1, 2, 3],
+                      max_tokens=2)
+    # a private adapter is indistinguishable from a nonexistent one (no
+    # enumeration oracle), and the owner's project is never leaked
+    with pytest.raises(Unauthorized) as e_missing:
+        gw.completion(api_key=key_a.key, model="m@ghost", prompt=[1, 2],
+                      max_tokens=2)
+    assert str(e_owned.value).replace("t0", "X") \
+        == str(e_missing.value).replace("ghost", "X")
+    assert "tenant-b" not in str(e_owned.value)
+    out = gw.completion(api_key=key_b.key, model="m@t0", prompt=[1, 2, 3],
+                        max_tokens=2)
+    assert len(out["tokens"]) == 2
+    assert "m@t0" in gw.usage_by_adapter()
+    # base-model calls are unaffected by adapter ownership
+    assert len(gw.completion(api_key=key_a.key, model="m",
+                             prompt=[4, 5], max_tokens=2)["tokens"]) == 2
+
+
+def test_mla_mixed_batch_matches_merged():
+    cfg = scaled_down(get_config("deepseek-v2-lite-16b"), num_layers=2,
+                      d_model=64, d_ff=128, vocab_size=128, num_heads=4)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    tenants = {f"m{i}": _mk_adapter(params, 20 + i) for i in range(2)}
+    eng = InferenceEngine(cfg, params, max_batch=3, capacity=96,
+                          adapter_slots=2)
+    for n, ad in tenants.items():
+        eng.register_adapter(n, ad, LCFG)
+    rng = np.random.default_rng(5)
+    names = ["", "m0", "m1"]
+    prompts = [list(map(int, rng.integers(1, 127, 6 + i)))
+               for i in range(3)]
+    reqs = [Request(prompt=list(p), max_new_tokens=5, adapter=nm)
+            for p, nm in zip(prompts, names)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    _check_vs_merged(cfg, params, tenants, names, prompts, reqs, 5,
+                     cap=96)

@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs tree (CI `docs` job; no deps).
+
+Checks every relative link target in the given markdown files (default:
+root README.md, docs/**/*.md, and every */README.md in the repo)
+resolves to an existing file or directory.  External (http/https/
+mailto) and pure-anchor links are skipped; anchors on relative links
+are stripped before the existence check.
+
+    python tools/check_md_links.py [files...]
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline links/images: [text](target) — tolerates one level of nested
+# brackets in the text; reference-style links are not used in this repo
+LINK_RE = re.compile(r"!?\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^()\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def default_files(root: str) -> list:
+    files = []
+    for pat in ("README.md", "docs/**/*.md", "**/README.md"):
+        files.extend(glob.glob(os.path.join(root, pat), recursive=True))
+    return sorted({os.path.abspath(f) for f in files})
+
+
+def check_file(path: str) -> list:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # fenced code blocks may contain bracketed indexing that is not a link
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path)}: broken link "
+                          f"'{target}' -> {os.path.relpath(resolved)}")
+    return errors
+
+
+def main(argv: list) -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = ([os.path.abspath(a) for a in argv] if argv
+             else default_files(root))
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} broken link(s) in {len(files)} file(s)")
+        return 1
+    print(f"ok: {len(files)} markdown file(s), all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
