@@ -26,14 +26,24 @@ Reproductions:
    ``lora_merge``d weights; also reports A/B decode tokens/sec vs the
    merge-and-redeploy alternative and the pool's load/evict counters
    under slot pressure.
+6. speculative decoding A/B: the same repetitive-prompt mix (the
+   code/RAG shape prompt-lookup thrives on) through the baseline
+   engine, the n-gram drafter, and a draft-model drafter, on paged GQA
+   *and* paged MLA.  Acceptance: temperature-0 outputs token-identical
+   to the baseline for every drafter/architecture pair; rows report
+   acceptance rate, tokens-per-launch, and decode tokens/sec vs
+   baseline.
 
 CLI: ``--paged`` (default) / ``--dense`` select the KV layout for the
-measured mixes; ``--smoke`` runs the fast subset (3 + 4 + 5) for CI.
+measured mixes; ``--smoke`` runs the fast subset (3 + 4 + 5 + 6) for
+CI; ``--json PATH`` additionally writes the rows as a machine-readable
+artifact (uploaded by the CI workflow).
 """
 from __future__ import annotations
 
 import argparse
 import itertools
+import json
 from typing import List, Optional
 
 import jax
@@ -284,6 +294,82 @@ def multi_adapter_rows(smoke: bool = False) -> List[str]:
     return rows
 
 
+def _tiny_mla():
+    if "mla_cfg" not in _STATE:
+        cfg = scaled_down(get_config("deepseek-v2-lite-16b"), num_layers=2,
+                          d_model=64, d_ff=128, vocab_size=256, num_heads=2)
+        _STATE["mla_cfg"] = cfg
+        _STATE["mla_params"] = M.init(cfg, jax.random.PRNGKey(2))
+    return _STATE["mla_cfg"], _STATE["mla_params"]
+
+
+def speculative_rows(smoke: bool = False) -> List[str]:
+    """Speculative decoding A/B (ISSUE 4 acceptance bar).
+
+    A repetitive-prompt workload (a shared boilerplate block + short
+    unique tail — the shape of code-edit/RAG/summarisation traffic)
+    decoded greedily through (a) the baseline engine, (b) the n-gram /
+    prompt-lookup drafter, (c) a draft-model drafter — on paged GQA, and
+    (a)+(b) again on paged MLA.  Every speculative run must be
+    token-identical to its baseline (temperature 0 makes accept/reject
+    an exact argmax match, so this is a hard assert, not a tolerance).
+    The draft model here is the target itself ("self-draft"): it bounds
+    the machinery's best case (acceptance ~1, tokens/launch -> k+1) with
+    zero training dependencies; realistic draft pairs plug in via
+    ``launch/serve.py --speculative draft --draft-config ...``.
+    """
+    gen = 16 if smoke else 32
+    spec_k = 4
+    rng = np.random.default_rng(17)
+
+    def mk_prompts(vocab):
+        pat = list(map(int, rng.integers(1, vocab - 1, 8)))
+        return [pat * 4 + list(map(int, rng.integers(1, vocab - 1, 3)))
+                for _ in range(6)]
+
+    def run(cfg, params, prompts, **kw):
+        eng = InferenceEngine(cfg, params, max_batch=4, capacity=192,
+                              sched=SchedulerConfig(prefill_chunk=32,
+                                                    prefix_block=8), **kw)
+        reqs = [Request(prompt=list(p), max_new_tokens=gen)
+                for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        s = eng.run_until_idle()
+        return [r.generated for r in reqs], s
+
+    rows = []
+    for tag, (cfg, params) in (("gqa", _tiny()), ("mla", _tiny_mla())):
+        prompts = mk_prompts(cfg.vocab_size)
+        base, sb = run(cfg, params, prompts)
+        cases = [("ngram", dict(speculative="ngram", spec_k=spec_k))]
+        if tag == "gqa":
+            cases.append(("draft", dict(speculative="draft", spec_k=spec_k,
+                                        draft_cfg=cfg,
+                                        draft_params=params)))
+        for name, kw in cases:
+            out, s = run(cfg, params, prompts, **kw)
+            ident = int(out == base)
+            rows.append(
+                f"serve_spec_{tag}_{name}_acceptance_rate,"
+                f"{s['spec_acceptance_rate'] * 100:.1f},"
+                f"pct k={spec_k}")
+            rows.append(
+                f"serve_spec_{tag}_{name}_tokens_per_launch,"
+                f"{s['spec_tokens_per_launch']:.2f},baseline=1.0")
+            rows.append(
+                f"serve_spec_{tag}_{name}_decode_tokens_per_s,"
+                f"{s['tokens_per_s']:.1f},"
+                f"baseline={sb['tokens_per_s']:.1f}")
+            rows.append(
+                f"serve_spec_{tag}_{name}_outputs_identical,{ident},"
+                f"token-for-token vs non-speculative at temperature 0")
+            assert ident, (
+                f"speculative ({tag}/{name}) changed greedy tokens")
+            assert s["spec_tokens_per_launch"] >= 1.0
+    return rows
+
+
 def analytic_itl(arch: str, tp: int, batch: int, ctx: int) -> float:
     """Decode step latency (s) on v5e: max(weights+KV reads / HBM, flops)."""
     cfg = get_config(arch)
@@ -309,10 +395,23 @@ def analytic_rows() -> List[str]:
 def run(paged: Optional[bool] = None, smoke: bool = False) -> List[str]:
     if smoke:
         return (shared_prefix_rows() + paged_vs_dense_rows(smoke=True)
-                + multi_adapter_rows(smoke=True))
+                + multi_adapter_rows(smoke=True)
+                + speculative_rows(smoke=True))
     return (measured_rows(paged) + shared_prefix_rows()
             + paged_vs_dense_rows() + multi_adapter_rows()
-            + analytic_rows())
+            + speculative_rows() + analytic_rows())
+
+
+def rows_to_json(rows: List[str]) -> List[dict]:
+    """``name,value,note`` row strings -> structured records (the CI
+    build artifact; value stays a string — some rows carry composites)."""
+    out = []
+    for r in rows:
+        parts = r.split(",", 2)
+        out.append({"name": parts[0],
+                    "value": parts[1] if len(parts) > 1 else "",
+                    "note": parts[2] if len(parts) > 2 else ""})
+    return out
 
 
 if __name__ == "__main__":
@@ -323,7 +422,18 @@ if __name__ == "__main__":
     g.add_argument("--dense", action="store_true",
                    help="dense KV for the measured mixes (A/B baseline)")
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI subset: shared-prefix + paged-vs-dense")
+                    help="fast CI subset: shared-prefix + paged-vs-dense "
+                         "+ multi-LoRA + speculative")
+    ap.add_argument("--json", default="",
+                    help="also write rows as JSON to this path (CI "
+                         "uploads it as a build artifact)")
     args = ap.parse_args()
     paged = False if args.dense else True
-    print("\n".join(run(paged=paged, smoke=args.smoke)))
+    rows = run(paged=paged, smoke=args.smoke)
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump({"smoke": args.smoke, "kv": "paged" if paged
+                       else "dense", "rows": rows_to_json(rows)}, f,
+                      indent=2)
+        print(f"wrote {args.json}")

@@ -80,6 +80,113 @@ def _paged_decode_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _paged_verify_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, blk: int, G: int,
+                         T: int):
+    """Multi-query (speculative verify) variant: T tail queries per
+    sequence, query t at absolute position ``length - T + t``.  The T
+    queries are folded into the head axis — row ``i`` of the (T*H, ...)
+    score/accumulator tensors is query ``i // H``, head ``i % H`` — so
+    the online-softmax state layout matches the single-query kernel with
+    H replaced by T*H.  Masking adds the causal tail constraint
+    ``kpos <= qpos`` on top of the validity guard."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)          # logical block index within the sequence
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    k_start = j * blk
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (T, H, D)
+        k = k_ref[0].astype(jnp.float32)                  # (blk, KV*D)
+        _, H, D = q.shape
+        KV = k.shape[-1] // D
+        k = k.reshape(blk, KV, D)
+        v = v_ref[0].astype(jnp.float32).reshape(blk, KV, D)
+        scale = 1.0 / (D ** 0.5)
+        qg = q.reshape(T, KV, G, D)
+        s = jnp.einsum("tkgd,skd->tkgs", qg * scale, k,
+                       preferred_element_type=jnp.float32)
+        s = s.reshape(T * H, blk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = (length - T
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // H)
+        s = jnp.where((kpos <= qpos) & (kpos < length), s, NEG_INF)
+        m_prev = m_scr[...]                               # (T*H, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+        pv = jnp.einsum("tkgs,skd->tkgd", p.reshape(T, KV, G, blk), v,
+                        preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv.reshape(T * H, D)
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).reshape(o_ref.shape[1:]).astype(
+            o_ref.dtype)
+
+
+def paged_verify_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """Multi-query paged flash-decode for speculative verify.
+
+    q: (B, T, H, D) — the T newest tokens of each sequence (their KV
+    already scattered into the pool); k_pool/v_pool: (num_blocks,
+    block_size, KV, D); block_tables: (B, max_blocks) int32; lengths:
+    (B,) valid tokens including the T tail tokens.  Query t of row b
+    sits at position ``lengths[b] - T + t`` and attends causally.
+    Returns (B, T, H, D).  T == 1 reduces to
+    :func:`paged_decode_attention` (parity-tested)."""
+    B, T, H, D = q.shape
+    nb, blk, KV, _ = k_pool.shape
+    G = H // KV
+    W = block_tables.shape[1]
+    kr = k_pool.reshape(nb, blk, KV * D)
+    vr = v_pool.reshape(nb, blk, KV * D)
+
+    grid = (B, W)
+    kernel = functools.partial(_paged_verify_kernel, blk=blk, G=G, T=T)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, T, H, D),
+                             lambda b, j, lens, bt: (b, 0, 0, 0)),
+                pl.BlockSpec((1, blk, KV * D),
+                             lambda b, j, lens, bt: (bt[b, j], 0, 0)),
+                pl.BlockSpec((1, blk, KV * D),
+                             lambda b, j, lens, bt: (bt[b, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, T, H, D),
+                                   lambda b, j, lens, bt: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((T * H, 1), jnp.float32),
+                pltpu.VMEM((T * H, 1), jnp.float32),
+                pltpu.VMEM((T * H, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), q, kr, vr)
+    return out
+
+
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_tables: jax.Array,
                            lengths: jax.Array, *,

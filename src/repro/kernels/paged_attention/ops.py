@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.paged_attention.kernel import paged_decode_attention
+from repro.kernels.paged_attention.kernel import (paged_decode_attention,
+                                                  paged_verify_attention)
 
 
 @jax.jit
@@ -15,3 +16,11 @@ def paged_decode(q, k_pool, v_pool, block_tables, lengths):
                                lengths,
                                interpret=jax.default_backend() == "cpu")
     return o[:, None]
+
+
+@jax.jit
+def paged_verify(q, k_pool, v_pool, block_tables, lengths):
+    """Speculative multi-token verify: q (B,T,H,D) tail queries, query t
+    at position ``lengths - T + t`` -> (B,T,H,D)."""
+    return paged_verify_attention(q, k_pool, v_pool, block_tables, lengths,
+                                  interpret=jax.default_backend() == "cpu")

@@ -16,3 +16,20 @@ def paged_decode_ref(q, k_pool, v_pool, block_tables, lengths) -> jax.Array:
     k = k_pool[block_tables].reshape(B, W * blk, KV, D)
     v = v_pool[block_tables].reshape(B, W * blk, KV, D)
     return decode_ref(q, k, v, lengths)
+
+
+def paged_verify_ref(q, k_pool, v_pool, block_tables, lengths) -> jax.Array:
+    """Multi-query oracle: q (B,T,H,D), query t of row b at position
+    ``lengths[b] - T + t``, causal over the gathered sequence."""
+    import jax.numpy as jnp
+
+    B, T, H, D = q.shape
+    _, blk, KV, _ = k_pool.shape
+    W = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(B, W * blk, KV, D)
+    v = v_pool[block_tables].reshape(B, W * blk, KV, D)
+    # one single-query decode per tail offset: query t sees lengths-T+t+1
+    # valid positions
+    outs = [decode_ref(q[:, t],
+                       k, v, lengths - (T - 1 - t)) for t in range(T)]
+    return jnp.stack(outs, axis=1)

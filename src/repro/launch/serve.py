@@ -44,6 +44,21 @@ def main():
                     help="device-resident adapter slots (default: "
                          "min(--adapters, 4); fewer than --adapters "
                          "exercises LRU eviction)")
+    ap.add_argument("--speculative", choices=["ngram", "draft"],
+                    default=None,
+                    help="speculative decoding: 'ngram' (prompt-lookup, "
+                         "model-free) or 'draft' (small draft model via "
+                         "--draft-config); greedy outputs stay "
+                         "token-identical to the plain engine")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per launch")
+    ap.add_argument("--draft-config", default="",
+                    help="architecture name of the draft model (e.g. "
+                         "qwen1.5-4b drafting for qwen2.5-32b); same "
+                         "--scale treatment as the target; random-init "
+                         "weights unless --draft-ckpt-dir is given")
+    ap.add_argument("--draft-ckpt-dir", default="",
+                    help="checkpoint dir for the draft model's weights")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -68,11 +83,32 @@ def main():
                      else args.adapter_slots)
     if args.adapters and adapter_slots < 1:
         ap.error("--adapters requires --adapter-slots >= 1")
+    draft_cfg = draft_params = None
+    if args.speculative == "draft":
+        if not args.draft_config:
+            ap.error("--speculative draft requires --draft-config")
+        draft_cfg = get_config(args.draft_config)
+        if args.scale == "tiny":
+            draft_cfg = scaled_down(draft_cfg)
+        draft_params = M.init(draft_cfg, jax.random.PRNGKey(1),
+                              jnp.float32)
+        if args.draft_ckpt_dir:
+            from repro.checkpoint import ckpt as C
+            try:
+                state, mani = C.restore(args.draft_ckpt_dir,
+                                        {"params": draft_params})
+                draft_params = state["params"]
+                print(f"draft weights from step {mani['step']}")
+            except Exception as e:  # noqa: BLE001
+                print(f"no usable draft checkpoint ({e}); random init")
     eng = InferenceEngine(cfg, params, max_batch=args.max_batch,
                           capacity=args.capacity,
                           paged=False if args.dense else None,
                           pool_tokens=args.pool_tokens,
-                          adapter_slots=adapter_slots)
+                          adapter_slots=adapter_slots,
+                          speculative=args.speculative,
+                          spec_k=args.spec_k,
+                          draft_cfg=draft_cfg, draft_params=draft_params)
     names = [cfg.name]
     if args.adapters:
         from repro.finetune.lora import (LoraConfig, lora_init,
@@ -101,6 +137,10 @@ def main():
         print(f"req{i}: model={model} prompt={prompt} -> {out['tokens']}")
     s = eng.metrics.summary()
     print("metrics:", {k: round(v, 4) for k, v in s.items()})
+    if args.speculative:
+        print(f"speculative[{args.speculative}] k={args.spec_k}: "
+              f"acceptance={s['spec_acceptance_rate']:.3f} "
+              f"tokens/launch={s['spec_tokens_per_launch']:.2f}")
     if args.adapters:
         print("adapter pool:", eng.adapter_stats())
         print("usage by adapter:", gw.usage_by_adapter())

@@ -213,6 +213,37 @@ def decode_attention(q, k_cache, v_cache, lengths):
     return o.reshape(B, 1, H, hd)
 
 
+def verify_attention(q, k_cache, v_cache, lengths):
+    """Multi-token tail attention against a cache (speculative verify).
+
+    q: (B,S,H,hd) — the S newest tokens of each sequence, whose KV must
+    already be written; lengths: (B,) valid cache entries *including* all
+    S tail tokens, so query t of row b sits at absolute position
+    ``lengths[b] - S + t`` and attends causally to positions ``<=`` its
+    own.  For S == 1 this is exactly :func:`decode_attention`; the
+    single-token path is kept separate so its jit signature (and the
+    engine's step-for-step numerics) are untouched.
+    """
+    B, S, H, hd = q.shape
+    _, Smax, KV, _ = k_cache.shape
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(k_cache.dtype)
+    with jax.named_scope("flash_verify_kernel_scope"):
+        s = jnp.einsum("bskgd,bmkd->bkgsm", qg, k_cache,
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(hd)
+        qpos = lengths[:, None] - S + jnp.arange(S)[None, :]      # (B,S)
+        valid = jnp.arange(Smax)[None, None, :] <= qpos[:, :, None]
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgsm,bmkd->bkgsd",
+                       (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                       v_cache, preferred_element_type=jnp.float32)
+    return jnp.moveaxis(o, 3, 1).reshape(B, S, H, hd)
+
+
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
     """One-token attention against a *paged* cache (jnp oracle).
 
@@ -230,6 +261,23 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
     k_seq = k_pool[block_tables].reshape(B, W * blk, KV, hd)
     v_seq = v_pool[block_tables].reshape(B, W * blk, KV, hd)
     return decode_attention(q, k_seq, v_seq, lengths)
+
+
+def paged_verify_attention(q, k_pool, v_pool, block_tables, lengths):
+    """Multi-token tail attention against a *paged* cache (jnp oracle).
+
+    q: (B,S,H,hd) — the S newest tokens, KV already scattered into the
+    pool; lengths: (B,) valid tokens including all S.  Gathers each
+    sequence's blocks into logical order and runs :func:`verify_attention`
+    — the Pallas kernel (``repro.kernels.paged_attention.paged_verify``)
+    implements the same contract on TPU by walking the table in SMEM.
+    """
+    B = q.shape[0]
+    _, blk, KV, hd = k_pool.shape
+    W = block_tables.shape[1]
+    k_seq = k_pool[block_tables].reshape(B, W * blk, KV, hd)
+    v_seq = v_pool[block_tables].reshape(B, W * blk, KV, hd)
+    return verify_attention(q, k_seq, v_seq, lengths)
 
 
 def attention_block(cfg: ModelConfig, p, x, positions, *,
@@ -265,19 +313,35 @@ def attention_block(cfg: ModelConfig, p, x, positions, *,
     elif block_tables is not None:
         q, k, v = project_qkv(cfg, p, x, positions,
                               lora=lora, adapter_ids=adapter_ids)
+        S = q.shape[1]
         blk = cache["k"].shape[1]
-        idx = lengths - 1
-        pb = jnp.take_along_axis(block_tables, (idx // blk)[:, None],
-                                 axis=1)[:, 0]
-        off = idx % blk
-        k_cache = cache["k"].at[pb, off].set(k[:, 0].astype(cache["k"].dtype))
-        v_cache = cache["v"].at[pb, off].set(v[:, 0].astype(cache["v"].dtype))
-        o = paged_decode_attention(q, k_cache, v_cache, block_tables, lengths)
+        k_cache, v_cache = cache["k"], cache["v"]
+        # scatter the S tail tokens' KV (S > 1 = speculative verify; a
+        # tail may straddle a block boundary, so resolve each position's
+        # physical block separately — S is a static jit constant).  Inert
+        # rows have lengths == 1, so their (clamped-negative) positions
+        # resolve to table column 0 == the reserved null block.
+        for t in range(S):
+            idx = lengths - S + t
+            pb = jnp.take_along_axis(block_tables, (idx // blk)[:, None],
+                                     axis=1)[:, 0]
+            off = idx % blk
+            k_cache = k_cache.at[pb, off].set(
+                k[:, t].astype(k_cache.dtype))
+            v_cache = v_cache.at[pb, off].set(
+                v[:, t].astype(v_cache.dtype))
+        if S == 1:
+            o = paged_decode_attention(q, k_cache, v_cache, block_tables,
+                                       lengths)
+        else:
+            o = paged_verify_attention(q, k_cache, v_cache, block_tables,
+                                       lengths)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
         q, k, v = project_qkv(cfg, p, x, positions,
                               lora=lora, adapter_ids=adapter_ids)
-        idx = (lengths - 1)  # slot of the current token
+        S = q.shape[1]
+        idx = lengths - S  # slot of the first (oldest) tail token
         k_cache = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
             c, kk, (i, 0, 0)))(cache["k"], k.astype(cache["k"].dtype), idx)
         v_cache = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
@@ -286,7 +350,10 @@ def attention_block(cfg: ModelConfig, p, x, positions, *,
             k_cache, ("act_batch", "act_kvseq", "act_heads", None))
         v_cache = sharding.constrain(
             v_cache, ("act_batch", "act_kvseq", "act_heads", None))
-        o = decode_attention(q, k_cache, v_cache, lengths)
+        if S == 1:
+            o = decode_attention(q, k_cache, v_cache, lengths)
+        else:
+            o = verify_attention(q, k_cache, v_cache, lengths)
         new_cache = {"k": k_cache, "v": v_cache}
     o2 = o.reshape(B, o.shape[1], -1).astype(dt)
     out = jnp.einsum("bsq,qd->bsd", o2, p["wo"])

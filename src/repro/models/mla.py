@@ -132,25 +132,29 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
         return out, new_cache
 
     # ---- decode: absorbed-weight attention in latent space ----
-    assert S == 1
-    idx = lengths - 1
+    # S == 1 is the decode micro-step; S > 1 is the speculative verify
+    # tail (the S newest tokens, written then causally attended — each
+    # query t sits at position ``lengths - S + t``).
     if block_tables is not None:
         blk = cache["ckv"].shape[1]
-        pb = jnp.take_along_axis(block_tables, (idx // blk)[:, None],
-                                 axis=1)[:, 0]
-        off = idx % blk
-        new_cache = {
-            "ckv": cache["ckv"].at[pb, off].set(
-                c_kv[:, 0].astype(cache["ckv"].dtype)),
-            "kpe": cache["kpe"].at[pb, off].set(
-                k_pe[:, 0].astype(cache["kpe"].dtype)),
-        }
+        ckv_p, kpe_p = cache["ckv"], cache["kpe"]
+        # a multi-token tail may straddle a block boundary: resolve each
+        # position's physical block separately (S is a static constant)
+        for t in range(S):
+            idx = lengths - S + t
+            pb = jnp.take_along_axis(block_tables, (idx // blk)[:, None],
+                                     axis=1)[:, 0]
+            off = idx % blk
+            ckv_p = ckv_p.at[pb, off].set(c_kv[:, t].astype(ckv_p.dtype))
+            kpe_p = kpe_p.at[pb, off].set(k_pe[:, t].astype(kpe_p.dtype))
+        new_cache = {"ckv": ckv_p, "kpe": kpe_p}
         # gather each sequence's blocks into logical order (jnp oracle;
         # a paged-MLA Pallas kernel would walk the table in SMEM instead)
         W = block_tables.shape[1]
         ckv_c = new_cache["ckv"][block_tables].reshape(B, W * blk, kvl)
         kpe_c = new_cache["kpe"][block_tables].reshape(B, W * blk, rope)
     else:
+        idx = lengths - S
         ckv_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
             c, u, (i, 0)))(cache["ckv"], c_kv.astype(cache["ckv"].dtype), idx)
         kpe_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
@@ -158,6 +162,10 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
         ckv_c = sharding.constrain(ckv_c, ("act_batch", "act_kvseq", None))
         kpe_c = sharding.constrain(kpe_c, ("act_batch", "act_kvseq", None))
         new_cache = {"ckv": ckv_c, "kpe": kpe_c}
+
+    if S > 1:
+        return _mla_verify(cfg, p, x, q_nope, q_pe, ckv_c, kpe_c, lengths,
+                           lora, adapter_ids), new_cache
 
     wuk = p["wuk"].reshape(kvl, h, nope)
     # absorb W_UK into q:  q_lat (B,h,kvl); cache operands stay bf16 with
@@ -201,3 +209,59 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
     if lora and "wo" in lora:
         out = out + lora_shift(o, lora["wo"], adapter_ids)
     return out, new_cache
+
+
+def _mla_verify(cfg: ModelConfig, p, x, q_nope, q_pe, ckv_c, kpe_c,
+                lengths, lora, adapter_ids):
+    """Absorbed-weight attention for an S-token speculative tail.
+
+    Same math as the S == 1 decode path with a query axis added: query t
+    of row b sits at position ``lengths[b] - S + t`` and attends causally
+    through the (already updated) latent cache.  Multi-LoRA shifts fold
+    into the absorbed ``wuk``/``wuv`` contractions exactly as in decode.
+    """
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    nope, rope, vd = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                      cfg.v_head_dim)
+    kvl = cfg.kv_lora_rank
+    dt = x.dtype
+    scale_dim = nope + rope
+
+    wuk = p["wuk"].reshape(kvl, h, nope)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wuk,
+                       preferred_element_type=jnp.float32)
+    if lora and "wuk" in lora:
+        bk = jnp.take(lora["wuk"]["b"], adapter_ids, axis=0).reshape(
+            B, -1, h, nope).astype(jnp.float32)
+        ak = jnp.take(lora["wuk"]["a"], adapter_ids, axis=0).astype(
+            jnp.float32)
+        t = jnp.einsum("bshn,brhn->bshr", q_nope.astype(jnp.float32), bk)
+        q_lat = q_lat + jnp.einsum("bshr,bkr->bshk", t, ak)
+    s_lat = jnp.einsum("bshr,bmr->bhsm", q_lat.astype(ckv_c.dtype), ckv_c,
+                       preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bshp,bmp->bhsm", q_pe.astype(kpe_c.dtype), kpe_c,
+                      preferred_element_type=jnp.float32)
+    s = (s_lat + s_pe) / jnp.sqrt(scale_dim)
+    Smax = ckv_c.shape[1]
+    qpos = lengths[:, None] - S + jnp.arange(S)[None, :]          # (B,S)
+    valid = jnp.arange(Smax)[None, None, :] <= qpos[:, :, None]   # (B,S,M)
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhsm,bmr->bshr", pr.astype(ckv_c.dtype), ckv_c,
+                     preferred_element_type=jnp.float32)
+    wuv = p["wuv"].reshape(kvl, h, vd)
+    o = jnp.einsum("bshr,rhv->bshv", ctx.astype(wuv.dtype), wuv,
+                   preferred_element_type=jnp.float32)
+    if lora and "wuv" in lora:
+        av = jnp.take(lora["wuv"]["a"], adapter_ids, axis=0).astype(
+            jnp.float32)
+        bv = jnp.take(lora["wuv"]["b"], adapter_ids, axis=0).reshape(
+            B, -1, h, vd).astype(jnp.float32)
+        t = jnp.einsum("bshk,bkr->bshr", ctx.astype(jnp.float32), av)
+        o = o + jnp.einsum("bshr,brhv->bshv", t, bv)
+    o = o.reshape(B, S, h * vd).astype(dt)
+    out = jnp.einsum("bsq,qd->bsd", o, p["wo"])
+    if lora and "wo" in lora:
+        out = out + lora_shift(o, lora["wo"], adapter_ids)
+    return out

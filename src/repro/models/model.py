@@ -609,6 +609,61 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, pool, block_tables,
     return logits, new_pool
 
 
+def verify_step(cfg: ModelConfig, params, tokens, cache, lengths, *,
+                lora=None, adapter_ids=None):
+    """Multi-token speculative verify: score a T-token tail in ONE launch.
+
+    tokens (B,T) int32 — ``tokens[:, 0]`` is the last emitted token
+    (whose KV is not yet written), ``tokens[:, 1:]`` are drafted
+    continuations; lengths (B,) counts valid cache entries *including*
+    all T tail tokens, so token t sits at position ``lengths - T + t``.
+    Writes KV for all T positions and returns (logits (B,T,V),
+    new_cache): ``logits[:, t]`` is the target distribution for the
+    token *after* position t — exactly what speculative accept/reject
+    compares draft t+1 against (and ``logits[:, -1]`` samples the bonus
+    token).  The engine rolls back rejected positions by shrinking
+    ``lengths``; stale KV past a row's length is never read (attention
+    masks by position) and is overwritten when decoding resumes there.
+    For T == 1 this is :func:`decode_step` with a (B,1,V) logit shape.
+    """
+    T = tokens.shape[1]
+    pos = lengths[:, None] - T + jnp.arange(T)[None, :]
+    x = embed_tokens(cfg, params["embed"], tokens, pos)
+    x, _, new_cache = _backbone(cfg, params, x, pos, mode="decode",
+                                cache=cache, lengths=lengths,
+                                lora=lora, adapter_ids=adapter_ids)
+    logits = unembed(cfg, params["embed"], x).astype(jnp.float32)
+    return logits, new_cache
+
+
+def verify_step_paged(cfg: ModelConfig, params, tokens, pool, block_tables,
+                      lengths, *, lora=None, adapter_ids=None):
+    """:func:`verify_step` over a paged KV pool: each tail token's KV is
+    scattered into its sequence's block (``block_tables[b, pos // bs]``
+    at offset ``pos % bs`` — a tail may straddle a block boundary) and
+    the T queries attend causally through the table.  Returns
+    (logits (B,T,V), new_pool)."""
+    T = tokens.shape[1]
+    pos = lengths[:, None] - T + jnp.arange(T)[None, :]
+    x = embed_tokens(cfg, params["embed"], tokens, pos)
+    x, _, new_pool = _backbone(cfg, params, x, pos, mode="decode",
+                               cache=pool, lengths=lengths,
+                               block_tables=block_tables,
+                               lora=lora, adapter_ids=adapter_ids)
+    logits = unembed(cfg, params["embed"], x).astype(jnp.float32)
+    return logits, new_pool
+
+
+def supports_speculative(cfg: ModelConfig) -> bool:
+    """True iff the engine can run speculative decoding: rollback of
+    rejected tokens requires per-position KV that can simply be
+    length-masked and overwritten — the same position-sliceable caches
+    the paged path needs (uniform GQA/MLA stacks).  SSM/hybrid recurrent
+    state cannot be rolled back without checkpointing it per token;
+    encoder-decoder and vision-prefixed models keep the plain engine."""
+    return supports_paged_cache(cfg)
+
+
 # --------------------------------------------------------------- specs
 def input_specs(cfg: ModelConfig, shape: ShapeSpec,
                 cache_dtype=jnp.bfloat16) -> Dict[str, Any]:

@@ -10,7 +10,10 @@ sharing and preemption instead of over-commit.  SSM/hybrid,
 encoder-decoder, and vision-prefixed models fall back to the dense
 per-slot layout with block-ledger admission.  Decode and sampling are
 fused in one jitted step (per-slot temperature/top-k/top-p vectors), so
-a micro-step costs one device round-trip for the whole batch.
+a micro-step costs one device round-trip for the whole batch — and with
+speculative decoding enabled (``speculative="ngram"|"draft"``) that one
+round-trip emits up to ``spec_k + 1`` tokens per sequence via a
+multi-token verify launch with in-jit accept/reject.
 
 Scheduling policy — admission, chunked prefill, automatic radix-tree
 prefix reuse, preemption — lives in
@@ -35,8 +38,10 @@ from repro.models import model as M
 from repro.serving.adapters import AdapterPool, supports_multi_lora
 from repro.serving.kvcache import BlockLedger, CacheSlots, PagedCacheSlots
 from repro.serving.metrics import MetricsCollector
-from repro.serving.sampling import sample, sample_batched
+from repro.serving.sampling import (sample, sample_batched,
+                                    spec_accept_batched)
 from repro.serving.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.serving.speculative import make_drafter
 
 
 @dataclasses.dataclass
@@ -68,7 +73,10 @@ class InferenceEngine:
                  paged: Optional[bool] = None,
                  pool_tokens: Optional[int] = None,
                  adapter_slots: int = 0,
-                 adapter_rank_bucket: int = 8):
+                 adapter_rank_bucket: int = 8,
+                 speculative: Optional[str] = None,
+                 spec_k: int = 4,
+                 draft_cfg=None, draft_params=None):
         """``paged=None`` auto-selects the paged KV path when the
         architecture supports it.  ``pool_tokens`` sizes the shared block
         pool (default ``max_batch * capacity`` — the dense footprint);
@@ -83,7 +91,19 @@ class InferenceEngine:
         device-resident adapter slots (ranks padded to
         ``adapter_rank_bucket``).  Requests name an adapter via
         ``Request.adapter``; base and adapter'd requests share every
-        fused decode step."""
+        fused decode step.
+
+        ``speculative`` turns on speculative decoding: ``"ngram"``
+        (prompt-lookup, model-free) or ``"draft"`` (a small compatible
+        model — pass ``draft_cfg``/``draft_params``).  Each decode
+        micro-step then drafts up to ``spec_k`` tokens per running
+        sequence and scores them in ONE multi-token verify launch;
+        accepted tokens are emitted in a burst, rejected ones rolled
+        back.  Greedy outputs are token-identical to the
+        non-speculative engine; sampled outputs follow the same
+        distribution.  Requires position-sliceable KV
+        (``M.supports_speculative`` — uniform GQA/MLA stacks, either KV
+        layout)."""
         self.cfg, self.params = cfg, params
         self.name = name
         self.clock = clock
@@ -140,6 +160,43 @@ class InferenceEngine:
         self._decode_sample_paged = jax.jit(_fused_paged,
                                             donate_argnums=(2,),
                                             static_argnums=(11,))
+
+        # speculative decoding: draft up to spec_k tokens per sequence,
+        # score them in ONE multi-token verify launch, accept/reject
+        # inside the jit (the whole batch still costs one device_get).
+        self.spec_k = spec_k
+        self.drafter = None
+        if speculative:
+            if not M.supports_speculative(cfg):
+                raise ValueError(
+                    "speculative decoding needs position-sliceable KV "
+                    "(uniform GQA/MLA stacks) — rejected tokens cannot "
+                    f"be rolled back on {cfg.name}")
+            self.drafter = make_drafter(speculative, cfg, spec_k=spec_k,
+                                        capacity=capacity,
+                                        draft_cfg=draft_cfg,
+                                        draft_params=draft_params)
+
+        def _verify_fused(p, t, c, l, key, temps, tks, tps, dprobs, nd,
+                          lo, ai, greedy):
+            logits, nc = M.verify_step(cfg, p, t, c, l, lora=lo,
+                                       adapter_ids=ai)
+            out, nem = spec_accept_batched(logits, t, dprobs, nd, key,
+                                           temps, tks, tps, greedy)
+            return out, nem, nc
+
+        def _verify_fused_paged(p, t, pool, bt, l, key, temps, tks, tps,
+                                dprobs, nd, lo, ai, greedy):
+            logits, np_ = M.verify_step_paged(cfg, p, t, pool, bt, l,
+                                              lora=lo, adapter_ids=ai)
+            out, nem = spec_accept_batched(logits, t, dprobs, nd, key,
+                                           temps, tks, tps, greedy)
+            return out, nem, np_
+
+        self._verify = jax.jit(_verify_fused, static_argnums=(12,))
+        self._verify_paged = jax.jit(_verify_fused_paged,
+                                     donate_argnums=(2,),
+                                     static_argnums=(13,))
         self.scheduler = ChunkedPrefillScheduler(self, sched)
 
     # ------------------------------------------------------------ API

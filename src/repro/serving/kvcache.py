@@ -398,6 +398,29 @@ class PagedCacheSlots:
     def block_ids(self, slot: int) -> List[int]:
         return list(self.seq_blocks.get(slot, []))
 
+    def trim(self, slot: int, length: int):
+        """Roll back a speculative over-allocation: decref blocks past
+        ``blocks_for(length)`` and null their table entries.
+
+        The speculative verify step writes k+1 tail positions before
+        knowing how many survive accept/reject, so the scheduler grows
+        every slot to ``len + k + 1`` up front and trims back to the
+        accepted length here.  Only *privately allocated* tail blocks
+        can be freed: a slot's length never shrinks below its adopted
+        prefix (whole blocks, written strictly before any speculation),
+        so shared blocks are never decref'd past their adoption."""
+        have = self.seq_blocks.get(slot)
+        if not have:
+            return
+        keep = self.blocks_for(max(int(length), 1))
+        if keep >= len(have):
+            return
+        extra = have[keep:]
+        del have[keep:]
+        self.bp.decref(extra)
+        self.tables[slot, keep:keep + len(extra)] = NULL_BLOCK
+        self._touch_tables()
+
     # ------------------------------------------------------------ prefill
     def _scatter_impl(self, pool, prefill_cache, ids):
         """Write a single-sequence prefill cache (1, S, ...) into the

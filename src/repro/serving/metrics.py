@@ -53,6 +53,14 @@ class RequestMetrics:
 class MetricsCollector:
     def __init__(self):
         self.requests: Dict[str, RequestMetrics] = {}
+        # speculative-decoding counters, aggregated per engine: one
+        # "row-launch" = one running decode slot scored by one verify
+        # launch (so tokens-per-launch is per-sequence, comparable to
+        # the baseline's fixed 1.0)
+        self.spec_rows = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
 
     def arrival(self, rid: str, t: float, n_prompt: int):
         self.requests[rid] = RequestMetrics(rid, t, n_prompt)
@@ -85,6 +93,19 @@ class MetricsCollector:
         returned it to the queue (it resumes by re-prefilling its prompt
         plus already-generated tokens — usually a prefix-cache hit)."""
         self.requests[rid].n_preempted += 1
+
+    def speculative(self, n_drafted: int, n_accepted: int,
+                    n_emitted: int):
+        """One decode slot went through one speculative verify launch:
+        ``n_drafted`` tokens proposed, ``n_accepted`` of them accepted
+        by rejection sampling, ``n_emitted`` actually emitted —
+        normally ``n_accepted + 1`` (the correction or bonus token
+        rides along for free), but fewer when EOS or the generation
+        budget truncates the burst mid-way."""
+        self.spec_rows += 1
+        self.spec_drafted += n_drafted
+        self.spec_accepted += n_accepted
+        self.spec_emitted += n_emitted
 
     def reject(self, rid: str, t: float):
         """The request was refused admission (e.g. prompt + generation
@@ -132,4 +153,8 @@ class MetricsCollector:
             "prefix_hit_rate": (saved / prompt_tokens
                                 if prompt_tokens else 0.0),
             "tokens_per_s": gen / span if done and span > 0 else float("nan"),
+            "spec_acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                     if self.spec_drafted else float("nan")),
+            "spec_tokens_per_launch": (self.spec_emitted / self.spec_rows
+                                       if self.spec_rows else float("nan")),
         }

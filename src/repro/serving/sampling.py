@@ -1,12 +1,16 @@
 """Token sampling: greedy / temperature / top-k / top-p (jit-able).
 
-Two entry points: :func:`sample` filters one (B, V) batch with *shared*
-scalar parameters (Python-level branching, one compile per setting), and
+Entry points: :func:`sample` filters one (B, V) batch with *shared*
+scalar parameters (Python-level branching, one compile per setting);
 :func:`sample_batched` takes *per-row* parameter vectors with purely
-traced control flow, so the engine can fuse one sampling call for a whole
-continuous batch — mixed greedy/temperature/top-k/top-p requests — inside
-the jitted decode step.  Rows with ``temperature <= 0`` reduce to argmax
-exactly, so greedy outputs are identical between the two paths.
+traced control flow, so the engine can fuse one sampling call for a
+whole continuous batch — mixed greedy/temperature/top-k/top-p requests —
+inside the jitted decode step; :func:`spec_accept_batched` is the
+speculative-decoding accept/reject cascade over a multi-token verify
+launch, built on the same per-row filter (:func:`filter_logits`) so
+speculative and plain sampling target the identical distribution.  Rows
+with ``temperature <= 0`` reduce to argmax exactly, so greedy outputs
+are identical across all paths.
 """
 from __future__ import annotations
 
@@ -36,20 +40,20 @@ def sample(logits: jax.Array, key: jax.Array, *, temperature: float = 0.0,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
-def sample_batched(logits: jax.Array, key: jax.Array,
-                   temperature: jax.Array, top_k: jax.Array,
-                   top_p: jax.Array) -> jax.Array:
-    """Per-row sampling over one batch: logits (B, V) fp32; temperature
-    (B,) fp32; top_k (B,) int32 (0 disables); top_p (B,) fp32 (1.0
-    disables).  Returns (B,) int32 token ids.
+def filter_logits(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Per-row temperature/top-k/top-p filter with traced parameters —
+    the shared transform behind :func:`sample_batched` and the
+    speculative verify cascade (:func:`spec_accept_batched`), so both
+    paths sample from the *same* filtered target distribution.
 
-    The per-row filters mirror :func:`sample` exactly — kth-largest
-    cutoff for top-k, smallest cumulative-probability set for top-p over
-    the already-top-k-filtered logits — but with traced parameters, so a
-    batch mixing settings compiles once.
+    logits (B, V) fp32; temperature (B,) fp32; top_k (B,) int32 (0
+    disables); top_p (B,) fp32 (1.0 disables).  Returns filtered logits
+    (B, V): kth-largest cutoff for top-k, then the smallest
+    cumulative-probability set >= top_p over the top-k-filtered logits —
+    mirroring the Python-branching :func:`sample` exactly.
     """
     B, V = logits.shape
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     l = logits / jnp.maximum(temperature, 1e-6)[:, None]
     # top-k: kth-largest value per row (k = V disables the filter)
     desc = jnp.sort(l, axis=-1)[:, ::-1]
@@ -62,6 +66,109 @@ def sample_batched(logits: jax.Array, key: jax.Array,
     cum = jnp.cumsum(probs, axis=-1)
     cut_idx = jnp.sum(cum < top_p[:, None], axis=-1)
     cutoff = jnp.take_along_axis(desc, cut_idx[:, None], axis=-1)
-    l = jnp.where(l < cutoff, NEG, l)
+    return jnp.where(l < cutoff, NEG, l)
+
+
+def sample_batched(logits: jax.Array, key: jax.Array,
+                   temperature: jax.Array, top_k: jax.Array,
+                   top_p: jax.Array) -> jax.Array:
+    """Per-row sampling over one batch: logits (B, V) fp32; temperature
+    (B,) fp32; top_k (B,) int32 (0 disables); top_p (B,) fp32 (1.0
+    disables).  Returns (B,) int32 token ids.
+
+    The per-row filters (:func:`filter_logits`) mirror :func:`sample`
+    exactly but with traced parameters, so a batch mixing settings
+    compiles once.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = filter_logits(logits, temperature, top_k, top_p)
     sampled = jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
     return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def spec_accept_batched(logits: jax.Array, tokens: jax.Array,
+                        draft_probs: jax.Array, n_draft: jax.Array,
+                        key: jax.Array, temperature: jax.Array,
+                        top_k: jax.Array, top_p: jax.Array,
+                        greedy: bool):
+    """Distribution-preserving speculative accept/reject for one batch.
+
+    One verify launch scored a T-token tail per row: ``logits`` (B,T,V)
+    where ``logits[:, t]`` is the target distribution for the token
+    *after* tail position t; ``tokens`` (B,T) is the tail itself —
+    ``tokens[:, 0]`` the last emitted (always-valid) token and
+    ``tokens[:, 1:]`` the k = T-1 drafted tokens; ``draft_probs``
+    (B,k,V) the distribution each draft was sampled from — or ``None``
+    for deterministic drafters, in which case the one-hot ``q`` is
+    built *inside* the jit from the draft token ids (skipping a dense
+    (B,k,V) host allocation + transfer on the decode hot path);
+    ``n_draft`` (B,) how many drafts are real for each row (0 disables
+    speculation for the row — it degenerates to one plain sample from
+    ``logits[:, 0]``, the baseline micro-step).
+
+    Per row: drafts are accepted left-to-right while ``u < p(d)/q(d)``
+    (standard leapfrog rejection); at the first rejection the token is
+    resampled from the residual ``norm(max(p - q, 0))``, and when every
+    draft is accepted a bonus token is sampled from the next position's
+    target.  The emitted-token marginal therefore equals the (filtered)
+    target distribution regardless of the drafter — the property
+    tests/test_speculative.py checks statistically.  Greedy rows
+    (``temperature <= 0``, or the whole batch when the static ``greedy``
+    flag is set) use exact argmax matching, which makes speculative
+    outputs *token-identical* to the non-speculative engine.
+
+    Returns (out_tokens (B,T), n_emit (B,)): row b emits
+    ``out_tokens[b, :n_emit[b]]`` (``n_emit = accepted + 1``, always
+    >= 1) and rolls its KV length back to ``base + n_emit``.
+    """
+    B, T, V = logits.shape
+    k = T - 1
+    drafts = tokens[:, 1:]                                     # (B,k)
+    tpos = jnp.arange(k)[None, :]
+    tt = jnp.arange(T)[None, :]
+    gm = jnp.argmax(logits, axis=-1).astype(jnp.int32)         # (B,T)
+    drafts_pad = jnp.concatenate(
+        [drafts, jnp.zeros((B, 1), jnp.int32)], axis=1)        # (B,T)
+
+    def emit(m, corr):
+        """Tokens 0..m-1 from the drafts, token m = correction/bonus."""
+        return jnp.where(tt < m[:, None], drafts_pad,
+                         jnp.where(tt == m[:, None], corr, 0))
+
+    acc_g = (drafts == gm[:, :k]) & (tpos < n_draft[:, None])
+    m_g = jnp.sum(jnp.cumprod(acc_g.astype(jnp.int32), axis=1), axis=1)
+    out_g, n_g = emit(m_g, gm), m_g + 1
+    if greedy:
+        return out_g, n_g.astype(jnp.int32)
+
+    lf = filter_logits(logits.reshape(B * T, V),
+                       jnp.repeat(temperature, T), jnp.repeat(top_k, T),
+                       jnp.repeat(top_p, T))
+    p = jax.nn.softmax(lf, axis=-1).reshape(B, T, V)
+    if draft_probs is None:  # deterministic drafter: q = one-hot(draft)
+        draft_probs = jax.nn.one_hot(drafts, V, dtype=jnp.float32)
+    q = jnp.where(tpos[..., None] < n_draft[:, None, None],
+                  draft_probs, 0.0)                            # (B,k,V)
+    ku, kc = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, max(k, 1)))[:, :k]
+    p_d = jnp.take_along_axis(p[:, :k], drafts[..., None], -1)[..., 0]
+    q_d = jnp.take_along_axis(q, drafts[..., None], -1)[..., 0]
+    # u < p/q  <=>  u*q < p (q > 0 wherever a draft was proposed)
+    acc = (u * q_d < p_d) & (tpos < n_draft[:, None])
+    m = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+    # residual at the first rejected position; at m == n_draft the draft
+    # mass is zero there, so the "residual" is the plain target (bonus)
+    p_m = jnp.take_along_axis(p, m[:, None, None], axis=1)[:, 0]
+    q_pad = jnp.concatenate([q, jnp.zeros((B, 1, V))], axis=1)
+    q_m = jnp.take_along_axis(q_pad, m[:, None, None], axis=1)[:, 0]
+    resid = jnp.maximum(p_m - q_m, 0.0)
+    rs = jnp.sum(resid, axis=-1, keepdims=True)
+    # p <= q pointwise can only mean p == q, where rejection has
+    # probability 0 — the guard only protects against float underflow
+    resid = jnp.where(rs > 1e-12, resid / jnp.maximum(rs, 1e-30), p_m)
+    corr = jax.random.categorical(
+        kc, jnp.log(jnp.maximum(resid, 1e-30)), axis=-1).astype(jnp.int32)
+    out_s, n_s = emit(m, corr[:, None]), m + 1
+    g_row = (temperature <= 0.0)
+    out = jnp.where(g_row[:, None], out_g, out_s)
+    return out, jnp.where(g_row, n_g, n_s).astype(jnp.int32)

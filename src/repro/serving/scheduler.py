@@ -31,6 +31,13 @@ scratch.  This policy object replaces it (see README.md):
   blocks are freed and it returns to the queue head with its generated
   tokens folded into the prompt, so resumption re-prefills (usually a
   prefix-cache hit) and continues token-exactly.
+- **Speculative bursts.**  With a drafter attached
+  (``InferenceEngine(speculative=...)``), micro-steps with decoding
+  slots run :meth:`_spec_micro_step` instead: each decode slot drafts up
+  to ``spec_k`` tokens, ONE multi-token verify launch scores them all,
+  and the slot emits 1..spec_k+1 accepted tokens (rejected tail rolled
+  back by length shrink + block trim).  Greedy outputs stay
+  token-identical to the plain micro-step.
 
 Exactness: suffix tokens pass through ``decode_step`` at their true
 positions against the already-written prefix KV, which is the same math
@@ -68,6 +75,8 @@ class SchedulerConfig:
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    """Pow2 prefill-padding bucket (shared with speculative.py's
+    draft-model prefill, so both compile against the same shape set)."""
     for b in buckets:
         if n <= b:
             return b
@@ -144,6 +153,11 @@ class ChunkedPrefillScheduler:
         # a preempted request resumes with its generated tokens folded
         # into the prompt; only the *remaining* budget counts
         need = (len(req.prompt) + req.max_new_tokens - len(req.generated))
+        if eng.drafter is not None:
+            # the speculative verify step writes spec_k + 1 tail
+            # positions before accept/reject, so the slot must be able
+            # to address spec_k extra positions past the last real token
+            need += eng.spec_k
         if need > eng.capacity or (req.adapter and (
                 eng.adapters is None or not eng.adapters.has(req.adapter))):
             # can never fit / names an unknown adapter: explicit
@@ -283,6 +297,12 @@ class ChunkedPrefillScheduler:
         if self._slot_adapter.pop(slot, None) is not None:
             self.eng.adapters.release(req.adapter)
 
+    def _release_drafter(self, slot: int):
+        """Drop the drafter's per-slot state (draft KV cache / lookup
+        index) when the slot turns over — finish or preemption."""
+        if self.eng.drafter is not None:
+            self.eng.drafter.release(slot)
+
     def _pad_segment(self, seg, target: int):
         """Pad a gathered segment's kvseq up to ``target`` so the slot
         insert compiles per pow2 bucket, not per exact match length."""
@@ -330,6 +350,7 @@ class ChunkedPrefillScheduler:
         self.pending.pop(slot, None)
         self._admit_order.pop(slot, None)
         self._release_adapter(slot, req)
+        self._release_drafter(slot)
         if self.prefix_cache is not None:
             nodes = self._locked.pop(req.request_id, None)
             if nodes:
@@ -343,16 +364,17 @@ class ChunkedPrefillScheduler:
         eng.queue.appendleft(req)
         eng.metrics.preempt(req.request_id, eng.clock())
 
-    def _grow_all(self):
-        """Allocate the next-position block for every running slot,
-        preempting latest-admitted requests when the pool (plus tree
-        eviction) cannot supply them."""
+    def _grow_all(self, n: int = 1):
+        """Allocate the next ``n`` positions' blocks for every running
+        slot (n = spec_k + 1 on speculative steps — rejected tail blocks
+        are trimmed back after accept/reject), preempting latest-admitted
+        requests when the pool (plus tree eviction) cannot supply them."""
         eng = self.eng
         while eng.running:
             stuck = None
             for slot in sorted(eng.running):
                 if not self._ensure_blocks(slot,
-                                           int(eng.slots.lengths[slot]) + 1):
+                                           int(eng.slots.lengths[slot]) + n):
                     stuck = slot
                     break
             if stuck is None:
@@ -379,8 +401,15 @@ class ChunkedPrefillScheduler:
         next prompt token; decoding slots feed their last sampled token
         (its KV gets written now) and emit a new one.  Sampling runs
         batched inside the jitted step; the sampled tokens come back in
-        one coalesced transfer."""
+        one coalesced transfer.
+
+        With a drafter attached, any tick with at least one *decoding*
+        slot runs the speculative variant instead (prefilling slots ride
+        along, advancing one prompt token as usual)."""
         eng = self.eng
+        if (eng.drafter is not None
+                and any(s not in self.pending for s in eng.running)):
+            return self._spec_micro_step()
         if eng.paged:
             self._grow_all()
         if not eng.running:
@@ -437,6 +466,121 @@ class ChunkedPrefillScheduler:
             else:
                 self._emit(slot, req, int(sampled[slot]))
 
+    def _spec_micro_step(self):
+        """One speculative verify micro-step (variable tokens per tick).
+
+        Per running *decode* slot: ask the drafter for up to spec_k
+        candidate tokens (capped by the request's remaining budget),
+        then score ``[last_emitted, draft_1..draft_n]`` in ONE jitted
+        multi-token verify launch that also runs accept/reject
+        (``sampling.spec_accept_batched``) — so a slot emits between 1
+        and spec_k + 1 tokens per launch.  Prefilling slots ride along,
+        consuming one prompt token (their draft count is 0, which
+        degenerates to the plain micro-step for that row).
+
+        The launch writes KV for all spec_k + 1 tail positions before
+        the verdict is known; rejected positions are rolled back by
+        shrinking the slot's length (stale KV past the length is never
+        read and is overwritten when decode resumes there) and, on the
+        paged path, returning the now-unreferenced tail blocks to the
+        pool (``PagedCacheSlots.trim``).
+        """
+        eng = self.eng
+        k = eng.spec_k
+        T = k + 1
+        if eng.paged:
+            self._grow_all(T)
+        if not eng.running:
+            return
+        B = eng.slots.B
+        Vp = eng.cfg.vocab_padded
+        toks = np.zeros((B, T), np.int32)
+        nd = np.zeros((B,), np.int32)
+        # deterministic drafters (q = one-hot) skip the dense (B,k,V)
+        # host buffer: the accept jit rebuilds q from the token ids
+        det = eng.drafter.deterministic
+        dprobs = None if det else np.zeros((B, k, Vp), np.float32)
+        advance = np.zeros((B,), bool)
+        temps = np.zeros((B,), np.float32)
+        tks = np.zeros((B,), np.int32)
+        tps = np.ones((B,), np.float32)
+        for slot, req in eng.running.items():
+            advance[slot] = True
+            temps[slot] = req.temperature
+            tks[slot] = req.top_k
+            tps[slot] = req.top_p
+            if slot in self.pending:
+                toks[slot, 0] = req.prompt[self.pending[slot]]
+                continue  # prefill rows advance exactly one prompt token
+            toks[slot, 0] = req.generated[-1]
+            # drafting past the remaining budget is wasted verification:
+            # the launch emits at most n_draft + 1 tokens
+            cap = min(k, req.max_new_tokens - len(req.generated) - 1)
+            if cap <= 0:
+                continue
+            ctx = list(req.prompt) + list(req.generated)
+            drafts, qp = eng.drafter.propose(slot, ctx, cap,
+                                             req.temperature)
+            n = len(drafts)
+            if n:
+                toks[slot, 1:1 + n] = drafts
+                if not det:
+                    dprobs[slot, :n] = qp
+                nd[slot] = n
+        greedy = bool(np.all(temps <= 0.0))
+        aids = np.zeros((B,), np.int32)
+        for slot, idx in self._slot_adapter.items():
+            aids[slot] = idx
+        lo, ai = self._lora_args(aids)
+        eng.key, key = jax.random.split(eng.key)
+        base = np.asarray(eng.slots.lengths, np.int32)
+        lengths = np.where(advance, base + T, base).astype(np.int32)
+        dp = None if det else jnp.asarray(dprobs)
+        if eng.paged:
+            out, nem, new_pool = eng._verify_paged(
+                eng.params, jnp.asarray(toks), eng.slots.pool,
+                eng.slots.tables_device(), jnp.asarray(lengths), key,
+                jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps),
+                dp, jnp.asarray(nd), lo, ai, greedy)
+            eng.slots.pool = new_pool
+        else:
+            out, nem, new_cache = eng._verify(
+                eng.params, jnp.asarray(toks), eng.slots.cache,
+                jnp.asarray(lengths), key, jnp.asarray(temps),
+                jnp.asarray(tks), jnp.asarray(tps), dp,
+                jnp.asarray(nd), lo, ai, greedy)
+            eng.slots.cache = new_cache
+        out = np.asarray(out)           # one device_get for the batch
+        nem = np.asarray(nem)
+        # roll lengths back to the accepted burst BEFORE emitting (a
+        # finishing _emit releases the slot and resets its length)
+        final = base.copy()
+        for slot in eng.running:
+            final[slot] = base[slot] + (1 if slot in self.pending
+                                        else int(nem[slot]))
+        if eng.paged:
+            for slot in eng.running:
+                eng.slots.trim(slot, int(final[slot]))
+            eng.slots.lengths = final
+        else:
+            eng.slots.lengths = jnp.asarray(final)
+        for slot, req in list(eng.running.items()):
+            if slot in self.pending:
+                self.pending[slot] += 1
+                if self.pending[slot] >= len(req.prompt):
+                    del self.pending[slot]
+                    self._store_prompt(slot, req)
+                    self._emit(slot, req, int(out[slot, 0]))
+                continue
+            n = int(nem[slot])
+            emitted = 0
+            for t in range(n):
+                self._emit(slot, req, int(out[slot, t]))
+                emitted += 1
+                if req.done:
+                    break  # EOS/budget mid-burst: drop the tail
+            eng.metrics.speculative(int(nd[slot]), n - 1, emitted)
+
     # ------------------------------------------------------------ lifecycle
     def _store_prompt(self, slot: int, req):
         """Index this prompt's KV (from its slot, before any generated
@@ -473,6 +617,7 @@ class ChunkedPrefillScheduler:
             self.pending.pop(slot, None)
             self._admit_order.pop(slot, None)
             self._release_adapter(slot, req)
+            self._release_drafter(slot)
             if self.prefix_cache is not None:
                 nodes = self._locked.pop(req.request_id, None)
                 if nodes:

@@ -1,0 +1,200 @@
+"""Draft-token sources for speculative decoding.
+
+The engine breaks the one-token-per-launch decode bound by *drafting* up
+to k candidate continuations per running sequence, scoring all of them
+in one multi-token target launch (``M.verify_step`` /
+``M.verify_step_paged``), and keeping the longest accepted prefix via
+distribution-preserving rejection sampling
+(``sampling.spec_accept_batched``).  Two draft sources sit behind one
+interface:
+
+- :class:`NGramDrafter` — prompt-lookup decoding: candidate
+  continuations are read out of the request's *own* prompt + generated
+  tokens (the longest suffix n-gram that occurred earlier predicts the
+  tokens that followed it).  No extra model, no extra launches — free
+  wins on code/RAG/summarisation workloads where outputs quote inputs.
+- :class:`DraftModelDrafter` — a small compatible model (same
+  tokenizer/vocab, e.g. qwen1_5_4b drafting for qwen2_5_32b) runs its
+  own KV cache per slot and autoregressively proposes k tokens; its
+  per-token distributions are reported as the rejection-sampling
+  ``q`` so acceptance stays exact for any temperature.
+
+A drafter proposes *per slot*; its state must be dropped when the slot
+turns over (finish/preempt) via :meth:`release` — the scheduler calls it
+wherever the slot's adapter pin is released.
+
+Correctness contract: drafts are suggestions only.  The accept/reject
+step guarantees the emitted-token distribution equals the target
+model's (greedy outputs are token-identical to the non-speculative
+engine), so a bad drafter can only cost speed, never change tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.scheduler import _bucket
+
+
+class Drafter:
+    """Interface: ``propose`` returns up to ``k`` draft tokens for one
+    slot plus the (n, vocab_padded) distribution each was sampled from
+    — or ``None`` when ``deterministic`` is set, in which case the
+    accept/reject jit builds the one-hot ``q`` from the token ids
+    itself (no dense (B,k,V) host buffer on the decode hot path)."""
+
+    name = "none"
+    deterministic = False
+
+    def propose(self, slot: int, context: Sequence[int], k: int,
+                temperature: float) -> Tuple[List[int],
+                                             Optional[np.ndarray]]:
+        raise NotImplementedError
+
+    def release(self, slot: int) -> None:
+        """Forget per-slot state (slot finished / preempted)."""
+
+
+class NGramDrafter(Drafter):
+    """Prompt-lookup drafter (deterministic, model-free).
+
+    Finds the longest suffix n-gram (``min_n <= n <= max_n``) of the
+    context that also occurs earlier in the context, preferring the most
+    recent earlier occurrence, and proposes the tokens that followed it.
+    The scan is O(len * max_n) per call — fine at serving prompt sizes,
+    and stateless so preemption/slot-turnover needs no bookkeeping.
+    """
+
+    name = "ngram"
+    deterministic = True
+
+    def __init__(self, vocab_padded: int, max_n: int = 3, min_n: int = 1):
+        self.vocab = vocab_padded
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, slot, context, k, temperature):
+        ctx = list(context)
+        drafts: List[int] = []
+        for n in range(min(self.max_n, len(ctx) - 1), self.min_n - 1, -1):
+            pat = tuple(ctx[-n:])
+            for i in range(len(ctx) - n - 1, -1, -1):
+                if tuple(ctx[i:i + n]) == pat:
+                    drafts = ctx[i + n:i + n + k]
+                    break
+            if drafts:
+                break
+        return drafts, None  # deterministic: q is one-hot, built in-jit
+
+
+class DraftModelDrafter(Drafter):
+    """Small-model drafter with a per-slot dense KV cache.
+
+    The draft model replays exactly the tokens the target has committed:
+    per ``propose`` it (a) catches its cache up on the tokens emitted
+    since the last round — one multi-token :func:`~repro.models.model.
+    verify_step` launch over the delta (at most k+1 tokens) — then (b)
+    autoregressively decodes ``k`` draft tokens, recording the
+    distribution each was sampled from.  Draft-token KV written past the
+    committed context is *not* rolled back: K/V at a position depend
+    only on that position's token, so the next round's delta overwrites
+    accepted positions with identical values and rejected positions
+    with the corrected token's values.
+    """
+
+    name = "draft"
+
+    def __init__(self, cfg, params, capacity: int, seed: int = 0):
+        from repro.models import model as M
+        self.cfg, self.params = cfg, params
+        self.capacity = capacity
+        self._M = M
+        self._state: Dict[int, Dict] = {}
+        self._rng = np.random.default_rng(seed)
+        self._prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
+        self._verify = jax.jit(
+            lambda p, t, c, l: M.verify_step(cfg, p, t, c, l))
+        self._decode = jax.jit(
+            lambda p, t, c, l: M.decode_step(cfg, p, t, c, l))
+
+    def _sync(self, slot: int, context: Sequence[int]):
+        """Write KV for every context token not yet in the slot's draft
+        cache; returns next-token logits (1, V) at the context end."""
+        M = self._M
+        st = self._state.get(slot)
+        n = len(context)
+        if st is None or st["n"] >= n:
+            # fresh slot (or an impossible shrink — be safe): prefill
+            pad = _bucket(n)
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :n] = context
+            batch = {"tokens": jnp.asarray(toks),
+                     "prompt_lengths": jnp.asarray([n], jnp.int32)}
+            logits, cache, _ = self._prefill(self.params, batch)
+            cache = jax.tree.map(lambda a: a.astype(jnp.bfloat16),
+                                 M.pad_cache(self.cfg, cache, self.capacity))
+            st = {"cache": cache, "n": n}
+            self._state[slot] = st
+            return logits, st
+        delta = list(context[st["n"]:])
+        lg, st["cache"] = self._verify(
+            self.params, jnp.asarray([delta], jnp.int32), st["cache"],
+            jnp.asarray([n], jnp.int32))
+        st["n"] = n
+        return lg[:, -1], st
+
+    def propose(self, slot, context, k, temperature):
+        logits, st = self._sync(slot, context)
+        Vp = logits.shape[-1]
+        drafts: List[int] = []
+        probs: List[np.ndarray] = []
+        cache, ln, l = st["cache"], st["n"], logits
+        for _ in range(k):
+            lv = np.asarray(l[0], np.float32)
+            if temperature <= 0.0:
+                tok = int(np.argmax(lv))
+                pr = np.zeros((Vp,), np.float32)
+                pr[tok] = 1.0
+            else:
+                x = lv / temperature
+                x -= x.max()
+                e = np.exp(x)
+                pr = (e / e.sum()).astype(np.float32)
+                tok = int(self._rng.choice(Vp, p=pr / pr.sum()))
+            drafts.append(tok)
+            probs.append(pr)
+            ln += 1
+            l, cache = self._decode(self.params,
+                                    jnp.asarray([[tok]], jnp.int32), cache,
+                                    jnp.asarray([ln], jnp.int32))
+        st["cache"] = cache  # tail holds draft KV; next delta overwrites
+        return drafts, (np.stack(probs) if probs
+                        else np.zeros((0, Vp), np.float32))
+
+    def release(self, slot):
+        self._state.pop(slot, None)
+
+
+def make_drafter(kind: Optional[str], cfg, *, spec_k: int, capacity: int,
+                 draft_cfg=None, draft_params=None) -> Optional[Drafter]:
+    """Engine-facing factory.  ``kind``: None | "ngram" | "draft"."""
+    if not kind:
+        return None
+    if kind == "ngram":
+        return NGramDrafter(cfg.vocab_padded)
+    if kind == "draft":
+        if draft_cfg is None or draft_params is None:
+            raise ValueError("speculative='draft' needs draft_cfg and "
+                             "draft_params")
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft model vocab ({draft_cfg.vocab_size}) must match "
+                f"the target's ({cfg.vocab_size})")
+        # the draft cache must hold context + k draft tokens
+        return DraftModelDrafter(draft_cfg, draft_params,
+                                 capacity=capacity + spec_k + 1)
+    raise ValueError(f"unknown speculative drafter {kind!r} "
+                     "(expected 'ngram' or 'draft')")

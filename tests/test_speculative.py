@@ -1,0 +1,494 @@
+"""Speculative decoding: rejection-sampling properties (greedy equals
+baseline exactly, acceptance preserves the target distribution, k=0
+degenerates to the plain engine), drafter units, engine token-identity
+across drafters/architectures/KV layouts, rollback block accounting,
+and the multi-query paged verify kernel's parity with its oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.kernels.paged_attention.kernel import (paged_decode_attention,
+                                                  paged_verify_attention)
+from repro.kernels.paged_attention.ref import paged_verify_ref
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.kvcache import PagedCacheSlots
+from repro.serving.sampling import filter_logits, spec_accept_batched
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.speculative import NGramDrafter, make_drafter
+
+
+@pytest.fixture(scope="module")
+def served(tiny_cfg):
+    return tiny_cfg, M.init(tiny_cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def served_mla():
+    cfg = scaled_down(get_config("deepseek-v2-lite-16b"), num_layers=2,
+                      d_model=64, d_ff=128, vocab_size=128, num_heads=4)
+    return cfg, M.init(cfg, jax.random.PRNGKey(1))
+
+
+def _spec_prompts(rng, vocab, n=4, reps=3, tail=2):
+    """Repetitive prompts (pattern * reps + unique tail): the n-gram
+    drafter finds suffix matches, so acceptance is exercised for real."""
+    pat = list(map(int, rng.integers(1, vocab - 1, 6)))
+    return [pat * reps + list(map(int, rng.integers(1, vocab - 1, tail)))
+            for _ in range(n)]
+
+
+def _run(cfg, params, prompts, gen=8, temperature=0.0, seed=0, **kw):
+    eng = InferenceEngine(cfg, params, max_batch=3, capacity=128, seed=seed,
+                          sched=SchedulerConfig(prefix_block=4,
+                                                prefill_chunk=8), **kw)
+    reqs = [Request(prompt=list(p), max_new_tokens=gen,
+                    temperature=temperature) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    summary = eng.run_until_idle()
+    return [r.generated for r in reqs], summary, eng
+
+
+# ----------------------------------------------------- accept/reject unit
+def test_spec_accept_greedy_cascade_exact():
+    """Greedy rows accept drafts by exact argmax match and emit the
+    correction (or bonus) token — deterministically."""
+    V, k = 8, 3
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((1, k + 1, V)), jnp.float32)
+    gm = np.asarray(jnp.argmax(logits[0], -1))
+    # drafts: first two match argmax, third does not
+    toks = jnp.asarray([[1, gm[0], gm[1], (gm[2] + 1) % V]], jnp.int32)
+    out, ne = spec_accept_batched(
+        logits, toks, jnp.zeros((1, k, V)), jnp.asarray([k]),
+        jax.random.PRNGKey(0), jnp.zeros(1), jnp.zeros(1, jnp.int32),
+        jnp.ones(1), True)
+    assert int(ne[0]) == 3
+    assert list(np.asarray(out[0, :3])) == [int(gm[0]), int(gm[1]),
+                                            int(gm[2])]
+    # all-accept: the bonus token from the last position rides along
+    toks = jnp.asarray([[1, gm[0], gm[1], gm[2]]], jnp.int32)
+    out, ne = spec_accept_batched(
+        logits, toks, jnp.zeros((1, k, V)), jnp.asarray([k]),
+        jax.random.PRNGKey(0), jnp.zeros(1), jnp.zeros(1, jnp.int32),
+        jnp.ones(1), True)
+    assert int(ne[0]) == 4 and int(out[0, 3]) == int(gm[3])
+    # n_draft = 0 degenerates to one plain argmax sample
+    out, ne = spec_accept_batched(
+        logits, toks, jnp.zeros((1, k, V)), jnp.asarray([0]),
+        jax.random.PRNGKey(0), jnp.zeros(1), jnp.zeros(1, jnp.int32),
+        jnp.ones(1), True)
+    assert int(ne[0]) == 1 and int(out[0, 0]) == int(gm[0])
+
+
+def test_spec_accept_preserves_target_distribution():
+    """Statistical property (the speculative-sampling theorem): whatever
+    the draft distribution q, the emitted-token marginal equals the
+    (temperature-filtered) target p — position 0 unconditionally, and
+    position 1 on the rows that accepted draft 0."""
+    V, k, B, temp = 6, 2, 120_000, 0.7
+    T = k + 1
+    rng = np.random.default_rng(0)
+    logits1 = jnp.asarray(rng.standard_normal((T, V)) * 1.5, jnp.float32)
+    q1 = jax.nn.softmax(
+        logits1[:k] + jnp.asarray(rng.standard_normal((k, V)), jnp.float32),
+        -1)
+    kd, ka = jax.random.split(jax.random.PRNGKey(7))
+    d = jnp.stack([jax.random.categorical(
+        jax.random.fold_in(kd, t),
+        jnp.broadcast_to(jnp.log(q1[t]), (B, V))) for t in range(k)], 1)
+    toks = jnp.concatenate(
+        [jnp.ones((B, 1), jnp.int32), d.astype(jnp.int32)], 1)
+    out, ne = spec_accept_batched(
+        jnp.broadcast_to(logits1, (B, T, V)), toks,
+        jnp.broadcast_to(q1, (B, k, V)), jnp.full((B,), k, jnp.int32),
+        ka, jnp.full((B,), temp), jnp.zeros((B,), jnp.int32),
+        jnp.ones((B,)), False)
+    out, ne = np.asarray(out), np.asarray(ne)
+    p0 = np.asarray(jax.nn.softmax(logits1[0] / temp))
+    emp0 = np.bincount(out[:, 0], minlength=V) / B
+    assert np.abs(emp0 - p0).max() < 0.01, emp0
+    mask = ne >= 2
+    p1 = np.asarray(jax.nn.softmax(logits1[1] / temp))
+    emp1 = np.bincount(out[mask, 1], minlength=V) / mask.sum()
+    assert np.abs(emp1 - p1).max() < 0.015, emp1
+    # sanity: both accept and reject paths were exercised
+    assert 0.05 < float(mask.mean()) < 0.95
+
+
+def test_spec_accept_filters_match_sample_batched():
+    """The cascade scores drafts against the same filtered target
+    distribution sample_batched draws from (top-k here): a draft outside
+    the top-k set has p(d) = 0 and must always be rejected."""
+    V, k = 8, 1
+    logits = jnp.asarray([[[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]] * 2],
+                         jnp.float32)
+    lf = filter_logits(logits[0, :1], jnp.asarray([1.0]),
+                       jnp.asarray([2], jnp.int32), jnp.asarray([1.0]))
+    keep = np.asarray(lf[0]) > -1e29
+    assert keep.sum() == 2 and keep[6] and keep[7]
+    worst = jnp.asarray([[1, 0]], jnp.int32)      # draft far below top-2
+    q = jnp.zeros((1, k, V)).at[0, 0, 0].set(1.0)
+    for s in range(16):
+        out, ne = spec_accept_batched(
+            logits, worst, q, jnp.asarray([k]), jax.random.PRNGKey(s),
+            jnp.asarray([1.0]), jnp.asarray([2], jnp.int32),
+            jnp.ones(1), False)
+        assert int(ne[0]) == 1          # always rejected...
+        assert int(out[0, 0]) in (6, 7)  # ...and resampled inside top-k
+
+
+# ----------------------------------------------------------- drafter units
+def test_ngram_drafter_suffix_lookup():
+    d = NGramDrafter(vocab_padded=64, max_n=3, min_n=1)
+    assert d.deterministic   # q is one-hot, built inside the accept jit
+    # ... 7 8 9 | 5 6 [7 8 9] -> continuation after the earlier [7 8 9]
+    ctx = [1, 7, 8, 9, 5, 6, 7, 8, 9]
+    drafts, probs = d.propose(0, ctx, k=3, temperature=0.0)
+    assert drafts == [5, 6, 7]
+    assert probs is None
+    # no earlier occurrence of any suffix n-gram: nothing proposed
+    drafts, probs = d.propose(0, [1, 2, 3, 4, 5], k=3, temperature=0.0)
+    assert drafts == [] and probs is None
+    # most recent earlier match wins
+    ctx = [7, 1, 7, 2, 7]
+    drafts, _ = d.propose(0, ctx, k=1, temperature=0.0)
+    assert drafts == [2]
+
+
+def test_spec_accept_onehot_q_built_in_jit():
+    """draft_probs=None (deterministic drafter) must behave exactly like
+    passing the explicit one-hot distributions."""
+    V, k, B = 8, 2, 64
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.standard_normal((B, k + 1, V)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, V, (B, k + 1)), jnp.int32)
+    onehot = jax.nn.one_hot(toks[:, 1:], V, dtype=jnp.float32)
+    args = (jnp.full((B,), k, jnp.int32), jax.random.PRNGKey(3),
+            jnp.full((B,), 0.9), jnp.zeros((B,), jnp.int32),
+            jnp.ones((B,)), False)
+    out_a, ne_a = spec_accept_batched(logits, toks, None, *args)
+    out_b, ne_b = spec_accept_batched(logits, toks, onehot, *args)
+    assert np.array_equal(np.asarray(out_a), np.asarray(out_b))
+    assert np.array_equal(np.asarray(ne_a), np.asarray(ne_b))
+
+
+def test_draft_model_drafter_replays_target_context(served):
+    """The draft-model drafter's proposals given a context equal running
+    the draft model itself over that context (greedy): its per-slot KV
+    catch-up (prefill, then multi-token verify deltas) is exact."""
+    cfg, params = served
+    dr = make_drafter("draft", cfg, spec_k=3, capacity=64,
+                      draft_cfg=cfg, draft_params=params)
+    ctx = [5, 9, 3, 7, 2, 11]
+    drafts, probs = dr.propose(0, ctx, 3, 0.0)
+    # reference: plain prefill + greedy decode of the same model
+    b = {"tokens": jnp.asarray([ctx], jnp.int32),
+         "prompt_lengths": jnp.asarray([len(ctx)], jnp.int32)}
+    logits, cache, _ = M.prefill(cfg, params, b)
+    cache = jax.tree.map(lambda a: a.astype(jnp.bfloat16),
+                         M.pad_cache(cfg, cache, 64))
+    want, L = [], len(ctx)
+    for _ in range(3):
+        t = int(jnp.argmax(logits[0]))
+        want.append(t)
+        L += 1
+        logits, cache = M.decode_step(cfg, params,
+                                      jnp.asarray([[t]], jnp.int32), cache,
+                                      jnp.asarray([L], jnp.int32))
+    assert drafts == want
+    assert probs.shape[0] == 3 and np.all(probs.sum(-1) > 0.99)
+    # second round: catch-up over the emitted delta, same property
+    ctx2 = ctx + want + [4]
+    drafts2, _ = dr.propose(0, ctx2, 2, 0.0)
+    # rebuild reference from scratch for ctx2 (cheap, unambiguous)
+    b = {"tokens": jnp.asarray([ctx2], jnp.int32),
+         "prompt_lengths": jnp.asarray([len(ctx2)], jnp.int32)}
+    logits, cache, _ = M.prefill(cfg, params, b)
+    cache = jax.tree.map(lambda a: a.astype(jnp.bfloat16),
+                         M.pad_cache(cfg, cache, 64))
+    want2, L = [], len(ctx2)
+    for _ in range(2):
+        t = int(jnp.argmax(logits[0]))
+        want2.append(t)
+        L += 1
+        logits, cache = M.decode_step(cfg, params,
+                                      jnp.asarray([[t]], jnp.int32), cache,
+                                      jnp.asarray([L], jnp.int32))
+    assert drafts2 == want2
+    dr.release(0)
+    assert not dr._state
+
+
+def test_drafter_factory_validates():
+    cfg = scaled_down(get_config("qwen1.5-4b"), num_layers=2, d_model=64,
+                      d_ff=128, vocab_size=128, num_heads=4,
+                      num_kv_heads=2, head_dim=16)
+    assert make_drafter(None, cfg, spec_k=4, capacity=64) is None
+    with pytest.raises(ValueError):
+        make_drafter("draft", cfg, spec_k=4, capacity=64)  # no draft model
+    with pytest.raises(ValueError):
+        bad = scaled_down(get_config("qwen1.5-4b"), num_layers=1,
+                          d_model=32, d_ff=64, vocab_size=64, num_heads=2,
+                          num_kv_heads=1, head_dim=16)
+        make_drafter("draft", cfg, spec_k=4, capacity=64, draft_cfg=bad,
+                     draft_params={})
+    with pytest.raises(ValueError):
+        make_drafter("huh", cfg, spec_k=4, capacity=64)
+
+
+# --------------------------------------------------- engine token identity
+def test_spec_ngram_paged_gqa_token_identical(served):
+    cfg, params = served
+    rng = np.random.default_rng(3)
+    prompts = _spec_prompts(rng, cfg.vocab_size)
+    base, _, _ = _run(cfg, params, prompts, gen=10)
+    spec, s, eng = _run(cfg, params, prompts, gen=10,
+                        speculative="ngram", spec_k=3)
+    assert eng.paged
+    assert spec == base
+    assert s["spec_acceptance_rate"] > 0       # repetitive prompts hit
+    assert s["spec_tokens_per_launch"] > 1.0
+    # rollback accounting: no leaked pool blocks after drain (the only
+    # remaining refs are the radix tree's stored prompt nodes)
+    assert eng.slots.bp.num_used == eng.scheduler.prefix_cache.n_nodes
+    assert not eng.slots.slot_owner
+
+
+def test_spec_ngram_paged_mla_token_identical(served_mla):
+    cfg, params = served_mla
+    assert M.supports_speculative(cfg)
+    rng = np.random.default_rng(5)
+    prompts = _spec_prompts(rng, cfg.vocab_size, n=3)
+    base, _, _ = _run(cfg, params, prompts, gen=8)
+    spec, s, eng = _run(cfg, params, prompts, gen=8,
+                        speculative="ngram", spec_k=3)
+    assert eng.paged
+    assert spec == base
+    assert s["spec_acceptance_rate"] > 0
+
+
+def test_spec_dense_layout_token_identical(served):
+    """Speculation also runs on the dense per-slot KV layout (rollback is
+    a pure length shrink there — no block accounting)."""
+    cfg, params = served
+    rng = np.random.default_rng(7)
+    prompts = _spec_prompts(rng, cfg.vocab_size, n=3)
+    base, _, _ = _run(cfg, params, prompts, gen=8, paged=False)
+    spec, s, _ = _run(cfg, params, prompts, gen=8, paged=False,
+                      speculative="ngram", spec_k=3)
+    assert spec == base
+    assert s["spec_acceptance_rate"] > 0
+
+
+def test_spec_draft_model_token_identical(served):
+    """Draft-model drafter end-to-end: a self-draft (target drafting for
+    itself) must accept ~everything; a random-init draft accepts ~nothing
+    — but both are token-identical to the baseline, because accept/
+    reject guarantees correctness regardless of draft quality."""
+    cfg, params = served
+    rng = np.random.default_rng(11)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size - 1, 5)))
+               for _ in range(3)]
+    base, _, _ = _run(cfg, params, prompts, gen=8)
+    good, sg, _ = _run(cfg, params, prompts, gen=8, speculative="draft",
+                       spec_k=3, draft_cfg=cfg, draft_params=params)
+    assert good == base
+    assert sg["spec_acceptance_rate"] > 0.9
+    bad_cfg = scaled_down(get_config("qwen1.5-4b"), num_layers=1,
+                          d_model=32, d_ff=64, vocab_size=cfg.vocab_size,
+                          num_heads=2, num_kv_heads=1, head_dim=16)
+    bad_params = M.init(bad_cfg, jax.random.PRNGKey(99))
+    bad, sb, _ = _run(cfg, params, prompts, gen=8, speculative="draft",
+                      spec_k=3, draft_cfg=bad_cfg, draft_params=bad_params)
+    assert bad == base
+    assert sb["spec_acceptance_rate"] < sg["spec_acceptance_rate"]
+
+
+def test_spec_k0_degenerates_to_plain_engine(served):
+    """spec_k=0 is the plain engine: one token per launch, tokens
+    identical, tokens-per-launch exactly 1."""
+    cfg, params = served
+    rng = np.random.default_rng(13)
+    prompts = _spec_prompts(rng, cfg.vocab_size, n=3)
+    base, _, _ = _run(cfg, params, prompts, gen=6)
+    spec, s, _ = _run(cfg, params, prompts, gen=6,
+                      speculative="ngram", spec_k=0)
+    assert spec == base
+    assert s["spec_tokens_per_launch"] == 1.0
+
+
+def test_spec_sampled_mode_runs_and_respects_budget(served):
+    """temperature > 0: no token-identity claim (RNG streams differ),
+    but every request completes with exactly its budget, EOS semantics
+    hold, and acceptance counters are sane."""
+    cfg, params = served
+    rng = np.random.default_rng(17)
+    prompts = _spec_prompts(rng, cfg.vocab_size, n=4)
+    outs, s, eng = _run(cfg, params, prompts, gen=9, temperature=0.8,
+                        speculative="ngram", spec_k=3, seed=42)
+    assert all(len(o) == 9 for o in outs)
+    assert s["completed"] == 4
+    assert 0.0 <= s["spec_acceptance_rate"] <= 1.0
+    assert 1.0 <= s["spec_tokens_per_launch"] <= 4.0
+    assert eng.slots.bp.num_used == eng.scheduler.prefix_cache.n_nodes
+
+
+def test_spec_unsupported_arch_rejected():
+    cfg = scaled_down(get_config("mamba2-1.3b"))
+    assert not M.supports_speculative(cfg)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        InferenceEngine(cfg, params, speculative="ngram")
+
+
+@pytest.mark.parametrize("arch,overrides", [
+    ("qwen1.5-4b", dict(num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                        num_heads=4, num_kv_heads=2, head_dim=16)),
+    ("deepseek-v2-lite-16b", dict(num_layers=2, d_model=64, d_ff=128,
+                                  vocab_size=128, num_heads=4)),
+])
+def test_spec_multi_lora_token_identical(arch, overrides):
+    """Speculation composes with multi-LoRA: adapter'd rows thread their
+    per-row shifts through the multi-token verify (GQA projections and
+    MLA's absorbed-weight formulation alike), token-identically to the
+    non-speculative multi-LoRA engine."""
+    from repro.finetune.lora import LoraConfig, lora_init, lora_randomize
+    cfg = scaled_down(get_config(arch), **overrides)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    lcfg = LoraConfig(rank=4)
+    ad = lora_randomize(lora_init(params, lcfg, jax.random.PRNGKey(10)),
+                        jax.random.PRNGKey(20))
+    rng = np.random.default_rng(9)
+    prompts = _spec_prompts(rng, cfg.vocab_size, n=3)
+
+    def run(**kw):
+        eng = InferenceEngine(cfg, params, max_batch=3, capacity=128,
+                              adapter_slots=2,
+                              sched=SchedulerConfig(prefix_block=4,
+                                                    prefill_chunk=8), **kw)
+        eng.register_adapter("t0", ad, lcfg)
+        reqs = [Request(prompt=list(p), max_new_tokens=8,
+                        adapter="t0" if i % 2 else "")
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        s = eng.run_until_idle()
+        return [r.generated for r in reqs], s
+
+    base, _ = run()
+    spec, s = run(speculative="ngram", spec_k=3)
+    assert spec == base
+    assert s["spec_acceptance_rate"] > 0
+
+
+# ----------------------------------------------------- rollback accounting
+def test_paged_trim_frees_tail_blocks(tiny_cfg):
+    slots = PagedCacheSlots(tiny_cfg, max_batch=2, capacity=64,
+                            block_size=8)
+    s = slots.allocate("r0")
+    assert slots.ensure_capacity(s, 30)          # 4 blocks
+    held = slots.block_ids(s)
+    slots.trim(s, 17)                            # 3 blocks suffice
+    assert slots.block_ids(s) == held[:3]
+    assert held[3] not in slots.bp.refs
+    assert slots.tables[s, 3] == 0
+    slots.trim(s, 17)                            # idempotent
+    assert slots.block_ids(s) == held[:3]
+    # shared (adopted) blocks are never trimmed: length floor covers them
+    s2 = slots.allocate("r1")
+    slots.adopt_prefix(s2, held[:2], 16)
+    slots.ensure_capacity(s2, 20)
+    slots.trim(s2, 17)
+    assert slots.bp.refs[held[0]] == 2 and slots.bp.refs[held[1]] == 2
+    slots.release(s)
+    slots.release(s2)
+    assert slots.bp.num_used == 0
+
+
+def test_spec_preemption_under_pool_pressure(served):
+    """Speculative growth (+k+1 blocks per slot per step) under a small
+    pool: preemption + requeue still resumes token-exactly."""
+    cfg, params = served
+    rng = np.random.default_rng(19)
+    prompts = _spec_prompts(rng, cfg.vocab_size, n=4)
+    base, _, _ = _run(cfg, params, prompts, gen=10)
+    spec, s, eng = _run(cfg, params, prompts, gen=10, speculative="ngram",
+                        spec_k=3, pool_tokens=160)
+    assert spec == base
+    assert not eng.slots.slot_owner
+
+
+# ----------------------------------------------- multi-query verify kernel
+def _paged_layout(k, v, bs, seed=0, extra_blocks=3):
+    B, S, KV, D = k.shape
+    W = S // bs
+    nb = 1 + B * W + extra_blocks
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(np.arange(1, nb))[:B * W]
+    kp = np.zeros((nb, bs, KV, D), np.float32)
+    vp = np.zeros((nb, bs, KV, D), np.float32)
+    bt = np.zeros((B, W), np.int32)
+    it = iter(ids)
+    for b in range(B):
+        for j in range(W):
+            pid = int(next(it))
+            kp[pid] = np.asarray(k[b, j * bs:(j + 1) * bs])
+            vp[pid] = np.asarray(v[b, j * bs:(j + 1) * bs])
+            bt[b, j] = pid
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("B,KV,G,W,bs,D,T", [
+    (2, 2, 2, 4, 16, 64, 4),
+    (3, 1, 8, 3, 32, 32, 3),      # MQA-style wide groups
+    (1, 2, 2, 4, 8, 32, 5),       # tail spans a block boundary
+    (2, 2, 1, 2, 64, 16, 1),      # T=1: single-query degenerate case
+])
+def test_paged_verify_kernel_matches_oracle(B, KV, G, W, bs, D, T):
+    H = KV * G
+    S = W * bs
+    rng = np.random.default_rng(B * 100 + T)
+    q = jnp.asarray(rng.standard_normal((B, T, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    lens = [S, max(T + 1, S - bs // 2 - 1), max(T, S // 2)][:B]
+    lengths = jnp.asarray(lens + [S] * (B - len(lens)), jnp.int32)[:B]
+    kp, vp, bt = _paged_layout(k, v, bs, seed=B)
+    got = paged_verify_attention(q, kp, vp, bt, lengths, interpret=True)
+    want = paged_verify_ref(q, kp, vp, bt, lengths)
+    assert got.shape == (B, T, H, D)
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+    if T == 1:
+        dec = paged_decode_attention(q[:, 0], kp, vp, bt, lengths,
+                                     interpret=True)
+        assert float(jnp.max(jnp.abs(got[:, 0] - dec))) < 1e-6
+
+
+def test_verify_step_matches_sequential_decode(served):
+    """Model-level contract: one verify_step launch over a T-token tail
+    produces (bit-for-bit on GQA) the same logits as T sequential
+    decode_steps — the exactness speculative acceptance relies on."""
+    cfg, params = served
+    prompt = [5, 9, 3, 7, 2]
+    b = {"tokens": jnp.asarray([prompt], jnp.int32),
+         "prompt_lengths": jnp.asarray([len(prompt)], jnp.int32)}
+    logits, cache, _ = M.prefill(cfg, params, b)
+    cache = jax.tree.map(lambda a: a.astype(jnp.bfloat16),
+                         M.pad_cache(cfg, cache, 64))
+    toks, L, seq = [int(jnp.argmax(logits[0]))], len(prompt), []
+    c = cache
+    for _ in range(4):
+        L += 1
+        lg, c = M.decode_step(cfg, params,
+                              jnp.asarray([[toks[-1]]], jnp.int32), c,
+                              jnp.asarray([L], jnp.int32))
+        seq.append(np.asarray(lg[0]))
+        toks.append(int(jnp.argmax(lg[0])))
+    vlog, _ = M.verify_step(cfg, params, jnp.asarray([toks[:4]], jnp.int32),
+                            cache, jnp.asarray([len(prompt) + 4], jnp.int32))
+    v = np.asarray(vlog[0])
+    assert max(float(np.max(np.abs(v[t] - seq[t]))) for t in range(4)) == 0.0

@@ -179,14 +179,21 @@ def test_trainer_failure_restart(tmp_path, tiny_cfg):
             raise SimulatedNodeFailure(step)
 
     tr = Trainer(tiny_cfg, OptConfig(lr=1e-2), data,
-                 TrainerConfig(num_steps=16, ckpt_every=4,
+                 TrainerConfig(num_steps=32, ckpt_every=4,
                                ckpt_dir=str(tmp_path), log_every=4),
                  failure_injector=inject)
     res = tr.run()
     assert res["restarts"] == 2
-    assert res["final_step"] == 16
+    assert res["final_step"] == 32
     losses = [m["loss"] for m in res["log"]]
-    assert losses[-1] < losses[0]
+    # convergence bound: at this scale (2-layer d=64, lr=1e-2, batch
+    # 4x16 tokens) per-sample loss oscillates by ~±0.3 for the first
+    # ~20 steps, so single-sample early-vs-late comparisons flip sign
+    # across jax versions; 3-sample means over a 32-step run separate
+    # by ~0.35 deterministically.  The convergence signal proper is
+    # this mean gap; the restart/final_step asserts above are what the
+    # test is actually about (fault tolerance).
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.05
 
 
 def test_straggler_detector_flags_persistent_only():

@@ -3,9 +3,11 @@
 
 Checks every relative link target in the given markdown files (default:
 root README.md, docs/**/*.md, and every */README.md in the repo)
-resolves to an existing file or directory.  External (http/https/
-mailto) and pure-anchor links are skipped; anchors on relative links
-are stripped before the existence check.
+resolves to an existing file or directory, and that anchors — both
+pure in-page ``#section`` links and ``file.md#section`` fragments on
+relative links to markdown files — name a real heading in the target
+file (GitHub slug rules: lowercase, punctuation dropped, spaces to
+dashes).  External (http/https/mailto) links are skipped.
 
     python tools/check_md_links.py [files...]
 """
@@ -19,7 +21,28 @@ import sys
 # inline links/images: [text](target) — tolerates one level of nested
 # brackets in the text; reference-style links are not used in this repo
 LINK_RE = re.compile(r"!?\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^()\s]+)(?:\s+\"[^\"]*\")?\)")
-SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code markers,
+    lowercase, drop punctuation, spaces -> dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip())
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)   # linked headings
+    h = h.lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set:
+    try:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    except OSError:
+        return set()
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
 
 
 def default_files(root: str) -> list:
@@ -39,13 +62,22 @@ def check_file(path: str) -> list:
         target = m.group(1)
         if target.startswith(SKIP_PREFIXES):
             continue
-        rel = target.split("#", 1)[0]
+        rel, _, anchor = target.partition("#")
         if not rel:
+            # in-page anchor: must name a heading in THIS file
+            if anchor and github_slug(anchor) not in heading_slugs(path):
+                errors.append(f"{os.path.relpath(path)}: broken anchor "
+                              f"'#{anchor}' (no such heading)")
             continue
         resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
         if not os.path.exists(resolved):
             errors.append(f"{os.path.relpath(path)}: broken link "
                           f"'{target}' -> {os.path.relpath(resolved)}")
+        elif anchor and resolved.endswith(".md") \
+                and github_slug(anchor) not in heading_slugs(resolved):
+            errors.append(f"{os.path.relpath(path)}: broken anchor "
+                          f"'{target}' (no heading '#{anchor}' in "
+                          f"{os.path.relpath(resolved)})")
     return errors
 
 
