@@ -44,7 +44,7 @@ from __future__ import annotations
 import argparse
 import itertools
 import json
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -370,6 +370,229 @@ def speculative_rows(smoke: bool = False) -> List[str]:
     return rows
 
 
+def observability_rows(smoke: bool = False) -> List[str]:
+    """ISSUE 6 acceptance: lifecycle observability through the full
+    gateway -> engine -> scheduler stack, plus an instrumentation
+    overhead A/B.
+
+    (a) a multi-tenant mix runs through a ``Gateway(obs=...)``; one
+        ``collect_metrics`` snapshot must carry scheduler, KV-pool,
+        prefix-cache, serving-latency, and per-tenant gateway series in
+        Prometheus text form;
+    (b) the Perfetto trace must round-trip ``json.loads`` and
+        reconstruct at least one request's full lifecycle
+        (queued -> prefill -> decode -> finish, in order, on one track);
+    (c) instrumentation must cost < 2% of the uninstrumented decode
+        tokens/s — measured by attribution (exact instrument-op counts
+        from an obs-on run x tight-loop per-op costs, over the obs-off
+        run time), because direct run-vs-run wall-clock deltas have a
+        +-5% null spread on a contended CI core.
+    The snapshot + trace are kept in ``_STATE`` so ``--json`` can write
+    them as sibling CI artifacts."""
+    import time
+
+    from repro.core.gateway import Gateway, ModelEntry
+    from repro.obs import Observability
+
+    cfg, params = _tiny()
+    sched = SchedulerConfig(prefill_chunk=32, prefix_block=8)
+    gen = 12 if smoke else 24
+    rng = np.random.default_rng(41)
+    system = list(map(int, rng.integers(1, 255, 24)))
+    prompts = [system + list(map(int, rng.integers(1, 255, 6)))
+               for _ in range(8)]
+
+    # (a)+(b): governed mix with obs attached
+    obs = Observability()
+    eng = InferenceEngine(cfg, params, max_batch=4, capacity=192,
+                          sched=sched, obs=obs)
+    gw = Gateway(obs=obs)
+    gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
+    gw.bind_endpoints(cfg.name, [eng])
+    keys = {p: gw.mint_key(p) for p in ("tenant-a", "tenant-b")}
+    rids = []
+    for i, p in enumerate(prompts):
+        proj = "tenant-a" if i % 2 == 0 else "tenant-b"
+        out = gw.completion(api_key=keys[proj].key, model=cfg.name,
+                            prompt=list(p), max_tokens=gen)
+        rids.append(out["id"])
+    gw.collect_metrics()
+    prom = obs.registry.to_prometheus()
+    lines = prom.splitlines()
+    subsystems = ("repro_sched_", "repro_kv_", "repro_prefix_",
+                  "repro_serving_", "repro_gateway_")
+    n_series = {}
+    for pre in subsystems:
+        # sample lines only (HELP/TYPE lines start with '#')
+        n_series[pre] = sum(1 for ln in lines if ln.startswith(pre))
+        assert n_series[pre] > 0, f"snapshot missing {pre}* series"
+    assert 'project="tenant-a"' in prom and 'project="tenant-b"' in prom, \
+        "per-tenant gateway accounting missing from snapshot"
+
+    trace_text = obs.tracer.to_json()
+    trace = json.loads(trace_text)            # must round-trip
+    ev = trace["traceEvents"]
+    tid_name = {e["tid"]: e["args"]["name"] for e in ev
+                if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    lifecycle_ok = 0
+    for rid in rids:
+        tids = [t for t, nm in tid_name.items() if nm == f"req {rid}"]
+        if not tids:
+            continue
+        spans = sorted((e["ts"], e["name"]) for e in ev
+                       if e.get("ph") == "X" and e["tid"] == tids[0])
+        names = [n for _, n in spans]
+        insts = [e["name"] for e in ev
+                 if e.get("ph") == "i" and e["tid"] == tids[0]]
+        if (names and names[0] == "queued" and "prefill" in names
+                and "decode" in names
+                and names.index("prefill") < names.index("decode")
+                and "finish" in insts):
+            lifecycle_ok += 1
+    assert lifecycle_ok == len(rids), (
+        f"only {lifecycle_ok}/{len(rids)} request lifecycles "
+        f"reconstructed from the trace")
+    _STATE["obs_artifacts"] = (prom, trace_text)
+
+    # (c): instrumentation overhead, obs on vs off.  Direct wall-clock
+    # A/B between two separate engine runs cannot resolve 2% on a
+    # contended CI core: a null experiment (off vs off, alternating
+    # order, median/min of 12 process_time runs each) still shows a
+    # +-5% spread, so any direct-delta assert at 2% is a coin flip.
+    # The overhead is therefore measured by ATTRIBUTION, which is exact
+    # and noise-robust:
+    #   1. run the instrumented engine once and count the instrument
+    #      ops it actually performed (span X-events + instants from the
+    #      trace; histogram observes, gauge sets, counter incs from
+    #      registry snapshot diffs — every push op is one of these);
+    #   2. microbenchmark each op in a tight loop (min of several
+    #      passes of process_time: contention noise is one-sided);
+    #   3. overhead = sum(count * cost) / uninstrumented run time.
+    # Noise enters only multiplicatively on an already-small ratio
+    # (+-10% on ~0.6% stays ~0.6%), instead of additively on a delta of
+    # two large numbers.  Both arms' measured tokens/s are reported
+    # alongside for reference, with a loose 25% sanity band.
+    import gc
+
+    from repro.obs.registry import MetricsRegistry
+    from repro.obs.tracer import Tracer
+    gen_ab = 48
+
+    def mk(obs_on: bool):
+        return InferenceEngine(cfg, params, max_batch=4, capacity=192,
+                               sched=SchedulerConfig(prefill_chunk=32,
+                                                     prefix_block=8),
+                               obs=Observability() if obs_on else None)
+
+    def run_once(e) -> Tuple[int, float]:
+        reqs = [Request(prompt=list(p), max_new_tokens=gen_ab)
+                for p in prompts]
+        for r in reqs:
+            e.submit(r)
+        gc.collect()
+        t0 = time.process_time()
+        e.run_until_idle()
+        dt = time.process_time() - t0
+        return sum(len(r.generated) for r in reqs), dt
+
+    e_off, e_on = mk(False), mk(True)
+    run_once(e_off), run_once(e_on)           # compile + cache warmup
+
+    # 1. op counts from one instrumented run (trace + snapshot diffs)
+    def ph_counts(tr):
+        evs = tr.to_perfetto()["traceEvents"]
+        return (sum(1 for e in evs if e.get("ph") == "X"),
+                sum(1 for e in evs if e.get("ph") in ("i", "C")))
+
+    o = e_on.obs
+    kinds = o.registry.kinds()
+    x0, i0 = ph_counts(o.tracer)
+    snap0 = o.registry.snapshot()
+    ntok, _ = run_once(e_on)
+    x1, i1 = ph_counts(o.tracer)
+    snap1 = o.registry.snapshot()
+
+    def series_kind(key):
+        return kinds.get(key.split("{", 1)[0], "gauge")
+
+    n_observe = n_inc = 0
+    tick_key = "repro_sched_tick_seconds"
+    for key, v1 in snap1.items():
+        v0 = snap0.get(key, {"count": 0} if isinstance(v1, dict) else 0.0)
+        if isinstance(v1, dict):
+            n_observe += v1["count"] - v0["count"]
+        elif series_kind(key) == "counter":
+            # every push-side counter inc is +1, so the value delta IS
+            # the call count (pull-side .set()s only happen at
+            # collect_metrics, which this run never calls)
+            n_inc += int(v1 - v0)
+    # gauges are set absolutely so snapshots can't be diffed for call
+    # counts; the only per-run gauge sets are queue+running, twice per
+    # tick
+    n_ticks = (snap1[tick_key]["count"] - snap0[tick_key]["count"])
+    counts = {"span": x1 - x0, "instant": i1 - i0,
+              "observe": n_observe, "set": 2 * n_ticks, "inc": n_inc}
+
+    # 2. per-op tight-loop costs (scratch tracer/registry, min-of-k)
+    def bench(fn, n=5000 if smoke else 20000, passes=3 if smoke else 5):
+        best = float("inf")
+        for _ in range(passes):
+            t0 = time.process_time()
+            for _ in range(n):
+                fn()
+            best = min(best, (time.process_time() - t0) / n)
+        return best
+
+    st = Tracer(max_events=10_000_000)
+
+    def op_span():
+        sp = st.begin("scheduler", "micro_step", cat="sched",
+                      decoding=3, prefilling=1)
+        st.end(sp)
+
+    sreg = MetricsRegistry()
+    sh = sreg.histogram("repro_sched_tick_seconds", "bench")
+    sg = sreg.gauge("repro_sched_queue_depth_requests", "bench")
+    sc = sreg.counter("repro_sched_admitted_requests_total", "bench")
+    costs = {
+        "span": bench(op_span),
+        "instant": bench(lambda: st.instant("req 0", "finish",
+                                            cat="request", n_generated=1)),
+        "observe": bench(lambda: sh.observe(0.013)),
+        "set": bench(lambda: sg.set(5)),
+        "inc": bench(lambda: sc.inc()),
+    }
+
+    # 3. attribute against the uninstrumented run (min: noise only adds)
+    n_runs = 3 if smoke else 5
+    t_off = min(run_once(e_off)[1] for _ in range(n_runs))
+    t_on = min(run_once(e_on)[1] for _ in range(n_runs))
+    extra = sum(counts[k] * costs[k] for k in counts)
+    delta = extra / t_off
+    tps_off, tps_on = ntok / t_off, ntok / t_on
+    rows = [
+        f"serve_obs_snapshot_series,{sum(n_series.values())},"
+        + " ".join(f"{p.rstrip('_')}={n}" for p, n in n_series.items()),
+        f"serve_obs_trace_events,{len(ev)},"
+        f"lifecycles_reconstructed={lifecycle_ok}/{len(rids)}",
+        f"serve_obs_overhead_pct,{delta * 100:.2f},"
+        f"{sum(counts.values())} instrument ops (span={counts['span']}"
+        f" observe={counts['observe']}) x tight-loop cost"
+        f" / {t_off * 1e3:.0f}ms uninstrumented run; target<2",
+        f"serve_obs_tps,{tps_on:.0f},on vs {tps_off:.0f} off"
+        f" tokens_per_s (cpu-time, best of {n_runs}; reference only)",
+    ]
+    assert delta < 0.02, (
+        f"observability overhead {delta * 100:.2f}% >= 2% "
+        f"(counts={counts}, costs(us)="
+        f"{ {k: round(v * 1e6, 2) for k, v in costs.items()} }, "
+        f"t_off={t_off * 1e3:.1f}ms)")
+    assert tps_on > 0.75 * tps_off, (
+        f"instrumented engine tokens/s sanity band blown: "
+        f"on={tps_on:.0f} off={tps_off:.0f}")
+    return rows
+
+
 def analytic_itl(arch: str, tp: int, batch: int, ctx: int) -> float:
     """Decode step latency (s) on v5e: max(weights+KV reads / HBM, flops)."""
     cfg = get_config(arch)
@@ -396,10 +619,12 @@ def run(paged: Optional[bool] = None, smoke: bool = False) -> List[str]:
     if smoke:
         return (shared_prefix_rows() + paged_vs_dense_rows(smoke=True)
                 + multi_adapter_rows(smoke=True)
-                + speculative_rows(smoke=True))
+                + speculative_rows(smoke=True)
+                + observability_rows(smoke=True))
     return (measured_rows(paged) + shared_prefix_rows()
             + paged_vs_dense_rows() + multi_adapter_rows()
-            + speculative_rows() + analytic_rows())
+            + speculative_rows() + observability_rows()
+            + analytic_rows())
 
 
 def rows_to_json(rows: List[str]) -> List[dict]:
@@ -437,3 +662,13 @@ if __name__ == "__main__":
                        else "dense", "rows": rows_to_json(rows)}, f,
                       indent=2)
         print(f"wrote {args.json}")
+        if "obs_artifacts" in _STATE:
+            # sibling CI artifacts: the observability run's registry
+            # snapshot (Prometheus text) and Perfetto trace
+            prom, trace_text = _STATE["obs_artifacts"]
+            stem = args.json.rsplit(".json", 1)[0]
+            for path, text in ((stem + ".metrics.txt", prom),
+                               (stem + ".trace.json", trace_text)):
+                with open(path, "w", encoding="utf-8") as f:
+                    f.write(text)
+                print(f"wrote {path}")

@@ -64,8 +64,10 @@ class ModelEntry:
 
 
 class Gateway:
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, clock: Callable[[], float] = time.monotonic,
+                 obs=None):
         self.clock = clock
+        self.obs = obs
         self.keys: Dict[str, ApiKey] = {}
         self.models: Dict[str, ModelEntry] = {}
         self.endpoints: Dict[str, List[InferenceEngine]] = {}
@@ -76,6 +78,11 @@ class Gateway:
         self.adapter_owners: Dict[str, str] = {}
         self.usage_log: List[Dict[str, Any]] = []
         self._ids = itertools.count(1)
+        if obs is not None:
+            self._c_rejected = obs.registry.counter(
+                "repro_gateway_rejected_requests_total",
+                "calls rejected at the gateway, by governance check",
+                labelnames=("kind",))
 
     # ----------------------------------------------------------- admin
     def mint_key(self, project: str, **kw) -> ApiKey:
@@ -171,19 +178,35 @@ class Gateway:
         """``model`` may be ``"name"`` (base) or ``"name@adapter"`` (the
         tenant's LoRA fine-tune served from the same weights)."""
         base, adapter = self.split_model(model)
-        k = self._check(api_key, base)
-        owner = self.adapter_owners.get(adapter) if adapter else None
-        if owner is not None and owner != k.project:
-            # deliberately identical to the not-registered error: do not
-            # confirm existence or leak the owning project
-            raise Unauthorized(f"adapter {adapter!r} not available")
+        try:
+            k = self._check(api_key, base)
+            owner = self.adapter_owners.get(adapter) if adapter else None
+            if owner is not None and owner != k.project:
+                # deliberately identical to the not-registered error: do
+                # not confirm existence or leak the owning project
+                raise Unauthorized(f"adapter {adapter!r} not available")
+        except GatewayError as e:
+            if self.obs is not None:
+                self._c_rejected.labels(kind=type(e).__name__).inc()
+                self.obs.tracer.instant(
+                    "gateway", "reject", cat="gateway",
+                    kind=type(e).__name__, model=model)
+            raise
         # the prefix-cache namespace is the key's project (extended by
         # the adapter id for adapter'd calls): tenants never reuse (or
         # even observe timing of) another tenant's — or another
         # adapter's — cached KV
         ns = adapter_namespace(k.project, adapter)
-        eng = self._pick(base, prompt=list(prompt), namespace=ns,
-                         adapter=adapter)
+        try:
+            eng = self._pick(base, prompt=list(prompt), namespace=ns,
+                             adapter=adapter)
+        except GatewayError as e:
+            if self.obs is not None:
+                self._c_rejected.labels(kind=type(e).__name__).inc()
+                self.obs.tracer.instant(
+                    "gateway", "reject", cat="gateway",
+                    kind=type(e).__name__, model=model)
+            raise
         req = Request(prompt=list(prompt), max_new_tokens=max_tokens,
                       temperature=temperature, namespace=k.project,
                       adapter=adapter)
@@ -201,6 +224,60 @@ class Gateway:
                "cost_usd": cost, "engine": eng.name}
         self.usage_log.append(rec)
         return {"id": rid, "tokens": req.generated, "usage": rec}
+
+    # ----------------------------------------------------------- obs
+    def collect_metrics(self, registry=None):
+        """Pull-style export of the usage ledger into a metrics registry
+        (labels: project, model, adapter).  Counters are set to the
+        ledger's absolute totals — the ledger is the source of truth, so
+        re-collecting is idempotent.  Also walks bound engines so one
+        gateway snapshot carries the whole serving stack."""
+        reg = registry
+        if reg is None:
+            if self.obs is None:
+                raise ValueError("no registry: pass one or attach obs")
+            reg = self.obs.registry
+        c_req = reg.counter(
+            "repro_gateway_requests_total",
+            "completed gateway calls",
+            labelnames=("project", "model", "adapter"))
+        c_ptok = reg.counter(
+            "repro_gateway_prompt_tokens_total",
+            "prompt tokens metered at the gateway",
+            labelnames=("project", "model", "adapter"))
+        c_ctok = reg.counter(
+            "repro_gateway_completion_tokens_total",
+            "completion tokens metered at the gateway",
+            labelnames=("project", "model", "adapter"))
+        c_usd = reg.counter(
+            "repro_gateway_spend_usd_total",
+            "metered spend in USD",
+            labelnames=("project", "model", "adapter"))
+        agg: Dict[Tuple[str, str, str], Dict[str, float]] = {}
+        for rec in self.usage_log:
+            key = (rec["project"], rec["model"], rec.get("adapter") or "")
+            d = agg.setdefault(key, {"n": 0, "pt": 0, "ct": 0, "usd": 0.0})
+            d["n"] += 1
+            d["pt"] += rec["prompt_tokens"]
+            d["ct"] += rec["completion_tokens"]
+            d["usd"] += rec["cost_usd"]
+        for (proj, model, adapter), d in agg.items():
+            lb = dict(project=proj, model=model, adapter=adapter)
+            c_req.labels(**lb).set(d["n"])
+            c_ptok.labels(**lb).set(d["pt"])
+            c_ctok.labels(**lb).set(d["ct"])
+            c_usd.labels(**lb).set(d["usd"])
+        reg.gauge("repro_gateway_keys_count",
+                  "API keys minted").set(len(self.keys))
+        reg.gauge("repro_gateway_models_count",
+                  "models onboarded").set(len(self.models))
+        seen = set()
+        for engines in self.endpoints.values():
+            for eng in engines:
+                if id(eng) not in seen and hasattr(eng, "collect_metrics"):
+                    seen.add(id(eng))
+                    eng.collect_metrics(reg)
+        return reg
 
     # ----------------------------------------------------------- reports
     def _aggregate(self, key_fn) -> Dict[str, Dict[str, float]]:

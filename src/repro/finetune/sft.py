@@ -44,6 +44,55 @@ def make_lora_sft_step(cfg: ModelConfig, opt_cfg: OptConfig,
     return step
 
 
+def instrument_sft_step(step_fn, cfg: ModelConfig, obs,
+                        peak_flops: float = 197e12,
+                        clock: Optional[Callable[[], float]] = None):
+    """Wrap an SFT step with host-side observability: step-time
+    histogram, token counters, throughput + estimated-MFU gauges, and
+    one trace span per step on the ``finetune`` track.
+
+    The wrapper sits *outside* the jit (the step itself is untouched),
+    so it times dispatch wall like the trainer loop and adds no device
+    syncs.  MFU counts the full merged forward/backward (6*N*tokens) —
+    LoRA still pays the base model's FLOPs even though only the adapter
+    tree gets gradients."""
+    import numpy as np
+    reg = obs.registry
+    h_step = reg.histogram("repro_finetune_step_seconds",
+                           "SFT step wall time")
+    c_steps = reg.counter("repro_finetune_steps_total",
+                          "SFT optimizer steps completed")
+    c_tokens = reg.counter("repro_finetune_tokens_total",
+                           "SFT tokens consumed")
+    g_tps = reg.gauge("repro_finetune_tokens_per_s",
+                      "SFT throughput, last step")
+    g_mfu = reg.gauge("repro_finetune_mfu_ratio",
+                      "est. model FLOPs utilisation of the SFT step")
+    n_params = cfg.param_count(active_only=True)
+    clk = clock if clock is not None else obs.clock
+    state = {"step": 0}
+
+    def wrapped(params, opt_state, batch):
+        t0 = clk()
+        sp = obs.tracer.begin("finetune", f"sft_step {state['step']}",
+                              cat="finetune")
+        out = step_fn(params, opt_state, batch)
+        wall = clk() - t0
+        obs.tracer.end(sp)
+        state["step"] += 1
+        tok = batch.get("tokens") if hasattr(batch, "get") else None
+        n_tok = int(np.prod(tok.shape)) if tok is not None else 0
+        h_step.observe(wall)
+        c_steps.inc()
+        c_tokens.inc(n_tok)
+        if wall > 0 and n_tok:
+            g_tps.set(n_tok / wall)
+            g_mfu.set(6.0 * n_params * n_tok / (wall * peak_flops))
+        return out
+
+    return wrapped
+
+
 def publish_adapter(pool, name: str, adapters, lcfg: LoraConfig) -> str:
     """Export a trained LoRA adapter tree directly into a serving
     adapter pool (``serving.adapters.AdapterPool`` or an engine with

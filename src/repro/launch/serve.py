@@ -59,6 +59,16 @@ def main():
                          "weights unless --draft-ckpt-dir is given")
     ap.add_argument("--draft-ckpt-dir", default="",
                     help="checkpoint dir for the draft model's weights")
+    ap.add_argument("--metrics-out", default="",
+                    help="write a Prometheus text snapshot of the "
+                         "metrics registry here (enables observability)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto trace_event JSON here "
+                         "(enables observability)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="with --metrics-out: also re-dump the snapshot "
+                         "every N requests (a cheap stand-in for a "
+                         "scrape endpoint)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -101,6 +111,10 @@ def main():
                 print(f"draft weights from step {mani['step']}")
             except Exception as e:  # noqa: BLE001
                 print(f"no usable draft checkpoint ({e}); random init")
+    obs = None
+    if args.metrics_out or args.trace_out:
+        from repro.obs import Observability
+        obs = Observability()
     eng = InferenceEngine(cfg, params, max_batch=args.max_batch,
                           capacity=args.capacity,
                           paged=False if args.dense else None,
@@ -108,7 +122,8 @@ def main():
                           adapter_slots=adapter_slots,
                           speculative=args.speculative,
                           spec_k=args.spec_k,
-                          draft_cfg=draft_cfg, draft_params=draft_params)
+                          draft_cfg=draft_cfg, draft_params=draft_params,
+                          obs=obs)
     names = [cfg.name]
     if args.adapters:
         from repro.finetune.lora import (LoraConfig, lora_init,
@@ -121,10 +136,16 @@ def main():
                 jax.random.PRNGKey(200 + i))
             publish_adapter(eng, f"tenant{i}", ad, lcfg)
             names.append(f"{cfg.name}@tenant{i}")
-    gw = Gateway()
+    gw = Gateway(obs=obs)
     gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
     gw.bind_endpoints(cfg.name, [eng])
     key = gw.mint_key("cli", budget_usd=10.0)
+
+    def dump_snapshot():
+        if obs is None or not args.metrics_out:
+            return
+        gw.collect_metrics()          # pull engine/pool/cache state
+        obs.write_metrics(args.metrics_out)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -135,6 +156,8 @@ def main():
                             max_tokens=args.max_tokens,
                             temperature=args.temperature)
         print(f"req{i}: model={model} prompt={prompt} -> {out['tokens']}")
+        if args.snapshot_every and (i + 1) % args.snapshot_every == 0:
+            dump_snapshot()
     s = eng.metrics.summary()
     print("metrics:", {k: round(v, 4) for k, v in s.items()})
     if args.speculative:
@@ -145,6 +168,14 @@ def main():
         print("adapter pool:", eng.adapter_stats())
         print("usage by adapter:", gw.usage_by_adapter())
     print("usage:", gw.usage_by_project())
+    if obs is not None:
+        dump_snapshot()
+        if args.metrics_out:
+            print(f"metrics snapshot -> {args.metrics_out}")
+        if args.trace_out:
+            obs.write_trace(args.trace_out)
+            print(f"perfetto trace -> {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

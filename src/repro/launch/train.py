@@ -33,6 +33,12 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--fresh", action="store_true")
+    ap.add_argument("--metrics-out", default="",
+                    help="write a Prometheus text snapshot (step-time "
+                         "histogram, tokens/s, est. MFU) here")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto trace_event JSON of the "
+                         "step/checkpoint/failure timeline here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -48,12 +54,16 @@ def main():
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
                                   seq_len=args.seq_len,
                                   global_batch=args.global_batch))
+    obs = None
+    if args.metrics_out or args.trace_out:
+        from repro.obs import Observability
+        obs = Observability()
     tr = Trainer(cfg, OptConfig(name=args.optimizer, lr=args.lr), data,
                  TrainerConfig(num_steps=args.steps,
                                ckpt_every=args.ckpt_every,
                                ckpt_dir=args.ckpt_dir,
                                log_every=max(args.steps // 10, 1)),
-                 schedule_fn=sched)
+                 schedule_fn=sched, obs=obs)
     if tr.restore_latest():
         print(f"resumed from checkpoint at step {tr.step}")
     print(f"training {cfg.name} ({cfg.param_count():,} params) "
@@ -65,6 +75,13 @@ def main():
               f"gnorm {m['grad_norm']:.2f}")
     print(f"done: final_step={res['final_step']} "
           f"restarts={res['restarts']}")
+    if obs is not None:
+        if args.metrics_out:
+            obs.write_metrics(args.metrics_out)
+            print(f"metrics snapshot -> {args.metrics_out}")
+        if args.trace_out:
+            obs.write_trace(args.trace_out)
+            print(f"perfetto trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,303 @@
+"""Metrics registry: counters, gauges, fixed-bucket histograms.
+
+The operational half of lifecycle observability (paper §5): every
+subsystem — scheduler, KV pool, prefix cache, adapter pool, gateway,
+trainer — registers its series here, and one registry snapshot answers
+the paper's platform questions ("is the KV pool thrashing?", "which
+tenant is burning GPU-seconds?") that the end-of-run
+``MetricsCollector.summary()`` dict never could.
+
+Design constraints (mirrors ``serving/metrics.py``):
+
+- **Host-side only.**  No jax import, no device syncs — instruments are
+  plain Python objects safe to touch from any scheduler/trainer hot
+  path; expensive state (pool occupancy, usage aggregates) is *pulled*
+  into gauges at snapshot time by each subsystem's ``collect`` hook,
+  not pushed per mutation.
+- **Fixed buckets.**  Histograms take their bucket upper bounds at
+  registration; observation is a bisect + two adds, never a resize.
+- **Naming convention** (enforced at registration and by
+  ``tools/check_metric_names.py``): ``repro_<subsystem>_<name>_<unit>``
+  with the unit suffix drawn from :data:`UNIT_SUFFIXES`; counters end
+  in ``_total`` (Prometheus convention).
+- **Two export surfaces**: Prometheus text exposition
+  (:meth:`MetricsRegistry.to_prometheus`) for scrape-style consumers
+  and JSON (:meth:`MetricsRegistry.to_json`) for build artifacts;
+  :meth:`MetricsRegistry.snapshot` is the in-process dict view tests
+  assert on.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import math
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Allowed metric-name unit suffixes.  ``_total`` marks a counter; the
+# rest are gauge/histogram units.  ``_tokens_per_s`` is a composite
+# throughput unit (checked before the plain ``_tokens`` suffix).
+UNIT_SUFFIXES: Tuple[str, ...] = (
+    "_tokens_per_s", "_total", "_seconds", "_tokens", "_blocks", "_bytes",
+    "_ratio", "_requests", "_slots", "_nodes", "_count", "_usd", "_steps",
+)
+
+_NAME_RE = re.compile(r"^repro_[a-z][a-z0-9]*(_[a-z0-9]+)+$")
+
+# default latency buckets (seconds): micro-benchmarks on a virtual
+# clock land in the top bucket; real TTFT/ITL distributions spread
+DEFAULT_TIME_BUCKETS: Tuple[float, ...] = (
+    0.001, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
+    10.0, 30.0, 60.0)
+
+
+def validate_metric_name(name: str, kind: str = "") -> Optional[str]:
+    """Return an error string if ``name`` violates the
+    ``repro_<subsystem>_<name>_<unit>`` convention, else ``None``.
+
+    ``kind`` (``counter``/``gauge``/``histogram``) tightens the check:
+    counters must end ``_total``, non-counters must not."""
+    if not _NAME_RE.match(name):
+        return (f"{name!r}: must match repro_<subsystem>_<name>_<unit> "
+                "(lowercase, underscore-separated)")
+    if name.count("_") < 2:
+        return f"{name!r}: needs at least <subsystem> and <unit> parts"
+    if not any(name.endswith(s) for s in UNIT_SUFFIXES):
+        return (f"{name!r}: unit suffix must be one of "
+                f"{sorted(UNIT_SUFFIXES)}")
+    if kind == "counter" and not name.endswith("_total"):
+        return f"{name!r}: counters must end in _total"
+    if kind in ("gauge", "histogram") and name.endswith("_total"):
+        return f"{name!r}: _total is reserved for counters"
+    return None
+
+
+def _label_key(labelnames: Sequence[str], labelvalues: Sequence[str]) -> str:
+    if not labelnames:
+        return ""
+    inner = ",".join(f'{k}="{_escape(v)}"'
+                     for k, v in zip(labelnames, labelvalues))
+    return "{" + inner + "}"
+
+
+def _escape(v: str) -> str:
+    return str(v).replace("\\", r"\\").replace('"', r'\"').replace(
+        "\n", r"\n")
+
+
+def _fmt(v: float) -> str:
+    """Prometheus number formatting: integers without the trailing .0."""
+    if isinstance(v, float) and math.isnan(v):
+        return "NaN"
+    f = float(v)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+class _Child:
+    """One (metric, label-set) time series."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0):
+        if n < 0:
+            raise ValueError("counters only go up; use a gauge")
+        self.value += n
+
+    def set(self, v: float):
+        self.value = float(v)
+
+    def dec(self, n: float = 1.0):
+        self.value -= n
+
+
+class _HistChild:
+    """One histogram series: cumulative fixed buckets + sum + count."""
+    __slots__ = ("bounds", "counts", "sum", "count")
+
+    def __init__(self, bounds: Sequence[float]):
+        self.bounds = bounds
+        self.counts = [0] * (len(bounds) + 1)   # +1 for +Inf
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, v: float):
+        self.counts[bisect.bisect_left(self.bounds, v)] += 1
+        self.sum += v
+        self.count += 1
+
+    def cumulative(self) -> List[int]:
+        out, acc = [], 0
+        for c in self.counts:
+            acc += c
+            out.append(acc)
+        return out
+
+
+class Metric:
+    """A metric family: name + kind + optional label names; unlabeled
+    families proxy straight to their single child, so
+    ``reg.counter("repro_kv_hits_total").inc()`` works without
+    ``.labels()``."""
+
+    def __init__(self, name: str, kind: str, help: str = "",
+                 labelnames: Sequence[str] = (),
+                 buckets: Optional[Sequence[float]] = None):
+        err = validate_metric_name(name, kind)
+        if err:
+            raise ValueError(f"bad metric name {err}")
+        self.name = name
+        self.kind = kind
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        if kind == "histogram":
+            bounds = tuple(buckets if buckets is not None
+                           else DEFAULT_TIME_BUCKETS)
+            if list(bounds) != sorted(bounds) or len(set(bounds)) != len(
+                    bounds):
+                raise ValueError(f"{name}: buckets must be strictly "
+                                 "increasing")
+            self.buckets = bounds
+        else:
+            self.buckets = None
+        self._children: Dict[Tuple[str, ...], object] = {}
+        if not self.labelnames:
+            self._default = self._make()
+            self._children[()] = self._default
+
+    def _make(self):
+        return (_HistChild(self.buckets) if self.kind == "histogram"
+                else _Child())
+
+    def labels(self, **kv):
+        if set(kv) != set(self.labelnames):
+            raise ValueError(f"{self.name}: expected labels "
+                             f"{self.labelnames}, got {sorted(kv)}")
+        key = tuple(str(kv[k]) for k in self.labelnames)
+        child = self._children.get(key)
+        if child is None:
+            child = self._make()
+            self._children[key] = child
+        return child
+
+    # unlabeled proxies
+    def inc(self, n: float = 1.0):
+        self._default.inc(n)
+
+    def dec(self, n: float = 1.0):
+        self._default.dec(n)
+
+    def set(self, v: float):
+        self._default.set(v)
+
+    def observe(self, v: float):
+        self._default.observe(v)
+
+    @property
+    def value(self) -> float:
+        return self._default.value
+
+
+class MetricsRegistry:
+    """Get-or-create registry of metric families.
+
+    Re-registering a name returns the existing family (so ``collect``
+    hooks can run every snapshot without bookkeeping) but raises if the
+    kind or label names changed — a name means one thing, forever."""
+
+    def __init__(self):
+        self._metrics: Dict[str, Metric] = {}
+
+    def _get(self, name: str, kind: str, help: str,
+             labelnames: Sequence[str],
+             buckets: Optional[Sequence[float]] = None) -> Metric:
+        m = self._metrics.get(name)
+        if m is not None:
+            if m.kind != kind or m.labelnames != tuple(labelnames):
+                raise ValueError(
+                    f"metric {name!r} re-registered as {kind}"
+                    f"{tuple(labelnames)} (was {m.kind}{m.labelnames})")
+            return m
+        m = Metric(name, kind, help, labelnames, buckets)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str = "",
+                labelnames: Sequence[str] = ()) -> Metric:
+        return self._get(name, "counter", help, labelnames)
+
+    def gauge(self, name: str, help: str = "",
+              labelnames: Sequence[str] = ()) -> Metric:
+        return self._get(name, "gauge", help, labelnames)
+
+    def histogram(self, name: str, help: str = "",
+                  labelnames: Sequence[str] = (),
+                  buckets: Optional[Sequence[float]] = None) -> Metric:
+        return self._get(name, "histogram", help, labelnames, buckets)
+
+    @property
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def kinds(self) -> Dict[str, str]:
+        """``name -> kind`` for every registered metric (lets callers
+        split counters from gauges when diffing snapshots)."""
+        return {n: self._metrics[n].kind for n in self.names}
+
+    # ------------------------------------------------------------ export
+    def snapshot(self) -> Dict[str, object]:
+        """Flat dict view: ``name{labels}`` -> value, or for histograms
+        -> ``{"sum", "count", "buckets": [(le, cumulative), ...]}``."""
+        out: Dict[str, object] = {}
+        for m in self._metrics.values():
+            for key, child in sorted(m._children.items()):
+                series = m.name + _label_key(m.labelnames, key)
+                if m.kind == "histogram":
+                    cum = child.cumulative()
+                    out[series] = {
+                        "sum": child.sum, "count": child.count,
+                        "buckets": [(le, c) for le, c in
+                                    zip(list(m.buckets) + ["+Inf"], cum)]}
+                else:
+                    out[series] = child.value
+        return out
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition format (version 0.0.4)."""
+        lines: List[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            lines.append(f"# TYPE {name} {m.kind}")
+            for key, child in sorted(m._children.items()):
+                if m.kind == "histogram":
+                    cum = child.cumulative()
+                    for le, c in zip(list(m.buckets) + ["+Inf"], cum):
+                        ln = list(zip(m.labelnames, key)) + [
+                            ("le", le if le == "+Inf" else _fmt(le))]
+                        lk = _label_key([k for k, _ in ln],
+                                        [v for _, v in ln])
+                        lines.append(f"{name}_bucket{lk} {c}")
+                    lk = _label_key(m.labelnames, key)
+                    lines.append(f"{name}_sum{lk} {_fmt(child.sum)}")
+                    lines.append(f"{name}_count{lk} {child.count}")
+                else:
+                    lk = _label_key(m.labelnames, key)
+                    lines.append(f"{name}{lk} {_fmt(child.value)}")
+        return "\n".join(lines) + "\n"
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        doc = {"metrics": [
+            {"name": m.name, "kind": m.kind, "help": m.help,
+             "series": [
+                 {"labels": dict(zip(m.labelnames, key)),
+                  **({"sum": ch.sum, "count": ch.count,
+                      "buckets": [[le, c] for le, c in
+                                  zip(list(m.buckets) + ["+Inf"],
+                                      ch.cumulative())]}
+                     if m.kind == "histogram" else {"value": ch.value})}
+                 for key, ch in sorted(m._children.items())]}
+            for m in (self._metrics[n] for n in sorted(self._metrics))]}
+        return json.dumps(doc, indent=indent)

@@ -149,6 +149,7 @@ class AdapterPool:
         self._free: List[int] = list(range(1, K))
         self.loads = 0
         self.evictions = 0
+        self.acquire_waits = 0
 
     # ------------------------------------------------------------ tree
     @staticmethod
@@ -303,6 +304,7 @@ class AdapterPool:
             victim = next((n for n in self._resident
                            if self._refs.get(n, 0) == 0), None)
             if victim is None:
+                self.acquire_waits += 1
                 return None
             self._free.append(self._resident.pop(victim))
             self.evictions += 1
@@ -329,4 +331,30 @@ class AdapterPool:
                 "pinned": sum(1 for n, r in self._refs.items() if r > 0),
                 "slots": self.slots,
                 "loads": self.loads,
-                "evictions": self.evictions}
+                "evictions": self.evictions,
+                "acquire_waits": self.acquire_waits}
+
+    def collect_metrics(self, reg) -> None:
+        """Pull adapter-pool residency/churn into a metrics registry:
+        slot residency gauges plus load/evict/acquire-wait counters
+        (an acquire-wait is a request left queued because every device
+        slot was pinned — the multi-LoRA analogue of KV exhaustion)."""
+        s = self.stats()
+        reg.gauge("repro_adapters_registered_count",
+                  "adapters registered (host copies)").set(
+            s["registered"])
+        reg.gauge("repro_adapters_resident_slots",
+                  "device slots holding an adapter").set(s["resident"])
+        reg.gauge("repro_adapters_pinned_slots",
+                  "resident adapters pinned by in-flight requests").set(
+            s["pinned"])
+        reg.gauge("repro_adapters_capacity_slots",
+                  "device adapter slots").set(s["slots"])
+        reg.counter("repro_adapters_loads_total",
+                    "host->device adapter loads").set(s["loads"])
+        reg.counter("repro_adapters_evictions_total",
+                    "LRU evictions of unpinned residents").set(
+            s["evictions"])
+        reg.counter("repro_adapters_acquire_waits_total",
+                    "acquires deferred because all slots were "
+                    "pinned").set(s["acquire_waits"])

@@ -37,7 +37,7 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serving.adapters import AdapterPool, supports_multi_lora
 from repro.serving.kvcache import BlockLedger, CacheSlots, PagedCacheSlots
-from repro.serving.metrics import MetricsCollector
+from repro.serving.metrics import MetricsCollector, TracingMetricsCollector
 from repro.serving.sampling import (sample, sample_batched,
                                     spec_accept_batched)
 from repro.serving.scheduler import ChunkedPrefillScheduler, SchedulerConfig
@@ -76,7 +76,8 @@ class InferenceEngine:
                  adapter_rank_bucket: int = 8,
                  speculative: Optional[str] = None,
                  spec_k: int = 4,
-                 draft_cfg=None, draft_params=None):
+                 draft_cfg=None, draft_params=None,
+                 obs=None):
         """``paged=None`` auto-selects the paged KV path when the
         architecture supports it.  ``pool_tokens`` sizes the shared block
         pool (default ``max_batch * capacity`` — the dense footprint);
@@ -103,10 +104,21 @@ class InferenceEngine:
         non-speculative engine; sampled outputs follow the same
         distribution.  Requires position-sliceable KV
         (``M.supports_speculative`` — uniform GQA/MLA stacks, either KV
-        layout)."""
+        layout).
+
+        ``obs`` (an :class:`repro.obs.Observability`, default off)
+        turns on lifecycle observability: per-request trace spans and
+        push-style latency histograms stream through a
+        :class:`TracingMetricsCollector`, the scheduler emits per-tick
+        spans and queue/occupancy gauges, and
+        :meth:`collect_metrics` pulls KV-pool / prefix-cache /
+        adapter-pool state into ``obs.registry`` on demand.  All
+        instrumentation is host-side Python — nothing crosses the jit
+        boundary or syncs the device."""
         self.cfg, self.params = cfg, params
         self.name = name
         self.clock = clock
+        self.obs = obs
         self.paged = M.supports_paged_cache(cfg) if paged is None else paged
         self.adapters: Optional[AdapterPool] = None
         if adapter_slots > 0:
@@ -123,7 +135,8 @@ class InferenceEngine:
         self.capacity = capacity
         self.queue: deque[Request] = deque()
         self.running: Dict[int, Request] = {}
-        self.metrics = MetricsCollector()
+        self.metrics = (TracingMetricsCollector(obs) if obs is not None
+                        else MetricsCollector())
         self.key = jax.random.PRNGKey(seed)
         self._ids = itertools.count()
         self.healthy = True
@@ -214,7 +227,8 @@ class InferenceEngine:
         """Adapter-pool counters (zeros when multi-LoRA is disabled)."""
         if self.adapters is None:
             return {"registered": 0, "resident": 0, "pinned": 0,
-                    "slots": 0, "loads": 0, "evictions": 0}
+                    "slots": 0, "loads": 0, "evictions": 0,
+                    "acquire_waits": 0}
         return self.adapters.stats()
 
     def submit(self, req: Request) -> str:
@@ -252,6 +266,37 @@ class InferenceEngine:
                 "kv_blocks_peak": self.ledger.peak_blocks,
                 "kv_blocks_total": self.ledger.total_blocks,
                 "kv_block_size": self.ledger.block_size}
+
+    def collect_metrics(self, registry=None):
+        """Pull every serving subsystem's state into a metrics registry
+        (default: ``obs.registry``): scheduler queue/batch gauges, KV
+        pool occupancy, prefix-cache hit/miss/evict, adapter-pool
+        residency, and the request/speculative aggregates.  Returns the
+        registry — call right before snapshotting/exporting."""
+        reg = registry
+        if reg is None:
+            if self.obs is None:
+                raise ValueError("engine has no obs handle; pass a "
+                                 "registry explicitly")
+            reg = self.obs.registry
+        reg.gauge("repro_sched_queue_depth_requests",
+                  "requests waiting for admission").set(len(self.queue))
+        reg.gauge("repro_sched_running_requests",
+                  "requests holding a decode slot").set(
+            len(self.running))
+        reg.gauge("repro_sched_batch_capacity_slots",
+                  "decode slots in the fixed batch").set(self.slots.B)
+        if self.paged:
+            self.slots.bp.collect_metrics(
+                reg, block_size=self.slots.block_size)
+        else:
+            self.ledger.collect_metrics(reg)
+        if self.prefix_cache is not None:
+            self.prefix_cache.collect_metrics(reg)
+        if self.adapters is not None:
+            self.adapters.collect_metrics(reg)
+        self.metrics.collect(reg)
+        return reg
 
     # ------------------------------------------------------------ steps
     def _sample(self, logits, req: Request):

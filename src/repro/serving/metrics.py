@@ -31,6 +31,11 @@ class RequestMetrics:
     n_cached: int = 0       # prompt tokens served from the prefix cache
     n_preempted: int = 0    # times this request was preempted + requeued
     token_times: List[float] = dataclasses.field(default_factory=list)
+    # preemption timeline: preempt_times[i] pairs with resume_times[i]
+    # (the next prefill_start); a trailing unpaired preempt_time is a
+    # request that never got re-admitted
+    preempt_times: List[float] = dataclasses.field(default_factory=list)
+    resume_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def ttft(self) -> Optional[float]:
@@ -49,6 +54,12 @@ class RequestMetrics:
     def n_generated(self) -> int:
         return len(self.token_times)
 
+    @property
+    def resume_delays(self) -> List[float]:
+        """Per-preemption time-to-resume (preempt -> next admission)."""
+        return [b - a for a, b in zip(self.preempt_times,
+                                      self.resume_times)]
+
 
 class MetricsCollector:
     def __init__(self):
@@ -66,7 +77,11 @@ class MetricsCollector:
         self.requests[rid] = RequestMetrics(rid, t, n_prompt)
 
     def prefill_start(self, rid: str, t: float):
-        self.requests[rid].prefill_start = t
+        r = self.requests[rid]
+        r.prefill_start = t
+        if len(r.preempt_times) > len(r.resume_times):
+            # re-admission after preemption: close the preempt interval
+            r.resume_times.append(t)
 
     def prefix_hit(self, rid: str, n_cached: int):
         """Record that ``n_cached`` prompt tokens were reused from the
@@ -91,8 +106,13 @@ class MetricsCollector:
     def preempt(self, rid: str, t: float):
         """The paged scheduler reclaimed this request's KV blocks and
         returned it to the queue (it resumes by re-prefilling its prompt
-        plus already-generated tokens — usually a prefix-cache hit)."""
-        self.requests[rid].n_preempted += 1
+        plus already-generated tokens — usually a prefix-cache hit).
+        ``t`` timestamps the preemption; the next ``prefill_start`` for
+        this rid closes the interval, and ``summary()`` reports the
+        mean time-to-resume."""
+        r = self.requests[rid]
+        r.n_preempted += 1
+        r.preempt_times.append(t)
 
     def speculative(self, n_drafted: int, n_accepted: int,
                     n_emitted: int):
@@ -135,10 +155,13 @@ class MetricsCollector:
         saved = sum(r.n_cached for r in done)
         span = (max(r.finish for r in done) - min(r.arrival for r in done)
                 if done else float("nan"))
+        resumes = [d for r in vals for d in r.resume_delays]
         return {
             "completed": len(done),
             "rejected": len(rejected),
             "preempted": sum(r.n_preempted for r in vals),
+            "preempt_to_resume_mean_s": (float(np.mean(resumes))
+                                         if resumes else float("nan")),
             "qps": len(done) / span if done and span > 0 else float("nan"),
             "ttft_p50_s": self._pct(ttfts, 50),
             "ttft_p99_s": self._pct(ttfts, 99),
@@ -158,3 +181,140 @@ class MetricsCollector:
             "spec_tokens_per_launch": (self.spec_emitted / self.spec_rows
                                        if self.spec_rows else float("nan")),
         }
+
+    def collect(self, reg) -> None:
+        """Pull aggregate request/speculative accounting into a
+        :class:`~repro.obs.registry.MetricsRegistry` (absolute sets —
+        safe to call on every snapshot)."""
+        vals = self.requests.values()
+        done = [r for r in vals if r.status == STATUS_FINISHED]
+        prompt = sum(r.n_prompt for r in done)
+        saved = sum(r.n_cached for r in done)
+        reg.counter("repro_serving_finished_requests_total",
+                    "requests that ran to completion").set(len(done))
+        reg.counter("repro_serving_generated_tokens_total",
+                    "tokens emitted by finished requests").set(
+            sum(r.n_generated for r in done))
+        reg.counter("repro_serving_prompt_tokens_total",
+                    "prompt tokens of finished requests").set(prompt)
+        reg.counter("repro_serving_prefill_saved_tokens_total",
+                    "prompt tokens served from the prefix cache").set(
+            saved)
+        reg.gauge("repro_serving_prefix_hit_ratio",
+                  "prefix-cache share of finished prompt tokens").set(
+            saved / prompt if prompt else 0.0)
+        reg.counter("repro_serving_spec_launches_total",
+                    "speculative verify row-launches").set(self.spec_rows)
+        reg.counter("repro_serving_spec_drafted_tokens_total",
+                    "tokens proposed by the drafter").set(self.spec_drafted)
+        reg.counter("repro_serving_spec_accepted_tokens_total",
+                    "drafted tokens accepted by verify").set(
+            self.spec_accepted)
+        reg.counter("repro_serving_spec_emitted_tokens_total",
+                    "tokens emitted by speculative bursts").set(
+            self.spec_emitted)
+
+
+class TracingMetricsCollector(MetricsCollector):
+    """Drop-in :class:`MetricsCollector` that *additionally* streams
+    every lifecycle event into an :class:`~repro.obs.Observability`
+    handle — per-request trace spans (``queued -> prefill -> decode``
+    with ``preempted`` excursions) on one Perfetto track per request,
+    and push-style registry series (admission outcome counters,
+    TTFT/ITL/E2EL histograms).
+
+    The engine swaps this in when constructed with ``obs=``; every
+    existing call site (scheduler, tests) keeps the plain-collector
+    timestamps and ``summary()`` behaviour bit-for-bit.
+    """
+
+    def __init__(self, obs):
+        super().__init__()
+        self.obs = obs
+        reg = obs.registry
+        self._spans = {}           # rid -> open lifecycle Span
+        self._admitted = reg.counter(
+            "repro_sched_admitted_requests_total",
+            "requests that reached prefill (incl. preemption resumes)")
+        self._rejected = reg.counter(
+            "repro_sched_rejected_requests_total",
+            "requests refused admission (can never fit / bad adapter)")
+        self._preempted = reg.counter(
+            "repro_sched_preemptions_total",
+            "running requests preempted back to the queue")
+        self._ttft = reg.histogram(
+            "repro_serving_ttft_seconds", "time to first token")
+        self._itl = reg.histogram(
+            "repro_serving_itl_seconds", "inter-token latency")
+        self._e2el = reg.histogram(
+            "repro_serving_e2el_seconds", "end-to-end request latency")
+        self._resume = reg.histogram(
+            "repro_serving_preempt_resume_seconds",
+            "preemption to re-admission delay")
+
+    def _track(self, rid: str) -> str:
+        return f"req {rid}"
+
+    def _switch(self, rid: str, name: str, **args):
+        """End the request's open span (if any) and begin ``name``."""
+        tr = self.obs.tracer
+        old = self._spans.pop(rid, None)
+        if old is not None:
+            tr.end(old)
+        if name:
+            self._spans[rid] = tr.begin(self._track(rid), name,
+                                        cat="request", **args)
+
+    # ------------------------------------------------------- overrides
+    def arrival(self, rid: str, t: float, n_prompt: int):
+        super().arrival(rid, t, n_prompt)
+        self._switch(rid, "queued", n_prompt=n_prompt)
+
+    def prefill_start(self, rid: str, t: float):
+        r = self.requests[rid]
+        resuming = len(r.preempt_times) > len(r.resume_times)
+        super().prefill_start(rid, t)
+        self._admitted.inc()
+        if resuming:
+            self._resume.observe(r.resume_delays[-1])
+        self._switch(rid, "prefill", resumed=resuming)
+
+    def prefix_hit(self, rid: str, n_cached: int):
+        super().prefix_hit(rid, n_cached)
+        self.obs.tracer.instant(self._track(rid), "prefix_hit",
+                                cat="request", n_cached=n_cached)
+
+    def token(self, rid: str, t: float):
+        r = self.requests[rid]
+        if r.first_token is None:
+            super().token(rid, t)
+            self._ttft.observe(r.ttft)
+            self._switch(rid, "decode")
+        else:
+            # steady-state decode is the hottest lifecycle call; ITL
+            # observations are batched from token_times at finish()
+            super().token(rid, t)
+
+    def finish(self, rid: str, t: float):
+        super().finish(rid, t)
+        r = self.requests[rid]
+        self._e2el.observe(r.e2el)
+        tt = r.token_times
+        observe = self._itl.observe
+        for i in range(1, len(tt)):
+            observe(tt[i] - tt[i - 1])
+        self._switch(rid, "", )
+        self.obs.tracer.instant(self._track(rid), "finish",
+                                cat="request", n_generated=r.n_generated)
+
+    def preempt(self, rid: str, t: float):
+        super().preempt(rid, t)
+        self._preempted.inc()
+        self._switch(rid, "preempted")
+
+    def reject(self, rid: str, t: float):
+        super().reject(rid, t)
+        self._rejected.inc()
+        self._switch(rid, "")
+        self.obs.tracer.instant(self._track(rid), "reject",
+                                cat="request")

@@ -313,6 +313,32 @@ class PrefixCache:
             "evicted_nodes": self.evicted_nodes,
         }
 
+    def collect_metrics(self, reg) -> None:
+        """Pull radix-tree hit/miss/eviction accounting into a metrics
+        registry (absolute sets, safe on every snapshot)."""
+        reg.counter("repro_prefix_queries_total",
+                    "longest-prefix lookups").set(self.queries)
+        reg.counter("repro_prefix_hits_total",
+                    "lookups that matched at least one block").set(
+            self.hit_queries)
+        reg.counter("repro_prefix_misses_total",
+                    "lookups that matched nothing").set(
+            self.queries - self.hit_queries)
+        reg.counter("repro_prefix_hit_tokens_total",
+                    "prompt tokens served from the tree").set(
+            self.hit_tokens)
+        reg.counter("repro_prefix_evictions_total",
+                    "nodes evicted under capacity pressure").set(
+            self.evicted_nodes)
+        reg.gauge("repro_prefix_cached_nodes",
+                  "radix-tree nodes currently stored").set(self.n_nodes)
+        reg.gauge("repro_prefix_cached_tokens",
+                  "tokens' worth of KV indexed by the tree").set(
+            self.cached_tokens)
+        reg.gauge("repro_prefix_capacity_tokens",
+                  "tree capacity in tokens").set(
+            self.ledger.total_blocks * self.block_size)
+
 
 # ------------------------------------------------------------------ paged
 class PagedPrefixCache(PrefixCache):

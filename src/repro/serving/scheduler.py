@@ -120,13 +120,79 @@ class ChunkedPrefillScheduler:
         self._admit_seq = itertools.count()
         # slot -> device adapter id (rows without an entry decode as base)
         self._slot_adapter: Dict[int, int] = {}
+        # observability (engine-owned; None = zero-overhead off state).
+        # Push-side instruments are pre-registered here so the per-tick
+        # path is attribute lookups + appends, never registry lookups.
+        self.obs = getattr(engine, "obs", None)
+        if self.obs is not None:
+            reg = self.obs.registry
+            self._h_tick = reg.histogram(
+                "repro_sched_tick_seconds",
+                "wall time of one scheduler tick")
+            self._h_occupancy = reg.histogram(
+                "repro_sched_batch_occupancy_ratio",
+                "running slots / batch size, sampled per micro-step",
+                buckets=(0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875,
+                         1.0))
+            self._g_queue = reg.gauge(
+                "repro_sched_queue_depth_requests",
+                "requests waiting for admission")
+            self._g_running = reg.gauge(
+                "repro_sched_running_requests",
+                "requests holding a decode slot")
+            self._c_deferred = reg.counter(
+                "repro_sched_admit_deferred_total",
+                "admissions deferred to a later tick",
+                labelnames=("reason",))
+
+    def _defer(self, reason: str) -> bool:
+        """Count a deferred admission (kv pressure / pinned adapter
+        slots); returns False so call sites can ``return self._defer``."""
+        if self.obs is not None:
+            self._c_deferred.labels(reason=reason).inc()
+        return False
 
     # ------------------------------------------------------------ tick
     def tick(self):
+        if self.obs is None:
+            self._run_tick()
+            return
+        eng, tr = self.eng, self.obs.tracer
+        t0 = eng.clock()
+        sp = tr.begin("scheduler", "tick", cat="sched",
+                      queued=len(eng.queue), running=len(eng.running))
+        self._run_tick()
+        tr.end(sp)
+        self._h_tick.observe(eng.clock() - t0)
+        self._g_queue.set(len(eng.queue))
+        self._g_running.set(len(eng.running))
+
+    def _run_tick(self):
+        if self.obs is not None:
+            # direct begin/end (no contextmanager frame) and no child
+            # span when the phase has no work — decode-heavy ticks with
+            # an empty queue stay one event, not three
+            tr = self.obs.tracer
+            if self.eng.queue:
+                sp = tr.begin("scheduler", "admit", cat="sched")
+                self._admit_tick()
+                tr.end(sp)
+            else:
+                self._admit_tick()
+            if self.eng.running:
+                sp = tr.begin("scheduler", "decode", cat="sched")
+                self._decode_tick()
+                tr.end(sp)
+            else:
+                self._decode_tick()
+            return
+        self._admit_tick()
+        self._decode_tick()
+
+    def _admit_tick(self):
         admitted = 0
         while admitted < self.config.admit_per_tick and self._admit_one():
             admitted += 1
-        self._decode_tick()
 
     def drained(self) -> bool:
         return not self.eng.queue and not self.eng.running
@@ -147,8 +213,10 @@ class ChunkedPrefillScheduler:
     # ------------------------------------------------------------ admission
     def _admit_one(self) -> bool:
         eng = self.eng
-        if not eng.queue or not eng.slots.free:
+        if not eng.queue:
             return False
+        if not eng.slots.free:
+            return self._defer("slots")
         req = eng.queue[0]
         # a preempted request resumes with its generated tokens folded
         # into the prompt; only the *remaining* budget counts
@@ -178,9 +246,9 @@ class ChunkedPrefillScheduler:
             if self.prefix_cache is not None:
                 avail += self.prefix_cache.evictable_blocks()
             if eng.slots.blocks_for(chunk0) > avail:
-                return False
+                return self._defer("kv")
         elif not eng.ledger.can_admit(req.request_id, need):
-            return False
+            return self._defer("kv")
         aid = 0
         if req.adapter:
             # load-or-pin the adapter (refcount++).  None means every
@@ -188,7 +256,7 @@ class ChunkedPrefillScheduler:
             # leave the request queued and retry next tick.
             aid = eng.adapters.acquire(req.adapter)
             if aid is None:
-                return False
+                return self._defer("adapter")
         eng.queue.popleft()
         if not self.paged:
             eng.ledger.admit(req.request_id, need)
@@ -254,7 +322,7 @@ class ChunkedPrefillScheduler:
             self._release_adapter(slot, req)
             eng.slots.release(slot)
             eng.queue.appendleft(req)
-            return False
+            return self._defer("kv")
         pad = _bucket(chunk)
         toks = np.zeros((1, pad), np.int32)
         toks[0, :chunk] = req.prompt[:chunk]
@@ -414,6 +482,20 @@ class ChunkedPrefillScheduler:
             self._grow_all()
         if not eng.running:
             return
+        if self.obs is None:
+            return self._micro_step_body()
+        # hot path: direct begin/end, O(1) slot counts (pending is a
+        # subset of running), occupancy is one bisect
+        self._h_occupancy.observe(len(eng.running) / eng.slots.B)
+        tr = self.obs.tracer
+        npre = len(self.pending)
+        sp = tr.begin("scheduler", "micro_step", cat="sched",
+                      decoding=len(eng.running) - npre, prefilling=npre)
+        self._micro_step_body()
+        tr.end(sp)
+
+    def _micro_step_body(self):
+        eng = self.eng
         B = eng.slots.B
         toks = np.zeros((B, 1), np.int32)
         advance = np.zeros((B,), bool)
@@ -486,12 +568,23 @@ class ChunkedPrefillScheduler:
         pool (``PagedCacheSlots.trim``).
         """
         eng = self.eng
-        k = eng.spec_k
-        T = k + 1
+        T = eng.spec_k + 1
         if eng.paged:
             self._grow_all(T)
         if not eng.running:
             return
+        if self.obs is None:
+            return self._spec_body(T)
+        self._h_occupancy.observe(len(eng.running) / eng.slots.B)
+        tr = self.obs.tracer
+        sp = tr.begin("scheduler", "spec_verify", cat="sched",
+                      slots=len(eng.running), k=eng.spec_k)
+        self._spec_body(T)
+        tr.end(sp)
+
+    def _spec_body(self, T: int):
+        eng = self.eng
+        k = T - 1
         B = eng.slots.B
         Vp = eng.cfg.vocab_padded
         toks = np.zeros((B, T), np.int32)

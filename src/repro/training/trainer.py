@@ -77,7 +77,8 @@ class Trainer:
                  failure_injector: Optional[Callable[[int], None]] = None,
                  node_timer: Optional[Callable[[int], Dict[str, float]]] = None,
                  on_straggler: Optional[Callable[[str], None]] = None,
-                 param_dtype=jnp.float32):
+                 param_dtype=jnp.float32, obs=None,
+                 peak_flops: float = 197e12):
         self.cfg, self.opt_cfg, self.tc = cfg, opt_cfg, tc
         self.data = data
         self.schedule_fn = schedule_fn
@@ -91,6 +92,39 @@ class Trainer:
         self.metrics_log: List[Dict[str, Any]] = []
         self.restarts = 0
         self.param_dtype = param_dtype
+        # observability: step-time/throughput/MFU series + lifecycle
+        # events.  Host-side only — the timings below bracket dispatch
+        # wall time exactly as the pre-existing `wall` log field did, so
+        # attaching obs adds no device syncs to the step loop.
+        self.obs = obs
+        self.peak_flops = peak_flops
+        try:
+            self._n_active = cfg.param_count(active_only=True)
+        except TypeError:
+            self._n_active = cfg.param_count()
+        if obs is not None:
+            reg = obs.registry
+            self._h_step = reg.histogram(
+                "repro_train_step_seconds", "train step wall time")
+            self._c_steps = reg.counter(
+                "repro_train_steps_total", "optimizer steps completed")
+            self._c_tokens = reg.counter(
+                "repro_train_tokens_total", "training tokens consumed")
+            self._c_failures = reg.counter(
+                "repro_train_failures_total",
+                "simulated/real node failures hit")
+            self._c_restores = reg.counter(
+                "repro_train_restores_total",
+                "checkpoint restores after failure")
+            self._c_stragglers = reg.counter(
+                "repro_train_stragglers_total",
+                "persistent-straggler flags raised")
+            self._g_tps = reg.gauge(
+                "repro_train_tokens_per_s",
+                "training throughput, last step")
+            self._g_mfu = reg.gauge(
+                "repro_train_mfu_ratio",
+                "est. model FLOPs utilisation (6*N*tokens / wall*peak)")
         self._build(mesh, rules)
         key = jax.random.PRNGKey(seed)
         self.params = M.init(cfg, key, param_dtype)
@@ -158,8 +192,11 @@ class Trainer:
     # ------------------------------------------------------------ loop
     def run(self, num_steps: Optional[int] = None) -> Dict[str, Any]:
         end = self.tc.num_steps if num_steps is None else self.step + num_steps
+        obs = self.obs
         while self.step < end:
             t0 = time.time()
+            sp = (obs.tracer.begin("train", f"step {self.step}",
+                                   cat="train") if obs is not None else None)
             try:
                 if self.failure_injector is not None:
                     self.failure_injector(self.step)
@@ -174,7 +211,16 @@ class Trainer:
                 # batch-plane behaviour: job requeued, state restored from
                 # the last published checkpoint
                 self.restarts += 1
-                if not self.restore_latest():
+                if obs is not None:
+                    self._c_failures.inc()
+                    obs.tracer.instant("train", "failure", cat="train",
+                                       step=self.step)
+                if self.restore_latest():
+                    if obs is not None:
+                        self._c_restores.inc()
+                        obs.tracer.instant("train", "restore", cat="train",
+                                           step=self.step)
+                else:
                     # no checkpoint yet: restart from scratch
                     key = jax.random.PRNGKey(0)
                     self.params = M.init(self.cfg, key, self.param_dtype)
@@ -184,17 +230,41 @@ class Trainer:
                         self.opt_state = jax.device_put(
                             self.opt_state, self.o_sh)
                     self.step = 0
+                if sp is not None:
+                    obs.tracer.end(sp, outcome="failure")
                 continue
 
+            wall = time.time() - t0
+            if sp is not None:
+                obs.tracer.end(sp, outcome="ok")
+            if obs is not None:
+                tok = batch.get("tokens")
+                n_tok = (int(np.prod(tok.shape)) if tok is not None
+                         else sum(int(np.prod(v.shape))
+                                  for v in batch.values()))
+                self._h_step.observe(wall)
+                self._c_steps.inc()
+                self._c_tokens.inc(n_tok)
+                if wall > 0:
+                    self._g_tps.set(n_tok / wall)
+                    self._g_mfu.set(6.0 * self._n_active * n_tok
+                                    / (wall * self.peak_flops))
             if self.node_timer is not None:
                 for node in self.detector.observe(self.node_timer(self.step)):
+                    if obs is not None:
+                        self._c_stragglers.inc()
+                        obs.tracer.instant("train", "straggler", cat="train",
+                                           step=self.step, node=node)
                     if self.on_straggler is not None:
                         self.on_straggler(node)
             if self.step % self.tc.ckpt_every == 0:
                 self.save()
+                if obs is not None:
+                    obs.tracer.instant("train", "checkpoint", cat="train",
+                                       step=self.step)
             if self.step % self.tc.log_every == 0 or self.step == end:
                 m = {k: float(v) for k, v in metrics.items()}
-                m.update(step=self.step, wall=time.time() - t0)
+                m.update(step=self.step, wall=wall)
                 self.metrics_log.append(m)
         self.ckpt.wait()
         return {"final_step": self.step, "restarts": self.restarts,

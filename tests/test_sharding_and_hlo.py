@@ -6,7 +6,13 @@ from jax.sharding import PartitionSpec as P
 from repro.launch import hlo_analysis as H
 from repro.parallel import sharding as sh
 
+# see README "Known jax-version-dependent failures"
+OLD_JAX = tuple(int(x) for x in jax.__version__.split(".")[:2]) < (0, 5)
 
+
+@pytest.mark.xfail(OLD_JAX, reason="jax<0.5: sharding-rules HLO text "
+                   "differs (README: known version failures)",
+                   strict=False)
 def test_rules_train():
     r = sh.make_rules("train")
     assert r.spec(("fsdp", "tensor")) == P("data", "model")

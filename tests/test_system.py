@@ -135,6 +135,10 @@ def test_full_lifecycle(tmp_path, tiny_cfg):
     assert "dataset" in lineage_kinds and "checkpoint" in lineage_kinds
 
 
+@pytest.mark.xfail(
+    tuple(int(x) for x in jax.__version__.split(".")[:2]) < (0, 5),
+    reason="jax<0.5: no jax.shard_map / fake-device flag spelling "
+           "differs (README: known version failures)", strict=False)
 def test_small_mesh_dryrun_subprocess():
     """A reduced MoE config must lower+compile on a fake 2x2 mesh with the
     production sharding rules — validates the dry-run machinery itself

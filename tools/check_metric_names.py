@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Metric-name lint for the observability layer (CI `docs` job; no deps
+beyond the repo itself — ``repro.obs.registry`` imports no jax).
+
+Scans ``src/`` and ``benchmarks/`` for string-literal metric
+registrations — ``.counter("...")``, ``.gauge("...")``,
+``.histogram("...")`` — and validates every name against the repo
+convention enforced by :func:`repro.obs.registry.validate_metric_name`:
+
+- ``repro_<subsystem>_<name>_<unit>`` with a known unit suffix
+  (``_seconds``, ``_tokens``, ``_blocks``, ``_ratio``, ...);
+- counters additionally end in ``_total``;
+- gauges and histograms must NOT end in ``_total`` (that suffix is the
+  Prometheus marker for monotonic series).
+
+    python tools/check_metric_names.py [roots...]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.obs.registry import validate_metric_name  # noqa: E402
+
+# `reg.counter(\n    "name"` — the name literal is the first string
+# argument, possibly on the next line
+CALL_RE = re.compile(
+    r"\.(counter|gauge|histogram)\(\s*\n?\s*\"([^\"]+)\"", re.M)
+
+
+def scan_file(path: str) -> list:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    errors = []
+    for m in CALL_RE.finditer(text):
+        kind, name = m.group(1), m.group(2)
+        err = validate_metric_name(name, kind)
+        if err is not None:
+            line = text.count("\n", 0, m.start()) + 1
+            errors.append(f"{os.path.relpath(path, REPO)}:{line}: "
+                          f"{kind} {name!r}: {err}")
+    return errors
+
+
+def main(argv: list) -> int:
+    roots = argv or [os.path.join(REPO, "src"),
+                     os.path.join(REPO, "benchmarks")]
+    files = []
+    for root in roots:
+        if os.path.isfile(root):
+            files.append(root)
+            continue
+        for dirpath, _, names in os.walk(root):
+            files.extend(os.path.join(dirpath, n) for n in names
+                         if n.endswith(".py"))
+    errors, n_names = [], 0
+    for f in sorted(files):
+        with open(f, encoding="utf-8") as fh:
+            n_names += len(CALL_RE.findall(fh.read()))
+        errors.extend(scan_file(f))
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} bad metric name(s)")
+        return 1
+    print(f"ok: {n_names} metric registration(s) in {len(files)} "
+          f"file(s) follow repro_<subsystem>_<name>_<unit>")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
