@@ -34,9 +34,18 @@ Reproductions:
    acceptance rate, tokens-per-launch, and decode tokens/sec vs
    baseline.
 
+7. chaos mix: two replicas behind the resilient gateway on a virtual
+   clock; a deterministic fault injector kills one mid-decode.  The
+   gateway's breaker opens, the evacuated request retries onto the
+   survivor token-exactly, and after recovery a half-open probe
+   re-closes the circuit.  Acceptance: 100% completion, temp-0 token
+   identity to a fault-free run, breaker open AND re-close observed in
+   the metrics snapshot, zero real sleeps (docs/robustness.md).
+
 CLI: ``--paged`` (default) / ``--dense`` select the KV layout for the
-measured mixes; ``--smoke`` runs the fast subset (3 + 4 + 5 + 6) for
-CI; ``--json PATH`` additionally writes the rows as a machine-readable
+measured mixes; ``--smoke`` runs the fast subset (3 + 4 + 5 + 6 + 7)
+for CI; ``--chaos-smoke`` runs only mix 7 (the CI chaos job);
+``--json PATH`` additionally writes the rows as a machine-readable
 artifact (uploaded by the CI workflow).
 """
 from __future__ import annotations
@@ -593,6 +602,130 @@ def observability_rows(smoke: bool = False) -> List[str]:
     return rows
 
 
+def chaos_rows(smoke: bool = False) -> List[str]:
+    """ISSUE 7 acceptance: serving-plane fault tolerance, end to end.
+
+    Two engine replicas behind the resilient gateway on a VIRTUAL
+    clock; a deterministic injector kills replica e0 mid-decode of one
+    request.  The gateway must ride through it — breaker opens, the
+    evacuated request (committed tokens folded into its prompt) retries
+    onto e1 and resumes token-exactly — and, after e0 recovers and the
+    breaker cooldown elapses, a half-open probe must re-close the
+    circuit and return traffic to e0.  Hard asserts: 100% of requests
+    complete, temp-0 outputs token-identical to a fault-free run, the
+    breaker is seen opening AND re-closing in the metrics snapshot, and
+    ``time.sleep`` is patched to raise for the whole run (retry backoff
+    must use the injected clock only)."""
+    import time
+
+    from repro.core.gateway import Gateway, ModelEntry
+    from repro.obs import Observability
+    from repro.serving.faults import FaultInjector, FaultSpec, VirtualClock
+
+    cfg, params = _tiny()
+    gen = 8 if smoke else 12
+    n_req = 8 if smoke else 12
+    rng = np.random.default_rng(29)
+    prompts = [list(map(int, rng.integers(1, 255,
+                                          int(rng.integers(6, 12)))))
+               for _ in range(n_req)]
+
+    def serve(gw, key):
+        outs = []
+        for p in prompts:
+            out = gw.completion(api_key=key.key, model=cfg.name,
+                                prompt=list(p), max_tokens=gen)
+            outs.append((out["tokens"], out["usage"]["engine"]))
+        return outs
+
+    # fault-free reference (token-identity baseline; routing is
+    # irrelevant to greedy outputs — every replica holds the same
+    # weights)
+    e_ref = _mk_engine(capacity=192)
+    gw_ref = Gateway()
+    gw_ref.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
+    gw_ref.bind_endpoints(cfg.name, [e_ref])
+    ref = [t for t, _ in serve(gw_ref, gw_ref.mint_key("chaos"))]
+
+    # chaos run: crash e0 mid-decode of its 3rd request (each request
+    # costs gen-1 micro-step fault checks after its one-shot prefill)
+    at_call = 2 * (gen - 1) + 4
+    vc = VirtualClock()
+    obs = Observability(clock=vc.now)
+    inj = FaultInjector(
+        [FaultSpec(point="micro_step", kind="crash", at_call=at_call)],
+        clock_advance=vc.advance)
+    cfg_, params_ = _tiny()
+    e0 = InferenceEngine(cfg_, params_, max_batch=4, capacity=192,
+                         clock=vc, name="chaos-e0", faults=inj)
+    e1 = InferenceEngine(cfg_, params_, max_batch=4, capacity=192,
+                         clock=vc, name="chaos-e1")
+    gw = Gateway(clock=vc, obs=obs, retry_budget=3, breaker_threshold=1,
+                 breaker_cooldown_s=5.0, sleep=vc.sleep)
+    gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
+    gw.bind_endpoints(cfg.name, [e0, e1])
+    key = gw.mint_key("chaos")
+
+    def no_real_sleep(_dt):
+        raise AssertionError("real time.sleep in the retry/backoff path")
+
+    outs, engines, recovered_after = [], [], None
+    orig_sleep, time.sleep = time.sleep, no_real_sleep
+    try:
+        for i, p in enumerate(prompts):
+            out = gw.completion(api_key=key.key, model=cfg.name,
+                                prompt=list(p), max_tokens=gen)
+            outs.append(out["tokens"])
+            engines.append(out["usage"]["engine"])
+            if e0.health() == "down" and recovered_after is None:
+                # the "operator" restarts the dead replica; advancing
+                # past the breaker cooldown arms the half-open probe
+                e0.recover()
+                vc.advance(gw.breaker_cooldown_s + 1.0)
+                recovered_after = i
+    finally:
+        time.sleep = orig_sleep
+
+    snap = obs.registry.snapshot()
+    tr = {s: snap[s] for s in snap
+          if s.startswith("repro_gateway_breaker_transitions_total")}
+    n_open = sum(v for s, v in tr.items() if 'state="open"' in s)
+    n_closed = sum(v for s, v in tr.items() if 'state="closed"' in s)
+    final_state = snap.get(
+        'repro_gateway_breaker_state{engine="chaos-e0"}', -1)
+    n_retries = sum(v for s, v in snap.items()
+                    if s.startswith("repro_serving_retries_total"))
+    n_preempted = e0.metrics.summary()["preempted"]
+    identical = int(outs == ref)
+    failed_over = int("chaos-e1" in engines)
+    returned = int(recovered_after is not None
+                   and "chaos-e0" in engines[recovered_after + 1:])
+    rows = [
+        f"serve_chaos_completed,{len(outs)}/{n_req},"
+        f"one of two engines crashed at micro-step {at_call}",
+        f"serve_chaos_outputs_identical,{identical},"
+        f"token-for-token vs fault-free run at temperature 0",
+        f"serve_chaos_retries,{n_retries:.0f},"
+        f"failed_over_to_e1={failed_over} budget=3",
+        f"serve_chaos_preempted,{n_preempted:.0f},"
+        f"committed tokens folded into the prompt on evacuation",
+        f"serve_chaos_breaker_reclosed,{int(n_closed >= 1)},"
+        f"open={n_open:.0f} closed={n_closed:.0f}"
+        f" final_state={final_state:.0f}"
+        f" traffic_returned_to_e0={returned}",
+    ]
+    assert len(outs) == n_req, f"only {len(outs)}/{n_req} completed"
+    assert identical, "chaos run changed temp-0 tokens"
+    assert inj.fired, "the injected crash never fired"
+    assert n_retries >= 1 and failed_over, "gateway never retried"
+    assert n_preempted >= 1, "crash evacuation never folded tokens"
+    assert n_open >= 1 and n_closed >= 1, (
+        f"breaker not seen opening AND re-closing: {tr}")
+    assert final_state == 0 and returned, (
+        "recovered engine never re-earned traffic")
+    return rows
+
+
 def analytic_itl(arch: str, tp: int, batch: int, ctx: int) -> float:
     """Decode step latency (s) on v5e: max(weights+KV reads / HBM, flops)."""
     cfg = get_config(arch)
@@ -620,11 +753,12 @@ def run(paged: Optional[bool] = None, smoke: bool = False) -> List[str]:
         return (shared_prefix_rows() + paged_vs_dense_rows(smoke=True)
                 + multi_adapter_rows(smoke=True)
                 + speculative_rows(smoke=True)
-                + observability_rows(smoke=True))
+                + observability_rows(smoke=True)
+                + chaos_rows(smoke=True))
     return (measured_rows(paged) + shared_prefix_rows()
             + paged_vs_dense_rows() + multi_adapter_rows()
             + speculative_rows() + observability_rows()
-            + analytic_rows())
+            + chaos_rows() + analytic_rows())
 
 
 def rows_to_json(rows: List[str]) -> List[dict]:
@@ -648,13 +782,19 @@ if __name__ == "__main__":
                    help="dense KV for the measured mixes (A/B baseline)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: shared-prefix + paged-vs-dense "
-                         "+ multi-LoRA + speculative")
+                         "+ multi-LoRA + speculative + obs + chaos")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="run ONLY the fault-tolerance chaos mix (the "
+                         "CI chaos job)")
     ap.add_argument("--json", default="",
                     help="also write rows as JSON to this path (CI "
                          "uploads it as a build artifact)")
     args = ap.parse_args()
     paged = False if args.dense else True
-    rows = run(paged=paged, smoke=args.smoke)
+    if args.chaos_smoke:
+        rows = chaos_rows(smoke=True)
+    else:
+        rows = run(paged=paged, smoke=args.smoke)
     print("\n".join(rows))
     if args.json:
         with open(args.json, "w", encoding="utf-8") as f:

@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.configs.base import ModelConfig
 from repro.serving.adapters import adapter_namespace
 from repro.serving.engine import InferenceEngine, Request
+from repro.serving.faults import Backoff, EngineFailure, EngineTimeout
 
 
 class GatewayError(RuntimeError):
@@ -39,6 +40,73 @@ class OverBudget(GatewayError):
 
 class Unauthorized(GatewayError):
     pass
+
+
+class NoHealthyEndpoint(GatewayError):
+    """Every replica of the model is down or draining."""
+
+
+class Overloaded(GatewayError):
+    """Load shed: every eligible replica has an open breaker or a queue
+    past ``max_queue_depth`` — reject fast instead of hanging."""
+
+
+class DeadlineExceeded(GatewayError):
+    """The request's deadline passed (in backoff or mid-decode; any
+    in-flight work was evacuated token-exactly)."""
+
+
+class UpstreamFailure(GatewayError):
+    """Retry budget exhausted on engine failures; the last upstream
+    error is the ``__cause__``."""
+
+
+class CircuitBreaker:
+    """Per-engine circuit breaker (closed → open → half-open → closed).
+
+    ``record_failure`` opens the circuit after ``threshold`` consecutive
+    failures (immediately when half-open); ``allow`` refuses while open
+    and lets ONE probe through after ``cooldown_s``; ``record_success``
+    closes it.  Clock is injected, so tests and the chaos benchmark run
+    the whole state machine on virtual time."""
+
+    def __init__(self, clock: Callable[[], float], threshold: int = 3,
+                 cooldown_s: float = 30.0,
+                 on_transition: Optional[Callable[[str], None]] = None):
+        self.clock = clock
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.on_transition = on_transition
+        self.state = "closed"
+        self.failures = 0
+        self.opened_at = 0.0
+
+    def _to(self, state: str):
+        if state != self.state:
+            self.state = state
+            if self.on_transition is not None:
+                self.on_transition(state)
+
+    def allow(self) -> bool:
+        """May a request be routed here now?  Open circuits refuse
+        until the cooldown elapses, then admit a single half-open
+        probe."""
+        if self.state == "open":
+            if self.clock() - self.opened_at >= self.cooldown_s:
+                self._to("half_open")
+                return True
+            return False
+        return True
+
+    def record_success(self):
+        self.failures = 0
+        self._to("closed")
+
+    def record_failure(self):
+        self.failures += 1
+        if self.state == "half_open" or self.failures >= self.threshold:
+            self.opened_at = self.clock()
+            self._to("open")
 
 
 @dataclasses.dataclass
@@ -65,9 +133,33 @@ class ModelEntry:
 
 class Gateway:
     def __init__(self, clock: Callable[[], float] = time.monotonic,
-                 obs=None):
+                 obs=None, *, retry_budget: int = 0,
+                 deadline_s: Optional[float] = None,
+                 backoff_base_s: float = 0.05, backoff_cap_s: float = 2.0,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0,
+                 max_queue_depth: Optional[int] = None,
+                 seed: int = 0,
+                 sleep: Optional[Callable[[float], None]] = None):
+        """Resilience knobs (defaults preserve the old fail-fast
+        behaviour): ``retry_budget`` bounds resubmissions after an
+        engine failure (exponential backoff + full jitter between
+        attempts, via ``sleep`` — inject a virtual clock's ``sleep`` in
+        tests so no real time passes); ``deadline_s`` is the default
+        per-request wall budget; ``breaker_*`` configure the per-engine
+        circuit breaker consulted by ``_pick``; ``max_queue_depth``
+        sheds load (typed :class:`Overloaded`) when every eligible
+        replica's queue is deeper."""
         self.clock = clock
         self.obs = obs
+        self.retry_budget = retry_budget
+        self.deadline_s = deadline_s
+        self.max_queue_depth = max_queue_depth
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown_s = breaker_cooldown_s
+        self._backoff = Backoff(backoff_base_s, backoff_cap_s, seed=seed)
+        self._sleep = sleep if sleep is not None else time.sleep
+        self._breakers: Dict[int, CircuitBreaker] = {}
         self.keys: Dict[str, ApiKey] = {}
         self.models: Dict[str, ModelEntry] = {}
         self.endpoints: Dict[str, List[InferenceEngine]] = {}
@@ -83,6 +175,52 @@ class Gateway:
                 "repro_gateway_rejected_requests_total",
                 "calls rejected at the gateway, by governance check",
                 labelnames=("kind",))
+            self._c_retries = obs.registry.counter(
+                "repro_serving_retries_total",
+                "completion retries, by failure reason",
+                labelnames=("reason",))
+            self._c_breaker = obs.registry.counter(
+                "repro_gateway_breaker_transitions_total",
+                "circuit-breaker state transitions",
+                labelnames=("engine", "state"))
+            self._g_breaker = obs.registry.gauge(
+                "repro_gateway_breaker_state",
+                "per-engine breaker state (0 closed, 1 open, 2 "
+                "half-open)",
+                labelnames=("engine",))
+
+    BREAKER_STATES = {"closed": 0, "open": 1, "half_open": 2}
+
+    def _breaker(self, eng) -> CircuitBreaker:
+        """Lazily create the engine's breaker (keyed by identity, so
+        one engine bound under several models shares one circuit)."""
+        br = self._breakers.get(id(eng))
+        if br is None:
+            name = getattr(eng, "name", f"engine-{len(self._breakers)}")
+            on_transition = None
+            if self.obs is not None:
+                def on_transition(state, _name=name):
+                    self._c_breaker.labels(engine=_name, state=state).inc()
+                    self._g_breaker.labels(engine=_name).set(
+                        self.BREAKER_STATES[state])
+                    self.obs.tracer.instant(
+                        "gateway", "breaker", cat="gateway",
+                        engine=_name, state=state)
+            br = CircuitBreaker(self.clock,
+                                threshold=self.breaker_threshold,
+                                cooldown_s=self.breaker_cooldown_s,
+                                on_transition=on_transition)
+            self._breakers[id(eng)] = br
+        return br
+
+    @staticmethod
+    def _health(e) -> str:
+        """Engine health, tolerating plain objects: fall back to the
+        legacy ``healthy`` bool when there is no ``health()``."""
+        fn = getattr(e, "health", None)
+        if fn is not None:
+            return fn()
+        return "ok" if getattr(e, "healthy", True) else "down"
 
     # ----------------------------------------------------------- admin
     def mint_key(self, project: str, **kw) -> ApiKey:
@@ -150,10 +288,19 @@ class Gateway:
         longest matching prefix (ties fall back to load).  With an
         ``adapter``, only replicas whose pool has it registered are
         eligible; among those, replicas where it is already
-        device-resident (no load on admit) win ties."""
-        engines = [e for e in self.endpoints.get(model, []) if e.healthy]
+        device-resident (no load on admit) win ties.
+
+        Resilience gates, in order: replicas whose ``health()`` is not
+        ``"ok"`` (down/draining) are skipped — :class:`NoHealthyEndpoint`
+        when none remain; then each candidate's circuit breaker is
+        consulted and (when ``max_queue_depth`` is set) its queue depth
+        bounded — :class:`Overloaded` when that leaves nothing.  A
+        half-open breaker wins routing outright: its single probe is how
+        a recovered replica re-earns traffic."""
+        engines = [e for e in self.endpoints.get(model, [])
+                   if self._health(e) == "ok"]
         if not engines:
-            raise GatewayError(f"no healthy endpoint for {model}")
+            raise NoHealthyEndpoint(f"no healthy endpoint for {model}")
         if adapter:
             engines = [e for e in engines if e.adapters is not None
                        and e.adapters.has(adapter)]
@@ -165,6 +312,15 @@ class Gateway:
             resident = lambda e: int(adapter in e.adapters.resident)  # noqa: E731
         else:
             resident = lambda e: 0  # noqa: E731
+        engines = [e for e in engines if self._breaker(e).allow()]
+        if self.max_queue_depth is not None:
+            engines = [e for e in engines
+                       if e.num_active < self.max_queue_depth]
+        if not engines:
+            raise Overloaded(f"all endpoints for {model} shedding load")
+        for e in engines:
+            if self._breakers[id(e)].state == "half_open":
+                return e
         if prompt:
             return max(engines,
                        key=lambda e: (e.prefix_match_len(namespace, prompt),
@@ -172,11 +328,38 @@ class Gateway:
         return max(engines, key=lambda e: (resident(e), -e.num_active))
 
     # ----------------------------------------------------------- serve
+    def _note_reject(self, e: Exception, model: str):
+        if self.obs is not None:
+            self._c_rejected.labels(kind=type(e).__name__).inc()
+            self.obs.tracer.instant(
+                "gateway", "reject", cat="gateway",
+                kind=type(e).__name__, model=model)
+
+    def _note_retry(self, e: Exception, attempt: int, delay: float):
+        if self.obs is not None:
+            self._c_retries.labels(reason=type(e).__name__).inc()
+            self.obs.tracer.instant(
+                "gateway", "retry", cat="gateway",
+                reason=type(e).__name__, attempt=attempt, delay_s=delay)
+
     def completion(self, *, api_key: str, model: str, prompt: List[int],
                    max_tokens: int = 16, temperature: float = 0.0,
-                   run: bool = True) -> Dict[str, Any]:
+                   run: bool = True, retries: Optional[int] = None,
+                   deadline_s: Optional[float] = None) -> Dict[str, Any]:
         """``model`` may be ``"name"`` (base) or ``"name@adapter"`` (the
-        tenant's LoRA fine-tune served from the same weights)."""
+        tenant's LoRA fine-tune served from the same weights).
+
+        One client call, at most ``1 + retries`` engine attempts
+        (default: the gateway's ``retry_budget``), all within
+        ``deadline_s`` of wall budget (default: the gateway's).  The
+        SAME request object is resubmitted on retry — an engine crash
+        folds its committed tokens into the prompt, so the retried
+        request resumes exactly where the dead replica stopped
+        (token-exact at temperature 0).  Failures feed the picked
+        engine's breaker; a non-retryable or budget-exhausted failure
+        surfaces as a typed :class:`GatewayError`
+        (:class:`DeadlineExceeded` / :class:`NoHealthyEndpoint` /
+        :class:`Overloaded` / :class:`UpstreamFailure`)."""
         base, adapter = self.split_model(model)
         try:
             k = self._check(api_key, base)
@@ -186,40 +369,82 @@ class Gateway:
                 # not confirm existence or leak the owning project
                 raise Unauthorized(f"adapter {adapter!r} not available")
         except GatewayError as e:
-            if self.obs is not None:
-                self._c_rejected.labels(kind=type(e).__name__).inc()
-                self.obs.tracer.instant(
-                    "gateway", "reject", cat="gateway",
-                    kind=type(e).__name__, model=model)
+            self._note_reject(e, model)
             raise
         # the prefix-cache namespace is the key's project (extended by
         # the adapter id for adapter'd calls): tenants never reuse (or
         # even observe timing of) another tenant's — or another
         # adapter's — cached KV
         ns = adapter_namespace(k.project, adapter)
-        try:
-            eng = self._pick(base, prompt=list(prompt), namespace=ns,
-                             adapter=adapter)
-        except GatewayError as e:
-            if self.obs is not None:
-                self._c_rejected.labels(kind=type(e).__name__).inc()
-                self.obs.tracer.instant(
-                    "gateway", "reject", cat="gateway",
-                    kind=type(e).__name__, model=model)
-            raise
         req = Request(prompt=list(prompt), max_new_tokens=max_tokens,
                       temperature=temperature, namespace=k.project,
                       adapter=adapter)
-        rid = eng.submit(req)
-        if run:
-            eng.run_until_idle()
+        n_prompt = len(prompt)
+        budget = self.retry_budget if retries is None else retries
+        if deadline_s is None:
+            deadline_s = self.deadline_s
+        deadline = (None if deadline_s is None
+                    else self.clock() + deadline_s)
+        attempt = 0
+        while True:
+            err: GatewayError
+            eng = None
+            try:
+                # req.prompt, not the original: retries carry the folded
+                # tokens, and affinity should match the folded prefix
+                eng = self._pick(base, prompt=list(req.prompt),
+                                 namespace=ns, adapter=adapter)
+            except Unauthorized as e:
+                self._note_reject(e, model)
+                raise
+            except GatewayError as e:
+                err = e
+            if eng is not None:
+                br = self._breaker(eng)
+                try:
+                    rid = eng.submit(req)
+                    if run:
+                        eng.run_until_idle(deadline=deadline)
+                    br.record_success()
+                    return self._meter(k, base, adapter, req, rid,
+                                       n_prompt, eng)
+                except EngineTimeout as e:
+                    # client-side deadline, not an engine fault: the
+                    # breaker is untouched and there is nothing to
+                    # retry within
+                    de = DeadlineExceeded(
+                        f"deadline of {deadline_s}s exceeded on "
+                        f"{eng.name}")
+                    self._note_reject(de, model)
+                    raise de from e
+                except EngineFailure as e:
+                    br.record_failure()
+                    err = UpstreamFailure(f"{eng.name}: {e}")
+                    err.__cause__ = e
+            attempt += 1
+            if attempt > budget:
+                self._note_reject(err, model)
+                raise err
+            delay = self._backoff.delay(attempt - 1)
+            if deadline is not None and self.clock() + delay >= deadline:
+                de = DeadlineExceeded(
+                    f"deadline of {deadline_s}s exceeded after "
+                    f"{attempt} attempt(s)")
+                de.__cause__ = err
+                self._note_reject(de, model)
+                raise de
+            self._note_retry(err, attempt, delay)
+            self._sleep(delay)
+
+    def _meter(self, k: ApiKey, base: str, adapter: str, req: Request,
+               rid: str, n_prompt: int, eng) -> Dict[str, Any]:
         me = self.models[base]
-        cost = (len(prompt) * me.usd_per_1k_prompt
+        cost = (n_prompt * me.usd_per_1k_prompt
                 + len(req.generated) * me.usd_per_1k_completion) / 1000.0
         k.spent_usd += cost
         rec = {"request_id": rid, "project": k.project, "model": base,
                "adapter": adapter,
-               "prompt_tokens": len(prompt),
+               "prompt_tokens": n_prompt,
                "completion_tokens": len(req.generated),
                "cost_usd": cost, "engine": eng.name}
         self.usage_log.append(rec)

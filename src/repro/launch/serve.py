@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, scaled_down
-from repro.core.gateway import Gateway, ModelEntry
+from repro.core.gateway import Gateway, GatewayError, ModelEntry
 from repro.models import model as M
 from repro.serving.engine import InferenceEngine, Request
 
@@ -59,6 +59,21 @@ def main():
                          "weights unless --draft-ckpt-dir is given")
     ap.add_argument("--draft-ckpt-dir", default="",
                     help="checkpoint dir for the draft model's weights")
+    ap.add_argument("--chaos", nargs="?", const="crash@micro_step:8",
+                    default=None, metavar="KIND@POINT[:AT_CALL]",
+                    help="arm fault injection on the engine (e.g. "
+                         "crash@micro_step:8, reject@admission:2, "
+                         "hang@micro_step:5:0.25); a crashed engine "
+                         "auto-recovers after two health probes — pair "
+                         "with --retry-budget to watch the gateway "
+                         "ride through it (docs/robustness.md)")
+    ap.add_argument("--retry-budget", type=int, default=0,
+                    help="gateway retries per completion after an "
+                         "engine failure (exponential backoff + full "
+                         "jitter)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall budget; past it the request "
+                         "is evacuated and DeadlineExceeded raised")
     ap.add_argument("--metrics-out", default="",
                     help="write a Prometheus text snapshot of the "
                          "metrics registry here (enables observability)")
@@ -136,9 +151,20 @@ def main():
                 jax.random.PRNGKey(200 + i))
             publish_adapter(eng, f"tenant{i}", ad, lcfg)
             names.append(f"{cfg.name}@tenant{i}")
-    gw = Gateway(obs=obs)
+    endpoint = eng
+    if args.chaos:
+        from repro.serving.faults import (ChaosEngine, FaultInjector,
+                                          parse_fault_spec)
+        injector = FaultInjector([parse_fault_spec(args.chaos)])
+        endpoint = ChaosEngine(eng, injector, auto_recover_probes=2)
+        print(f"chaos armed: {args.chaos}")
+    # short breaker cooldown so a recovered engine re-earns traffic
+    # within a CLI demo run, not after 30 wall seconds
+    gw = Gateway(obs=obs, retry_budget=args.retry_budget,
+                 deadline_s=args.deadline_s,
+                 breaker_threshold=1, breaker_cooldown_s=0.05)
     gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
-    gw.bind_endpoints(cfg.name, [eng])
+    gw.bind_endpoints(cfg.name, [endpoint])
     key = gw.mint_key("cli", budget_usd=10.0)
 
     def dump_snapshot():
@@ -152,9 +178,17 @@ def main():
         prompt = [int(x) for x in rng.integers(1, cfg.vocab_size - 1,
                                                4 + i % 5)]
         model = names[i % len(names)]
-        out = gw.completion(api_key=key.key, model=model, prompt=prompt,
-                            max_tokens=args.max_tokens,
-                            temperature=args.temperature)
+        try:
+            out = gw.completion(api_key=key.key, model=model,
+                                prompt=prompt,
+                                max_tokens=args.max_tokens,
+                                temperature=args.temperature)
+        except GatewayError as e:
+            # chaos demo: a failed request is an outcome to show, not a
+            # crash of the driver
+            print(f"req{i}: model={model} FAILED "
+                  f"{type(e).__name__}: {e}")
+            continue
         print(f"req{i}: model={model} prompt={prompt} -> {out['tokens']}")
         if args.snapshot_every and (i + 1) % args.snapshot_every == 0:
             dump_snapshot()

@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 UNIT_SUFFIXES: Tuple[str, ...] = (
     "_tokens_per_s", "_total", "_seconds", "_tokens", "_blocks", "_bytes",
     "_ratio", "_requests", "_slots", "_nodes", "_count", "_usd", "_steps",
+    "_state",
 )
 
 _NAME_RE = re.compile(r"^repro_[a-z][a-z0-9]*(_[a-z0-9]+)+$")

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serving.adapters import AdapterPool, supports_multi_lora
+from repro.serving.faults import EngineFailure, EngineTimeout
 from repro.serving.kvcache import BlockLedger, CacheSlots, PagedCacheSlots
 from repro.serving.metrics import MetricsCollector, TracingMetricsCollector
 from repro.serving.sampling import (sample, sample_batched,
@@ -77,7 +78,7 @@ class InferenceEngine:
                  speculative: Optional[str] = None,
                  spec_k: int = 4,
                  draft_cfg=None, draft_params=None,
-                 obs=None):
+                 obs=None, faults=None):
         """``paged=None`` auto-selects the paged KV path when the
         architecture supports it.  ``pool_tokens`` sizes the shared block
         pool (default ``max_batch * capacity`` — the dense footprint);
@@ -105,6 +106,12 @@ class InferenceEngine:
         distribution.  Requires position-sliceable KV
         (``M.supports_speculative`` — uniform GQA/MLA stacks, either KV
         layout).
+
+        ``faults`` (a :class:`~repro.serving.faults.FaultInjector`,
+        default off) arms deterministic fault injection: the engine
+        checks it at admission, at every decode micro-step, and at
+        every token emission, realising crash / hang / reject faults
+        (see faults.py and docs/robustness.md).
 
         ``obs`` (an :class:`repro.obs.Observability`, default off)
         turns on lifecycle observability: per-request trace spans and
@@ -140,6 +147,8 @@ class InferenceEngine:
         self.key = jax.random.PRNGKey(seed)
         self._ids = itertools.count()
         self.healthy = True
+        self.draining = False
+        self.faults = faults
         self.steps = 0
 
         self._prefill = jax.jit(
@@ -232,11 +241,76 @@ class InferenceEngine:
         return self.adapters.stats()
 
     def submit(self, req: Request) -> str:
+        st = self.health()
+        if st != "ok":
+            raise EngineFailure(f"{self.name} is {st}", point="submit",
+                                kind=st)
+        self._fault("admission")
         if not req.request_id:
             req.request_id = f"{self.name}-r{next(self._ids)}"
         self.metrics.arrival(req.request_id, self.clock(), len(req.prompt))
         self.queue.append(req)
         return req.request_id
+
+    # -------------------------------------------------------- lifecycle
+    def health(self) -> str:
+        """``"ok"`` / ``"draining"`` (finishing in-flight work, not
+        accepting new) / ``"down"`` (crashed; needs :meth:`recover`)."""
+        if not self.healthy:
+            return "down"
+        if self.draining:
+            return "draining"
+        return "ok"
+
+    def crash(self, reason: str = "") -> List[Request]:
+        """Simulate the replica process dying: mark the engine down,
+        evacuate every in-flight request (committed tokens folded into
+        the prompt via the scheduler's preemption path — resubmission
+        elsewhere is token-exact at temperature 0), and drop the prefix
+        cache (its KV died with the process).  Returns the evacuated
+        requests, oldest first, for the caller to reroute."""
+        self.healthy = False
+        reqs = self.scheduler.evacuate()
+        self.scheduler.reset_cache()
+        return reqs
+
+    def recover(self) -> None:
+        """Bring a crashed (or draining) engine back into rotation.
+        State was already cleaned by :meth:`crash`, so recovery is just
+        re-admitting traffic — the serving analogue of the trainer's
+        restore-and-retry."""
+        self.healthy = True
+        self.draining = False
+
+    def drain(self, max_steps: int = 100_000):
+        """Stop accepting new requests but finish the in-flight ones —
+        the graceful half of node reclamation.  Returns the metrics
+        summary; call :meth:`recover` to re-enter rotation."""
+        self.draining = True
+        return self.run_until_idle(max_steps)
+
+    def _fault(self, point: str) -> None:
+        """Consult the bound injector at a fault point and realise
+        whatever it schedules (crash / hang / reject).  No injector, or
+        nothing scheduled: free."""
+        inj = self.faults
+        if inj is None:
+            return
+        spec = inj.check(point)
+        if spec is None:
+            return
+        if spec.kind == "hang":
+            if inj.clock_advance is not None:
+                inj.clock_advance(spec.hang_s)
+            return
+        if spec.kind == "reject":
+            raise EngineFailure(
+                f"{self.name}: injected reject at {point}",
+                point=point, kind="reject")
+        self.crash(reason=f"injected crash at {point}")
+        raise EngineFailure(
+            f"{self.name}: injected crash at {point}",
+            point=point, kind="crash")
 
     @property
     def num_active(self) -> int:
@@ -311,8 +385,19 @@ class InferenceEngine:
         self.scheduler.tick()
         self.steps += 1
 
-    def run_until_idle(self, max_steps: int = 100_000):
+    def run_until_idle(self, max_steps: int = 100_000,
+                       deadline: Optional[float] = None):
+        """Drive the engine until no request is active.  ``deadline``
+        (absolute, on the engine's clock) bounds the wall budget: when
+        it passes with work still in flight, the remaining requests are
+        evacuated (committed tokens folded, so they resume token-exact
+        elsewhere) and :class:`EngineTimeout` carries them out."""
         while self.num_active and max_steps:
+            if deadline is not None and self.clock() >= deadline:
+                reqs = self.scheduler.evacuate()
+                raise EngineTimeout(
+                    f"{self.name}: deadline exceeded with "
+                    f"{len(reqs)} request(s) in flight", requests=reqs)
             self.step()
             max_steps -= 1
         return self.metrics.summary()

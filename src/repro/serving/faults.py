@@ -1,0 +1,209 @@
+"""Serving-plane fault injection (paper §6: long-lived services on
+batch-first HPC nodes).
+
+The trainer proves its checkpoint/restore story against an injected
+``failure_injector``; this module is the serving counterpart.  A
+deterministic, seeded :class:`FaultInjector` fires :class:`FaultSpec`
+faults at three engine points —
+
+- ``admission``  — checked in :meth:`InferenceEngine.submit`,
+- ``micro_step`` — checked at the top of every fused decode micro-step,
+- ``emission``   — checked before every token is appended to a request,
+
+and each fault is one of three kinds:
+
+- ``crash``  — the engine "process" dies: :meth:`InferenceEngine.crash`
+  evacuates every in-flight request (committed tokens folded into the
+  prompt via the scheduler's preemption path, so a resubmission is
+  token-exact at temperature 0), drops the now-lost KV pool contents,
+  and the engine reports ``health() == "down"`` until
+  :meth:`InferenceEngine.recover`;
+- ``hang``   — injected latency: the virtual clock advances by
+  ``hang_s`` (no real sleep anywhere), which is what deadline
+  enforcement sees;
+- ``reject`` — a transient refusal (queue-full / admission-pressure
+  shape) that raises :class:`EngineFailure` without taking the engine
+  down.
+
+Everything is reproducible: ``at_call`` faults fire on the Nth check of
+their point, and probabilistic faults draw from a seeded
+``numpy`` generator in a fixed order, so a chaos run replays exactly in
+tests and benchmarks.  :class:`VirtualClock` and :class:`Backoff` (full
+jitter) are shared by the gateway's retry path and the tests so no real
+``time.sleep`` is ever needed.  See docs/robustness.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+POINTS = ("admission", "micro_step", "emission")
+KINDS = ("crash", "hang", "reject")
+
+
+class EngineFailure(RuntimeError):
+    """An inference engine crashed, refused, or is unavailable.
+
+    ``point`` names where it fired (one of :data:`POINTS`, or
+    ``"submit"`` for down/draining engines); ``kind`` is one of
+    :data:`KINDS` plus ``"down"``/``"draining"``/``"timeout"``."""
+
+    def __init__(self, msg: str, point: str = "", kind: str = "crash"):
+        super().__init__(msg)
+        self.point = point
+        self.kind = kind
+
+
+class EngineTimeout(EngineFailure):
+    """``run_until_idle(deadline=...)`` ran out of wall budget; the
+    in-flight requests were evacuated and ride on ``.requests``."""
+
+    def __init__(self, msg: str, requests: Optional[list] = None):
+        super().__init__(msg, point="run", kind="timeout")
+        self.requests = requests or []
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One scheduled fault.  ``at_call`` fires on the Nth check of
+    ``point`` (1-based, deterministic); ``prob`` fires per-check from
+    the injector's seeded rng.  ``times`` bounds total firings
+    (``<= 0`` = unlimited).  ``hang_s`` is the injected latency for
+    ``kind == "hang"``."""
+    point: str
+    kind: str = "crash"
+    at_call: Optional[int] = None
+    prob: float = 0.0
+    hang_s: float = 0.0
+    times: int = 1
+
+    def __post_init__(self):
+        if self.point not in POINTS:
+            raise ValueError(f"fault point {self.point!r} not in {POINTS}")
+        if self.kind not in KINDS:
+            raise ValueError(f"fault kind {self.kind!r} not in {KINDS}")
+        if self.at_call is None and self.prob <= 0.0:
+            raise ValueError("fault needs at_call or prob > 0")
+
+
+def parse_fault_spec(text: str) -> FaultSpec:
+    """CLI shorthand ``kind@point[:at_call[:hang_s]]`` — e.g.
+    ``crash@micro_step:40`` or ``hang@micro_step:5:0.25``."""
+    kind, _, rest = text.partition("@")
+    parts = rest.split(":")
+    point = parts[0]
+    at_call = int(parts[1]) if len(parts) > 1 else 1
+    hang_s = float(parts[2]) if len(parts) > 2 else 0.0
+    return FaultSpec(point=point, kind=kind, at_call=at_call,
+                     hang_s=hang_s)
+
+
+class FaultInjector:
+    """Deterministic fault schedule over the engine's check points.
+
+    The engine calls :meth:`check` at every fault point; the injector
+    keeps its own per-point call counters, so schedules are independent
+    of engine internals and replay exactly.  ``clock_advance`` (e.g.
+    :meth:`VirtualClock.advance`) realises ``hang`` faults without a
+    real sleep.  ``fired`` logs ``(point, kind, call#)`` for test
+    assertions."""
+
+    def __init__(self, specs: Sequence[FaultSpec], *, seed: int = 0,
+                 clock_advance: Optional[Callable[[float], None]] = None):
+        self.specs = list(specs)
+        self.rng = np.random.default_rng(seed)
+        self.clock_advance = clock_advance
+        self.calls = {p: 0 for p in POINTS}
+        self._left = [s.times for s in self.specs]
+        self.fired: List[Tuple[str, str, int]] = []
+
+    def check(self, point: str) -> Optional[FaultSpec]:
+        """Count one check of ``point``; return the fault to realise
+        (or None).  Probabilistic specs draw rng in spec order, so the
+        schedule is a pure function of (specs, seed, call sequence)."""
+        self.calls[point] += 1
+        n = self.calls[point]
+        for i, s in enumerate(self.specs):
+            if s.point != point or self._left[i] == 0:
+                continue
+            if s.at_call is not None:
+                hit = s.at_call == n
+            else:
+                hit = float(self.rng.random()) < s.prob
+            if hit:
+                if self._left[i] > 0:
+                    self._left[i] -= 1
+                self.fired.append((point, s.kind, n))
+                return s
+        return None
+
+
+class VirtualClock:
+    """Injectable monotonic clock: ``now()``/``__call__`` read it,
+    ``advance``/``sleep`` move it.  The whole retry/backoff/deadline
+    story runs against this in tests — zero real sleeps."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += float(dt)
+
+    def sleep(self, dt: float):
+        self.advance(dt)
+
+
+class Backoff:
+    """Exponential backoff with *full jitter*: attempt ``a`` sleeps
+    ``uniform(0, min(cap, base * 2**a))``.  Seeded, so a retry schedule
+    is reproducible; jitter decorrelates replicas hammering a recovering
+    engine (the thundering-herd fix)."""
+
+    def __init__(self, base_s: float = 0.05, cap_s: float = 2.0,
+                 seed: int = 0):
+        self.base_s = base_s
+        self.cap_s = cap_s
+        self.rng = np.random.default_rng(seed)
+
+    def delay(self, attempt: int) -> float:
+        hi = min(self.cap_s, self.base_s * (2.0 ** attempt))
+        return float(self.rng.uniform(0.0, hi))
+
+
+class ChaosEngine:
+    """Bind a :class:`FaultInjector` to an engine and proxy everything
+    else through, so the gateway (or any caller) serves a chaos replica
+    with no code changes.  ``auto_recover_probes`` models MTTR in
+    health-probe units: after a crash, the Nth ``health()`` probe
+    triggers :meth:`~repro.serving.engine.InferenceEngine.recover` —
+    which is exactly how a gateway retry loop re-discovers a restarted
+    replica."""
+
+    def __init__(self, engine, injector: FaultInjector, *,
+                 auto_recover_probes: int = 0):
+        self.engine = engine
+        self.injector = injector
+        self.auto_recover_probes = auto_recover_probes
+        self._probes_down = 0
+        engine.faults = injector
+
+    def __getattr__(self, name):
+        return getattr(self.engine, name)
+
+    def health(self) -> str:
+        st = self.engine.health()
+        if st == "down" and self.auto_recover_probes > 0:
+            self._probes_down += 1
+            if self._probes_down >= self.auto_recover_probes:
+                self.engine.recover()
+                self._probes_down = 0
+                return self.engine.health()
+        return st

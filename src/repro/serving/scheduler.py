@@ -72,6 +72,12 @@ class SchedulerConfig:
     # KV token budget of the prefix cache; default = one full slot batch
     # (dense) / the pool size (paged)
     cache_capacity_tokens: Optional[int] = None
+    # graceful degradation: after this many pressure events (kv-defers /
+    # preemptions) step the ladder down one level (1 = suspend
+    # speculative decoding, 2 = also pause admission); after this many
+    # pressure-free ticks step back up
+    degrade_after: int = 4
+    restore_after: int = 6
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -120,6 +126,14 @@ class ChunkedPrefillScheduler:
         self._admit_seq = itertools.count()
         # slot -> device adapter id (rows without an entry decode as base)
         self._slot_adapter: Dict[int, int] = {}
+        # graceful-degradation ladder: 0 = normal, 1 = speculative
+        # decoding suspended, 2 = admission paused too.  Pressure events
+        # (kv admission defers, preemptions) push it down; pressure-free
+        # ticks pull it back up.
+        self.degrade_level = 0
+        self._tick_pressure = 0   # pressure events in the current tick
+        self._pressure = 0        # accumulated since last transition
+        self._calm_ticks = 0      # consecutive pressure-free ticks
         # observability (engine-owned; None = zero-overhead off state).
         # Push-side instruments are pre-registered here so the per-tick
         # path is attribute lookups + appends, never registry lookups.
@@ -144,10 +158,20 @@ class ChunkedPrefillScheduler:
                 "repro_sched_admit_deferred_total",
                 "admissions deferred to a later tick",
                 labelnames=("reason",))
+            self._c_degrade = reg.counter(
+                "repro_sched_degrade_transitions_total",
+                "graceful-degradation ladder transitions",
+                labelnames=("direction",))
+            self._g_degrade = reg.gauge(
+                "repro_sched_degrade_level_count",
+                "degradation level (0 normal, 1 spec off, 2 admission "
+                "paused)")
 
     def _defer(self, reason: str) -> bool:
         """Count a deferred admission (kv pressure / pinned adapter
         slots); returns False so call sites can ``return self._defer``."""
+        if reason == "kv":
+            self._tick_pressure += 1
         if self.obs is not None:
             self._c_deferred.labels(reason=reason).inc()
         return False
@@ -185,14 +209,54 @@ class ChunkedPrefillScheduler:
                 tr.end(sp)
             else:
                 self._decode_tick()
+            self._degrade_update()
             return
         self._admit_tick()
         self._decode_tick()
+        self._degrade_update()
 
     def _admit_tick(self):
+        if self.degrade_level >= 2:
+            # deepest ladder rung: shed admission load entirely so the
+            # running batch can finish and free pool blocks.  This defer
+            # must NOT count as pressure or the pause would self-sustain.
+            if self.eng.queue:
+                self._defer("degraded")
+            return
         admitted = 0
         while admitted < self.config.admit_per_tick and self._admit_one():
             admitted += 1
+
+    # ------------------------------------------------- graceful degradation
+    def _degrade_update(self):
+        """End-of-tick ladder update: sustained pressure steps down
+        (suspend speculation, then pause admission); sustained calm
+        steps back up one rung at a time."""
+        if self._tick_pressure:
+            self._pressure += self._tick_pressure
+            self._tick_pressure = 0
+            self._calm_ticks = 0
+            if (self._pressure >= self.config.degrade_after
+                    and self.degrade_level < 2):
+                self._pressure = 0
+                self._set_degrade(self.degrade_level + 1)
+            return
+        self._calm_ticks += 1
+        if self._calm_ticks >= self.config.restore_after:
+            self._calm_ticks = 0
+            self._pressure = 0
+            if self.degrade_level > 0:
+                self._set_degrade(self.degrade_level - 1)
+
+    def _set_degrade(self, level: int):
+        old, self.degrade_level = self.degrade_level, level
+        if self.obs is not None:
+            direction = "down" if level > old else "up"
+            self._c_degrade.labels(direction=direction).inc()
+            self._g_degrade.set(level)
+            self.obs.tracer.instant(
+                "scheduler", "degrade" if level > old else "restore",
+                cat="sched", level=level)
 
     def drained(self) -> bool:
         return not self.eng.queue and not self.eng.running
@@ -431,6 +495,31 @@ class ChunkedPrefillScheduler:
         eng.ledger.release(req.request_id)
         eng.queue.appendleft(req)
         eng.metrics.preempt(req.request_id, eng.clock())
+        self._tick_pressure += 1
+
+    def evacuate(self) -> List:
+        """Pull every in-flight request off the engine (crash/timeout
+        path): running requests go through the preemption fold — their
+        committed tokens become prompt suffix, slots/ledger/adapter
+        pins/drafter state released — then the whole queue is drained.
+        Returns the requests oldest-first, ready to resubmit anywhere
+        token-exactly (at temperature 0)."""
+        eng = self.eng
+        while eng.running:
+            self._preempt_latest()
+        out = list(eng.queue)
+        eng.queue.clear()
+        return out
+
+    def reset_cache(self) -> None:
+        """Drop the whole radix prefix cache (crash path: the cached KV
+        lived in the dead process).  Call after :meth:`evacuate` — only
+        unlocked nodes can be evicted."""
+        pc = self.prefix_cache
+        if pc is None:
+            return
+        while pc._evict_one():
+            pass
 
     def _grow_all(self, n: int = 1):
         """Allocate the next ``n`` positions' blocks for every running
@@ -475,7 +564,8 @@ class ChunkedPrefillScheduler:
         slot runs the speculative variant instead (prefilling slots ride
         along, advancing one prompt token as usual)."""
         eng = self.eng
-        if (eng.drafter is not None
+        eng._fault("micro_step")
+        if (eng.drafter is not None and self.degrade_level < 1
                 and any(s not in self.pending for s in eng.running)):
             return self._spec_micro_step()
         if eng.paged:
@@ -698,6 +788,9 @@ class ChunkedPrefillScheduler:
 
     def _emit(self, slot: int, req, token: int):
         eng = self.eng
+        # the fault fires BEFORE the token commits: a crash here drops
+        # the uncommitted token, and temp-0 resumption re-derives it
+        eng._fault("emission")
         req.generated.append(token)
         eng.metrics.token(req.request_id, eng.clock())
         if (token == req.eos_id

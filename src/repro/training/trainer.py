@@ -46,6 +46,11 @@ class TrainerConfig:
     log_every: int = 10
     straggler_ratio: float = 2.0     # x median step time counts as slow
     straggler_patience: int = 3
+    # give up after this many CONSECUTIVE failed restore-and-retry
+    # cycles (a failure loop that never completes a step — bad node,
+    # corrupt input — would otherwise requeue forever); the counter
+    # resets on every completed step
+    max_restarts: int = 8
 
 
 class StragglerDetector:
@@ -91,6 +96,7 @@ class Trainer:
                                       tc.keep_every)
         self.metrics_log: List[Dict[str, Any]] = []
         self.restarts = 0
+        self._consec_failures = 0
         self.param_dtype = param_dtype
         # observability: step-time/throughput/MFU series + lifecycle
         # events.  Host-side only — the timings below bracket dispatch
@@ -116,6 +122,10 @@ class Trainer:
             self._c_restores = reg.counter(
                 "repro_train_restores_total",
                 "checkpoint restores after failure")
+            self._c_abandoned = reg.counter(
+                "repro_train_restarts_abandoned_total",
+                "runs abandoned after max_restarts consecutive "
+                "failures")
             self._c_stragglers = reg.counter(
                 "repro_train_stragglers_total",
                 "persistent-straggler flags raised")
@@ -207,14 +217,27 @@ class Trainer:
                 self.params, self.opt_state, metrics = self._jit(
                     self.params, self.opt_state, batch)
                 self.step += 1
+                self._consec_failures = 0
             except SimulatedNodeFailure:
                 # batch-plane behaviour: job requeued, state restored from
                 # the last published checkpoint
                 self.restarts += 1
+                self._consec_failures += 1
                 if obs is not None:
                     self._c_failures.inc()
                     obs.tracer.instant("train", "failure", cat="train",
                                        step=self.step)
+                if self._consec_failures > self.tc.max_restarts:
+                    # a restart loop that never completes a step: stop
+                    # requeueing and surface the failure to the operator
+                    if obs is not None:
+                        self._c_abandoned.inc()
+                        obs.tracer.instant("train", "abandon", cat="train",
+                                           step=self.step,
+                                           restarts=self.restarts)
+                    if sp is not None:
+                        obs.tracer.end(sp, outcome="abandoned")
+                    raise
                 if self.restore_latest():
                     if obs is not None:
                         self._c_restores.inc()

@@ -1,0 +1,510 @@
+"""Serving-plane fault tolerance (ISSUE 7): deterministic fault
+injection, token-exact crash recovery, gateway retry/failover with
+breakers and deadlines, graceful degradation, HA quorum edges, and the
+trainer's bounded restart loop.  Everything timed runs on an injected
+virtual clock — ``time.sleep`` is patched to *raise* in the retry
+tests."""
+import time
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gateway import (CircuitBreaker, DeadlineExceeded, Gateway,
+                                ModelEntry, NoHealthyEndpoint, Overloaded,
+                                UpstreamFailure)
+from repro.core.ha import ClusterMesh, Site, SplitBrainError
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.faults import (Backoff, ChaosEngine, EngineFailure,
+                                  EngineTimeout, FaultInjector, FaultSpec,
+                                  VirtualClock, parse_fault_spec)
+from repro.serving.scheduler import SchedulerConfig
+
+
+@pytest.fixture(scope="module")
+def served(tiny_cfg):
+    params = M.init(tiny_cfg, jax.random.PRNGKey(0))
+    return tiny_cfg, params
+
+
+def _reference(cfg, params, prompt, n):
+    eng = InferenceEngine(cfg, params, max_batch=2, capacity=96)
+    r = Request(prompt=list(prompt), max_new_tokens=n)
+    eng.submit(r)
+    eng.run_until_idle()
+    return list(r.generated)
+
+
+def _gw(engines, cfg, clock=None, obs=None, **kw):
+    gw = Gateway(**({} if clock is None else {"clock": clock}),
+                 obs=obs, **kw)
+    gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
+    gw.bind_endpoints(cfg.name, engines)
+    return gw, gw.mint_key("proj")
+
+
+PROMPT = [5, 7, 11, 13, 17]
+GEN = 8
+
+
+# ------------------------------------------------------------ injector
+def test_fault_injector_deterministic():
+    spec = FaultSpec(point="micro_step", kind="crash", at_call=3)
+    inj = FaultInjector([spec])
+    hits = [inj.check("micro_step") for _ in range(5)]
+    assert hits == [None, None, spec, None, None]   # times=1 exhausted
+    # probabilistic schedules replay exactly under the same seed
+    mk = lambda: FaultInjector(  # noqa: E731
+        [FaultSpec(point="emission", kind="reject", prob=0.3, times=-1)],
+        seed=7)
+    a, b = mk(), mk()
+    seq = [a.check("emission") is not None for _ in range(50)]
+    assert seq == [b.check("emission") is not None for _ in range(50)]
+    assert any(seq) and not all(seq)
+    # unrelated points never trip a spec
+    assert all(a.check("micro_step") is None for _ in range(20))
+
+
+def test_parse_fault_spec():
+    s = parse_fault_spec("hang@micro_step:5:0.25")
+    assert (s.kind, s.point, s.at_call, s.hang_s) == (
+        "hang", "micro_step", 5, 0.25)
+    assert parse_fault_spec("crash@admission").at_call == 1
+    with pytest.raises(ValueError):
+        parse_fault_spec("crash@nowhere")
+    with pytest.raises(ValueError):
+        FaultSpec(point="emission", kind="reject")   # no trigger
+
+
+# ------------------------------------------------------------ backoff
+@settings(max_examples=30, deadline=None)
+@given(base=st.floats(0.001, 0.5), cap=st.floats(0.01, 5.0),
+       attempt=st.integers(0, 40), seed=st.integers(0, 2**16))
+def test_backoff_full_jitter_bounds(base, cap, attempt, seed):
+    d = Backoff(base, cap, seed=seed).delay(attempt)
+    assert 0.0 <= d <= cap
+    assert d <= base * (2.0 ** attempt)
+    # same seed -> same schedule; the jitter is reproducible
+    s1 = [Backoff(base, cap, seed=seed).delay(a) for a in range(8)]
+    s2 = [Backoff(base, cap, seed=seed).delay(a) for a in range(8)]
+    assert s1 == s2
+
+
+# ------------------------------------------------------------ engine
+def test_health_drain_submit_gate(served):
+    cfg, params = served
+    eng = InferenceEngine(cfg, params, max_batch=2, capacity=96)
+    assert eng.health() == "ok"
+    r = Request(prompt=list(PROMPT), max_new_tokens=4)
+    eng.submit(r)
+    eng.drain()
+    assert eng.health() == "draining" and r.done
+    with pytest.raises(EngineFailure) as ei:
+        eng.submit(Request(prompt=[1, 2, 3]))
+    assert ei.value.kind == "draining"
+    eng.recover()
+    assert eng.health() == "ok"
+    eng.healthy = False                  # legacy flag stays writable
+    assert eng.health() == "down"
+    with pytest.raises(EngineFailure):
+        eng.submit(Request(prompt=[1, 2, 3]))
+
+
+def test_crash_recover_token_exact_same_engine(served):
+    cfg, params = served
+    ref = _reference(cfg, params, PROMPT, GEN)
+    inj = FaultInjector(
+        [FaultSpec(point="emission", kind="crash", at_call=4)])
+    eng = InferenceEngine(cfg, params, max_batch=2, capacity=96,
+                          faults=inj)
+    r = Request(prompt=list(PROMPT), max_new_tokens=GEN)
+    eng.submit(r)
+    with pytest.raises(EngineFailure) as ei:
+        eng.run_until_idle()
+    assert ei.value.kind == "crash" and ei.value.point == "emission"
+    assert eng.health() == "down"
+    # clean teardown: nothing in flight, every pool block returned
+    assert not eng.running and not eng.queue
+    assert eng.kv_stats()["kv_blocks_used"] == 0
+    # committed tokens were folded so resumption is exact
+    assert 0 < r.n_folded == len(r.generated) < GEN
+    eng.recover()
+    eng.submit(r)
+    eng.run_until_idle()
+    assert list(r.generated) == ref
+
+
+def test_crash_failover_token_exact_other_engine(served):
+    cfg, params = served
+    ref = _reference(cfg, params, PROMPT, GEN)
+    inj = FaultInjector(
+        [FaultSpec(point="micro_step", kind="crash", at_call=3)])
+    e0 = InferenceEngine(cfg, params, max_batch=2, capacity=96,
+                         name="ft-e0", faults=inj)
+    e1 = InferenceEngine(cfg, params, max_batch=2, capacity=96,
+                         name="ft-e1")
+    r = Request(prompt=list(PROMPT), max_new_tokens=GEN)
+    e0.submit(r)
+    with pytest.raises(EngineFailure):
+        e0.run_until_idle()
+    e1.submit(r)
+    e1.run_until_idle()
+    assert list(r.generated) == ref
+
+
+def test_deadline_evacuates_token_exact(served):
+    cfg, params = served
+    ref = _reference(cfg, params, PROMPT, GEN)
+    vc = VirtualClock()
+    inj = FaultInjector(
+        [FaultSpec(point="micro_step", kind="hang", at_call=3,
+                   hang_s=9.0)],
+        clock_advance=vc.advance)
+    eng = InferenceEngine(cfg, params, max_batch=2, capacity=96,
+                          clock=vc, faults=inj)
+    r = Request(prompt=list(PROMPT), max_new_tokens=GEN)
+    eng.submit(r)
+    with pytest.raises(EngineTimeout) as ei:
+        eng.run_until_idle(deadline=vc.now() + 5.0)
+    assert ei.value.requests == [r]
+    assert eng.health() == "ok"          # client deadline, engine fine
+    eng.submit(r)
+    eng.run_until_idle()
+    assert list(r.generated) == ref
+
+
+def test_chaos_engine_auto_recovers(served):
+    cfg, params = served
+    inj = FaultInjector(
+        [FaultSpec(point="admission", kind="crash", at_call=1)])
+    ce = ChaosEngine(
+        InferenceEngine(cfg, params, max_batch=2, capacity=96),
+        inj, auto_recover_probes=2)
+    with pytest.raises(EngineFailure):
+        ce.submit(Request(prompt=list(PROMPT)))
+    assert ce.health() == "down"         # probe 1
+    assert ce.health() == "ok"           # probe 2 triggers recover()
+    r = Request(prompt=list(PROMPT), max_new_tokens=4)
+    ce.submit(r)
+    ce.run_until_idle()
+    assert len(r.generated) == 4
+
+
+# ------------------------------------------------------------ gateway
+def test_pick_skips_unhealthy_typed_error(served):
+    cfg, params = served
+    e0 = InferenceEngine(cfg, params, max_batch=2, capacity=96,
+                         name="gw-e0")
+    e1 = InferenceEngine(cfg, params, max_batch=2, capacity=96,
+                         name="gw-e1")
+    gw, key = _gw([e0, e1], cfg)
+    e0.crash()
+    out = gw.completion(api_key=key.key, model=cfg.name,
+                        prompt=list(PROMPT), max_tokens=4)
+    assert out["usage"]["engine"] == "gw-e1"
+    e1.draining = True
+    with pytest.raises(NoHealthyEndpoint):
+        gw.completion(api_key=key.key, model=cfg.name,
+                      prompt=list(PROMPT), max_tokens=4)
+
+
+def test_gateway_retry_failover_no_real_sleep(served, monkeypatch):
+    cfg, params = served
+    ref = _reference(cfg, params, PROMPT, GEN)
+    vc = VirtualClock()
+    from repro.obs import Observability
+    obs = Observability(clock=vc.now)
+    inj = FaultInjector(
+        [FaultSpec(point="emission", kind="crash", at_call=4)],
+        clock_advance=vc.advance)
+    e0 = InferenceEngine(cfg, params, max_batch=2, capacity=96,
+                         name="rt-e0", clock=vc, faults=inj)
+    e1 = InferenceEngine(cfg, params, max_batch=2, capacity=96,
+                         name="rt-e1", clock=vc)
+    gw, key = _gw([e0, e1], cfg, clock=vc, obs=obs, retry_budget=3,
+                  breaker_threshold=1, breaker_cooldown_s=5.0,
+                  sleep=vc.sleep)
+
+    def no_sleep(_dt):
+        raise AssertionError("real time.sleep in retry path")
+    monkeypatch.setattr(time, "sleep", no_sleep)
+
+    t0 = vc.now()
+    out = gw.completion(api_key=key.key, model=cfg.name,
+                        prompt=list(PROMPT), max_tokens=GEN)
+    assert out["tokens"] == ref          # resumed mid-stream, exact
+    assert out["usage"]["engine"] == "rt-e1"
+    assert vc.now() > t0                 # backoff burned virtual time
+    assert gw._breakers[id(e0)].state == "open"
+    snap = obs.registry.snapshot()
+    assert snap[
+        'repro_serving_retries_total{reason="UpstreamFailure"}'] >= 1
+    # recovery: cooldown elapses -> half-open probe -> breaker closes
+    e0.recover()
+    vc.advance(6.0)
+    out2 = gw.completion(api_key=key.key, model=cfg.name,
+                         prompt=[9, 9, 9], max_tokens=4)
+    assert out2["usage"]["engine"] == "rt-e0"
+    assert gw._breakers[id(e0)].state == "closed"
+    snap = obs.registry.snapshot()
+    assert snap['repro_gateway_breaker_state{engine="rt-e0"}'] == 0
+    for state in ("open", "half_open", "closed"):
+        k = ('repro_gateway_breaker_transitions_total'
+             f'{{engine="rt-e0",state="{state}"}}')
+        assert snap[k] >= 1, k
+
+
+def test_gateway_sheds_when_all_breakers_open(served, monkeypatch):
+    cfg, params = served
+    vc = VirtualClock()
+    engines = []
+    for i in range(2):
+        inj = FaultInjector(
+            [FaultSpec(point="admission", kind="reject", times=-1,
+                       at_call=None, prob=1.0)])
+        engines.append(InferenceEngine(
+            cfg, params, max_batch=2, capacity=96, name=f"shed-e{i}",
+            clock=vc, faults=inj))
+    gw, key = _gw(engines, cfg, clock=vc, retry_budget=0,
+                  breaker_threshold=1, breaker_cooldown_s=30.0,
+                  sleep=vc.sleep)
+    monkeypatch.setattr(time, "sleep", lambda _dt: (_ for _ in ()).throw(
+        AssertionError("real sleep")))
+    # first call trips one breaker (reject), budget 0 -> typed failure
+    with pytest.raises(UpstreamFailure):
+        gw.completion(api_key=key.key, model=cfg.name,
+                      prompt=list(PROMPT), max_tokens=4)
+    with pytest.raises(UpstreamFailure):
+        gw.completion(api_key=key.key, model=cfg.name,
+                      prompt=list(PROMPT), max_tokens=4)
+    # both circuits open and cooling: the gateway sheds, never hangs
+    assert all(gw._breakers[id(e)].state == "open" for e in engines)
+    with pytest.raises(Overloaded):
+        gw.completion(api_key=key.key, model=cfg.name,
+                      prompt=list(PROMPT), max_tokens=4)
+
+
+def test_gateway_queue_depth_shedding(served):
+    cfg, params = served
+    eng = InferenceEngine(cfg, params, max_batch=2, capacity=96)
+    gw, key = _gw([eng], cfg, max_queue_depth=2)
+    for _ in range(2):
+        gw.completion(api_key=key.key, model=cfg.name,
+                      prompt=list(PROMPT), max_tokens=2, run=False)
+    assert eng.num_active == 2
+    with pytest.raises(Overloaded):
+        gw.completion(api_key=key.key, model=cfg.name,
+                      prompt=list(PROMPT), max_tokens=2, run=False)
+    eng.run_until_idle()
+    gw.completion(api_key=key.key, model=cfg.name,
+                  prompt=list(PROMPT), max_tokens=2)
+
+
+def test_gateway_deadline_exceeded(served, monkeypatch):
+    cfg, params = served
+    vc = VirtualClock()
+    inj = FaultInjector(
+        [FaultSpec(point="micro_step", kind="hang", at_call=2,
+                   hang_s=50.0)],
+        clock_advance=vc.advance)
+    eng = InferenceEngine(cfg, params, max_batch=2, capacity=96,
+                          name="dl-e0", clock=vc, faults=inj)
+    gw, key = _gw([eng], cfg, clock=vc, retry_budget=3,
+                  deadline_s=10.0, sleep=vc.sleep)
+    monkeypatch.setattr(time, "sleep", lambda _dt: (_ for _ in ()).throw(
+        AssertionError("real sleep")))
+    with pytest.raises(DeadlineExceeded):
+        gw.completion(api_key=key.key, model=cfg.name,
+                      prompt=list(PROMPT), max_tokens=GEN)
+    # a slow engine is not a broken engine: no breaker failure recorded
+    assert gw._breakers[id(eng)].state == "closed"
+    assert eng.health() == "ok"
+
+
+# ------------------------------------------------- graceful degradation
+def test_degrade_ladder_down_and_up(served):
+    cfg, params = served
+    from repro.obs import Observability
+    obs = Observability()
+    eng = InferenceEngine(
+        cfg, params, max_batch=2, capacity=48, pool_tokens=48, obs=obs,
+        sched=SchedulerConfig(prefix_block=4, prefill_chunk=8,
+                              enable_prefix_cache=False,
+                              degrade_after=1, restore_after=3))
+    p1 = [(i * 7) % 120 + 1 for i in range(16)]
+    p2 = [(i * 5) % 110 + 1 for i in range(16)]
+    for p in (p1, p2):
+        eng.submit(Request(prompt=list(p), max_new_tokens=16))
+    peak = 0
+    while eng.num_active:
+        eng.step()
+        peak = max(peak, eng.scheduler.degrade_level)
+    assert eng.metrics.summary()["preempted"] >= 1
+    assert peak >= 1                      # pressure stepped the ladder
+    # pressure is gone: calm ticks walk it back to 0
+    for _ in range(3 * (peak + 1)):
+        eng.scheduler.tick()
+    assert eng.scheduler.degrade_level == 0
+    snap = obs.registry.snapshot()
+    assert snap[
+        'repro_sched_degrade_transitions_total{direction="down"}'] >= 1
+    assert snap[
+        'repro_sched_degrade_transitions_total{direction="up"}'] >= 1
+    assert snap["repro_sched_degrade_level_count"] == 0
+
+
+def test_degrade_level1_suspends_speculation(served):
+    cfg, params = served
+    pat = [3, 1, 4, 1, 5, 9, 2, 6]
+    prompt = pat * 3 + [7, 7]            # repetitive: ngram would hit
+    base = _reference(cfg, params, prompt, GEN)
+    eng = InferenceEngine(
+        cfg, params, max_batch=2, capacity=128,
+        speculative="ngram", spec_k=3,
+        sched=SchedulerConfig(restore_after=10_000))  # pin the level
+    eng.scheduler.degrade_level = 1
+    r = Request(prompt=list(prompt), max_new_tokens=GEN)
+    eng.submit(r)
+    eng.run_until_idle()
+    assert list(r.generated) == base     # plain decode, still exact
+    assert eng.metrics.spec_rows == 0    # drafter never consulted
+
+
+def test_degrade_level2_pauses_admission(served):
+    cfg, params = served
+    eng = InferenceEngine(
+        cfg, params, max_batch=2, capacity=96,
+        sched=SchedulerConfig(restore_after=10_000))
+    eng.scheduler.degrade_level = 2
+    r = Request(prompt=list(PROMPT), max_new_tokens=4)
+    eng.submit(r)
+    for _ in range(5):
+        eng.step()
+    assert not r.generated               # queued, never admitted
+    eng.scheduler.degrade_level = 0
+    eng.run_until_idle()
+    assert len(r.generated) == 4
+
+
+# ------------------------------------------------------------ HA edges
+class _Ep:
+    def __init__(self, healthy=True, num_active=0):
+        self.healthy = healthy
+        self.num_active = num_active
+
+
+def test_ha_partition_heal_route_and_quorum():
+    a = Site("alps", endpoints=[_Ep(), _Ep(num_active=3)])
+    b = Site("lugano", endpoints=[_Ep()])
+    mesh = ClusterMesh([a, b])
+    assert mesh.propose_config("alps") == 1
+    mesh.partition("alps")
+    # partitioned site: writes fenced, traffic fails over
+    with pytest.raises(SplitBrainError):
+        mesh.propose_config("alps")
+    site, _ = mesh.route(prefer="alps")
+    assert site.name == "lugano"
+    # epochs advanced while alps was dark
+    assert mesh.propose_config("lugano") == 2
+    # un-partitioning without heal() leaves a stale epoch: still fenced
+    a.partitioned = False
+    mesh.probe()
+    with pytest.raises(SplitBrainError):
+        mesh.propose_config("alps")
+    # heal re-syncs the epoch; writes and routing both resume
+    mesh.heal("alps")
+    assert mesh.propose_config("alps") == 3
+    site, ep = mesh.route(prefer="alps")
+    assert site.name == "alps" and ep.num_active == 0  # least loaded
+    # total blackout is a typed failure, not a hang
+    mesh.partition("alps")
+    mesh.partition("lugano")
+    with pytest.raises(RuntimeError):
+        mesh.route()
+
+
+def test_ha_all_endpoints_dead_marks_site_unhealthy():
+    s = Site("solo", endpoints=[_Ep(healthy=False)])
+    mesh = ClusterMesh([s])
+    mesh.probe()
+    assert not s.healthy
+    with pytest.raises(RuntimeError):
+        mesh.route(prompt=[1, 2, 3])
+
+
+# ------------------------------------------------------------ trainer
+def test_trainer_gives_up_after_max_restarts(tiny_cfg, tmp_path):
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.obs import Observability
+    from repro.training.optimizer import OptConfig
+    from repro.training.trainer import (SimulatedNodeFailure, Trainer,
+                                        TrainerConfig)
+    data = SyntheticLM(DataConfig(vocab_size=tiny_cfg.vocab_size,
+                                  seq_len=16, global_batch=4))
+
+    def injector(step):
+        if step >= 4:
+            raise SimulatedNodeFailure(f"node died at {step}")
+
+    obs = Observability()
+    tc = TrainerConfig(num_steps=12, ckpt_every=2, log_every=4,
+                       ckpt_dir=str(tmp_path), max_restarts=3)
+    tr = Trainer(tiny_cfg, OptConfig(lr=1e-2), data, tc,
+                 failure_injector=injector, obs=obs)
+    with pytest.raises(SimulatedNodeFailure):
+        tr.run()
+    # 3 restore-and-retry cycles were allowed, the 4th failure raised
+    assert tr.restarts == 4
+    snap = obs.registry.snapshot()
+    assert snap["repro_train_restarts_abandoned_total"] == 1
+    assert snap["repro_train_failures_total"] == 4
+
+
+def test_trainer_nonconsecutive_failures_still_tolerated(tiny_cfg,
+                                                         tmp_path):
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.training.optimizer import OptConfig
+    from repro.training.trainer import (SimulatedNodeFailure, Trainer,
+                                        TrainerConfig)
+    data = SyntheticLM(DataConfig(vocab_size=tiny_cfg.vocab_size,
+                                  seq_len=16, global_batch=4))
+    fails = {3, 7}
+
+    def injector(step):
+        if step in fails:
+            fails.discard(step)
+            raise SimulatedNodeFailure(f"flaky at {step}")
+
+    tc = TrainerConfig(num_steps=10, ckpt_every=2, log_every=5,
+                       ckpt_dir=str(tmp_path), max_restarts=1)
+    tr = Trainer(tiny_cfg, OptConfig(lr=1e-2), data, tc,
+                 failure_injector=injector)
+    out = tr.run()
+    # the consecutive counter resets on every completed step, so two
+    # isolated failures pass under max_restarts=1
+    assert out["final_step"] == 10 and out["restarts"] == 2
+
+
+# ------------------------------------------------------------ breaker
+def test_circuit_breaker_state_machine():
+    vc = VirtualClock()
+    seen = []
+    br = CircuitBreaker(vc, threshold=2, cooldown_s=5.0,
+                        on_transition=seen.append)
+    assert br.allow() and br.state == "closed"
+    br.record_failure()
+    assert br.state == "closed"          # below threshold
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    vc.advance(4.0)
+    assert not br.allow()                # still cooling
+    vc.advance(1.0)
+    assert br.allow() and br.state == "half_open"
+    br.record_failure()                  # probe failed: snap back open
+    assert br.state == "open" and not br.allow()
+    vc.advance(5.0)
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.failures == 0
+    assert seen == ["open", "half_open", "open", "half_open", "closed"]

@@ -27,9 +27,10 @@ sys.path.insert(0, os.path.join(REPO, "src"))
 from repro.obs.registry import validate_metric_name  # noqa: E402
 
 # `reg.counter(\n    "name"` — the name literal is the first string
-# argument, possibly on the next line
+# argument, in either quote style, any amount of whitespace/newlines
+# between the paren and the literal
 CALL_RE = re.compile(
-    r"\.(counter|gauge|histogram)\(\s*\n?\s*\"([^\"]+)\"", re.M)
+    r"\.(counter|gauge|histogram)\(\s*([\"'])([^\"']+)\2")
 
 
 def scan_file(path: str) -> list:
@@ -37,7 +38,7 @@ def scan_file(path: str) -> list:
         text = f.read()
     errors = []
     for m in CALL_RE.finditer(text):
-        kind, name = m.group(1), m.group(2)
+        kind, name = m.group(1), m.group(3)
         err = validate_metric_name(name, kind)
         if err is not None:
             line = text.count("\n", 0, m.start()) + 1
