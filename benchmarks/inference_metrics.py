@@ -41,10 +41,17 @@ Reproductions:
    re-closes the circuit.  Acceptance: 100% completion, temp-0 token
    identity to a fault-free run, breaker open AND re-close observed in
    the metrics snapshot, zero real sleeps (docs/robustness.md).
+8. sharded serving (tensor parallelism): the same greedy mix through a
+   TP=2 mesh-aware engine and the single-device engine.  Acceptance: a
+   HARD token-identity assert (serving/README.md "Sharded serving"),
+   plus decode tokens/s and per-device KV bytes rows (the head-sharded
+   paged pool halves per-device KV at TP=2).  Needs two devices; run as
+   a CLI the module forces two XLA host devices before jax loads, so
+   the rows are live even on a one-CPU CI runner.
 
 CLI: ``--paged`` (default) / ``--dense`` select the KV layout for the
-measured mixes; ``--smoke`` runs the fast subset (3 + 4 + 5 + 6 + 7)
-for CI; ``--chaos-smoke`` runs only mix 7 (the CI chaos job);
+measured mixes; ``--smoke`` runs the fast subset (3 + 4 + 5 + 6 + 7 +
+8) for CI; ``--chaos-smoke`` runs only mix 7 (the CI chaos job);
 ``--json PATH`` additionally writes the rows as a machine-readable
 artifact (uploaded by the CI workflow).
 """
@@ -53,7 +60,21 @@ from __future__ import annotations
 import argparse
 import itertools
 import json
+import os
+import sys
 from typing import List, Optional, Tuple
+
+# mix 8 needs >= 2 devices; on the usual 1-CPU runner force two XLA host
+# devices — must happen before jax's first import (harmless for every
+# other mix: their engines are mesh-free and compile single-device
+# modules on device 0).  When another module imported jax first (e.g. a
+# test importing this file) the flag is too late; sharded_rows then
+# degrades to an explicit skip row instead of asserting.
+if "jax" not in sys.modules and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=2").strip()
 
 import jax
 import jax.numpy as jnp
@@ -726,6 +747,58 @@ def chaos_rows(smoke: bool = False) -> List[str]:
     return rows
 
 
+def sharded_rows(smoke: bool = False) -> List[str]:
+    """ISSUE 8 acceptance: tensor-parallel serving token identity.
+
+    The same greedy mix through a TP=2 engine (``("model",)`` mesh,
+    serving_tp rules) and the plain single-device engine.  Token
+    identity is a hard assert — TP reshards contractions, so this is
+    the row that catches a rules/constraint regression; tokens/s is
+    reported for parity (two forced host devices share one CPU, so no
+    speedup is claimed), and per-device KV bytes shows the head-sharded
+    pool halving each device's KV footprint."""
+    if jax.device_count() < 2:
+        return ["serve_tp_skipped,1,needs >=2 devices (CLI runs force "
+                "2 host devices; in-process imports may be too late)"]
+    cfg, params = _tiny()
+    gen = 10 if smoke else 20
+    rng = np.random.default_rng(31)
+    prompts = [list(map(int, rng.integers(1, 255,
+                                          int(rng.integers(6, 16)))))
+               for _ in range(6)]
+
+    def go(mesh):
+        eng = InferenceEngine(cfg, params, max_batch=4, capacity=192,
+                              mesh=mesh)
+        reqs = [Request(prompt=list(p), max_new_tokens=gen)
+                for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        s = eng.run_until_idle()
+        return [r.generated for r in reqs], s, eng.kv_stats()
+
+    base, s1, kv1 = go(None)
+    tp, s2, kv2 = go(jax.make_mesh((2,), ("model",)))
+    identical = int(base == tp)
+    rows = [
+        f"serve_tp2_outputs_identical,{identical},"
+        f"token-for-token vs TP=1 at temperature 0 (hard assert)",
+        f"serve_tp2_decode_tokens_per_s,{s2['tokens_per_s']:.1f},"
+        f"tp1={s1['tokens_per_s']:.1f} (2 host devices on one CPU: "
+        f"parity, not speedup)",
+        f"serve_tp2_kv_peak_bytes_per_device,"
+        f"{kv2['kv_peak_bytes_per_device']},"
+        f"tp1={kv1['kv_peak_bytes_per_device']}"
+        f" block_bytes_per_device={kv2['kv_block_bytes_per_device']}"
+        f" (KV-head-sharded pool)",
+    ]
+    assert identical, "TP=2 engine diverged from TP=1 greedy tokens"
+    assert kv2["kv_tp_degree"] == 2 and kv1["kv_tp_degree"] == 1
+    assert kv2["kv_block_bytes_per_device"] * 2 \
+        == kv1["kv_block_bytes_per_device"], (kv1, kv2)
+    return rows
+
+
 def analytic_itl(arch: str, tp: int, batch: int, ctx: int) -> float:
     """Decode step latency (s) on v5e: max(weights+KV reads / HBM, flops)."""
     cfg = get_config(arch)
@@ -754,11 +827,12 @@ def run(paged: Optional[bool] = None, smoke: bool = False) -> List[str]:
                 + multi_adapter_rows(smoke=True)
                 + speculative_rows(smoke=True)
                 + observability_rows(smoke=True)
-                + chaos_rows(smoke=True))
+                + chaos_rows(smoke=True)
+                + sharded_rows(smoke=True))
     return (measured_rows(paged) + shared_prefix_rows()
             + paged_vs_dense_rows() + multi_adapter_rows()
             + speculative_rows() + observability_rows()
-            + chaos_rows() + analytic_rows())
+            + chaos_rows() + sharded_rows() + analytic_rows())
 
 
 def rows_to_json(rows: List[str]) -> List[dict]:
@@ -782,7 +856,8 @@ if __name__ == "__main__":
                    help="dense KV for the measured mixes (A/B baseline)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: shared-prefix + paged-vs-dense "
-                         "+ multi-LoRA + speculative + obs + chaos")
+                         "+ multi-LoRA + speculative + obs + chaos + "
+                         "sharded TP=2")
     ap.add_argument("--chaos-smoke", action="store_true",
                     help="run ONLY the fault-tolerance chaos mix (the "
                          "CI chaos job)")

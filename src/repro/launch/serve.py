@@ -3,12 +3,39 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b \
         --requests 8 --max-tokens 16
 
+``--tp N`` serves one *sharded* replica (tensor parallelism over a
+``("model",)`` mesh, serving/README.md "Sharded serving"); the gateway
+still sees exactly one endpoint.  On a single-CPU host the driver
+forces N XLA host devices so the flag is demoable anywhere.
+
 Restores weights from ``--ckpt-dir`` if present (e.g. from
 ``repro.launch.train``), otherwise serves random-init weights.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
+
+
+def _early_tp_flag():
+    """``--tp N`` on a host with fewer than N devices: force XLA host
+    devices.  Must run before jax's first import — XLA reads the flag
+    once at backend init, so it cannot live in main()."""
+    if "jax" in sys.modules:        # too late; make_mesh will error out
+        return
+    try:
+        n = int(sys.argv[sys.argv.index("--tp") + 1])
+    except (ValueError, IndexError):
+        return
+    if n > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+_early_tp_flag()
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +63,11 @@ def main():
     ap.add_argument("--pool-tokens", type=int, default=None,
                     help="paged KV pool size in tokens (default: "
                          "max_batch * capacity)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree of this replica (one "
+                         "sharded engine = one gateway endpoint); KV "
+                         "heads must divide N; forces N XLA host "
+                         "devices on a single-device machine")
     ap.add_argument("--adapters", type=int, default=0,
                     help="serve N demo LoRA adapters (tenant0..N-1) from "
                          "one adapter pool; requests round-robin across "
@@ -130,6 +162,15 @@ def main():
     if args.metrics_out or args.trace_out:
         from repro.obs import Observability
         obs = Observability()
+    mesh = None
+    if args.tp > 1:
+        if jax.device_count() < args.tp:
+            ap.error(f"--tp {args.tp} needs {args.tp} devices, have "
+                     f"{jax.device_count()} (is jax imported before "
+                     f"repro.launch.serve?)")
+        mesh = jax.make_mesh((args.tp,), ("model",))
+        print(f"tensor parallel: TP={args.tp} over "
+              f"{[d.platform + str(d.id) for d in mesh.devices.flat]}")
     eng = InferenceEngine(cfg, params, max_batch=args.max_batch,
                           capacity=args.capacity,
                           paged=False if args.dense else None,
@@ -138,7 +179,7 @@ def main():
                           speculative=args.speculative,
                           spec_k=args.spec_k,
                           draft_cfg=draft_cfg, draft_params=draft_params,
-                          obs=obs)
+                          obs=obs, mesh=mesh)
     names = [cfg.name]
     if args.adapters:
         from repro.finetune.lora import (LoraConfig, lora_init,
@@ -194,6 +235,13 @@ def main():
             dump_snapshot()
     s = eng.metrics.summary()
     print("metrics:", {k: round(v, 4) for k, v in s.items()})
+    if args.tp > 1:
+        kv = eng.kv_stats()
+        line = f"sharded replica: tp={kv.get('kv_tp_degree', args.tp)}"
+        if "kv_peak_bytes_per_device" in kv:
+            line += (f" peak_kv_per_device="
+                     f"{kv['kv_peak_bytes_per_device']} B")
+        print(line)
     if args.speculative:
         print(f"speculative[{args.speculative}] k={args.spec_k}: "
               f"acceptance={s['spec_acceptance_rate']:.3f} "

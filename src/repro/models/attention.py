@@ -258,8 +258,15 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
     B = q.shape[0]
     _, blk, KV, hd = k_pool.shape
     W = block_tables.shape[1]
-    k_seq = k_pool[block_tables].reshape(B, W * blk, KV, hd)
-    v_seq = v_pool[block_tables].reshape(B, W * blk, KV, hd)
+    # the gather moves block/position dims only; pin the head axis so a
+    # TP partitioner keeps the gathered sequence head-sharded like the
+    # pool (no-op without active sharding rules)
+    k_seq = sharding.constrain(
+        k_pool[block_tables].reshape(B, W * blk, KV, hd),
+        ("act_batch", "act_kvseq", "act_heads", None))
+    v_seq = sharding.constrain(
+        v_pool[block_tables].reshape(B, W * blk, KV, hd),
+        ("act_batch", "act_kvseq", "act_heads", None))
     return decode_attention(q, k_seq, v_seq, lengths)
 
 
@@ -275,8 +282,12 @@ def paged_verify_attention(q, k_pool, v_pool, block_tables, lengths):
     B = q.shape[0]
     _, blk, KV, hd = k_pool.shape
     W = block_tables.shape[1]
-    k_seq = k_pool[block_tables].reshape(B, W * blk, KV, hd)
-    v_seq = v_pool[block_tables].reshape(B, W * blk, KV, hd)
+    k_seq = sharding.constrain(
+        k_pool[block_tables].reshape(B, W * blk, KV, hd),
+        ("act_batch", "act_kvseq", "act_heads", None))
+    v_seq = sharding.constrain(
+        v_pool[block_tables].reshape(B, W * blk, KV, hd),
+        ("act_batch", "act_kvseq", "act_heads", None))
     return verify_attention(q, k_seq, v_seq, lengths)
 
 
@@ -330,6 +341,14 @@ def attention_block(cfg: ModelConfig, p, x, positions, *,
                 k[:, t].astype(k_cache.dtype))
             v_cache = v_cache.at[pb, off].set(
                 v[:, t].astype(v_cache.dtype))
+        # pool leaves are (num_blocks, block_size, KV, hd): the block and
+        # in-block dims sit in the (act_batch, act_kvseq) slots, which a
+        # serving rule set maps to None — so this pins exactly the head
+        # axis and the updated pool keeps the input pool's sharding
+        k_cache = sharding.constrain(
+            k_cache, ("act_batch", "act_kvseq", "act_heads", None))
+        v_cache = sharding.constrain(
+            v_cache, ("act_batch", "act_kvseq", "act_heads", None))
         if S == 1:
             o = paged_decode_attention(q, k_cache, v_cache, block_tables,
                                        lengths)

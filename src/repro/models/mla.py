@@ -147,6 +147,11 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
             off = idx % blk
             ckv_p = ckv_p.at[pb, off].set(c_kv[:, t].astype(ckv_p.dtype))
             kpe_p = kpe_p.at[pb, off].set(k_pe[:, t].astype(kpe_p.dtype))
+        # latent pool leaves have no head axis — under serving_tp these
+        # resolve to fully-replicated specs (the MLA cache is small
+        # enough to replicate; scores still shard on act_heads below)
+        ckv_p = sharding.constrain(ckv_p, ("act_batch", "act_kvseq", None))
+        kpe_p = sharding.constrain(kpe_p, ("act_batch", "act_kvseq", None))
         new_cache = {"ckv": ckv_p, "kpe": kpe_p}
         # gather each sequence's blocks into logical order (jnp oracle;
         # a paged-MLA Pallas kernel would walk the table in SMEM instead)

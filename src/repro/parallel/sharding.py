@@ -15,6 +15,14 @@ evenly (head counts 12..64 do not divide 16; d_model/d_ff always do):
   (vLLM-style replica×TP), KV-cache sequence over "model".
 - long (batch=1): KV/state over ("data","model") combined, SSM heads over
   "model".
+- serving_tp: single-replica tensor parallelism for the inference engine
+  (serving/README.md "Sharded serving"): params TP over "model" with NO
+  fsdp (weights replicated along their fsdp dim), attention head-sharded
+  (act_heads -> "model", so the paged KV pool shards on its KV-head axis
+  and block tables stay host-side), MLPs row/col-sharded (act_ff ->
+  "model"), embeddings and logits replicated (act_vocab -> None: the
+  unembed output is all-gathered once per step so sampling runs
+  replicated and token-identical on every device).
 """
 from __future__ import annotations
 
@@ -82,7 +90,7 @@ _BASE = {
 
 
 def make_rules(kind: str, multi_pod: bool = False, **overrides) -> RuleSet:
-    """kind: train | prefill | decode | long."""
+    """kind: train | prefill | decode | long | serving_tp."""
     r = dict(_BASE)
     batch = ("pod", "data") if multi_pod else ("data",)
     if kind in ("train", "prefill"):
@@ -101,6 +109,31 @@ def make_rules(kind: str, multi_pod: bool = False, **overrides) -> RuleSet:
             act_batch=None,
             act_qseq=None,
             act_kvseq=kv,
+        )
+    elif kind == "serving_tp":
+        # one sharded replica: every batch/sequence axis stays local (the
+        # engine's continuous batch is one replica's traffic), parameters
+        # are pure-TP over "model" (no fsdp — a serving replica gains
+        # nothing from gather-per-layer), attention is head-sharded so a
+        # paged pool leaf (num_blocks, block_size, KV, hd) shards on its
+        # KV-head axis and the host-side block tables are untouched, and
+        # logits are replicated (one all-gather per step) so sampling is
+        # identical on every device.
+        r.update(
+            fsdp=None,
+            # expert=None routes moe_block's "auto" dispatch to the exact
+            # dense impl with replicated routed experts (shared experts
+            # stay TP-sharded via "tensor"/act_ff): decode tokens-per-
+            # step is tiny, so EP's per-step all-to-all costs more than
+            # it saves — and the dense impl is the jax<0.5-safe oracle
+            expert=None,
+            act_batch=None,
+            act_qseq=None,
+            act_kvseq=None,
+            act_heads="model",
+            act_ssm_heads=None,
+            act_vocab=None,
+            act_expert=None,
         )
     else:
         raise ValueError(kind)
@@ -167,6 +200,23 @@ def tree_shardings(axes_tree, mesh: Mesh, rules: RuleSet):
     return jax.tree.map(_one, axes_tree,
                         is_leaf=lambda x: isinstance(x, tuple) and all(
                             a is None or isinstance(a, str) for a in x))
+
+
+def sharded_jit(fn, mesh: Optional[Mesh] = None,
+                rules: Optional[RuleSet] = None, **jit_kw):
+    """``jax.jit(fn)`` whose trace (and every retrace) runs under
+    ``use_rules(mesh, rules)`` so the ``constrain`` calls inside model
+    code bind to real NamedShardings.  With ``mesh=None`` this is plain
+    ``jax.jit`` — the single-device path compiles the identical jaxpr it
+    always did (``constrain`` is a no-op without an active context)."""
+    if mesh is None:
+        return jax.jit(fn, **jit_kw)
+
+    def wrapped(*args):
+        with use_rules(mesh, rules):
+            return fn(*args)
+
+    return jax.jit(wrapped, **jit_kw)
 
 
 def mesh_axis_size(axis: AxisVal) -> int:

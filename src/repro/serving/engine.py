@@ -35,9 +35,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.parallel import sharding
 from repro.serving.adapters import AdapterPool, supports_multi_lora
 from repro.serving.faults import EngineFailure, EngineTimeout
-from repro.serving.kvcache import BlockLedger, CacheSlots, PagedCacheSlots
+from repro.serving.kvcache import (BlockLedger, CacheSlots, PagedCacheSlots,
+                                   constrain_cache)
 from repro.serving.metrics import MetricsCollector, TracingMetricsCollector
 from repro.serving.sampling import (sample, sample_batched,
                                     spec_accept_batched)
@@ -78,7 +80,8 @@ class InferenceEngine:
                  speculative: Optional[str] = None,
                  spec_k: int = 4,
                  draft_cfg=None, draft_params=None,
-                 obs=None, faults=None):
+                 obs=None, faults=None,
+                 mesh=None, rules=None):
         """``paged=None`` auto-selects the paged KV path when the
         architecture supports it.  ``pool_tokens`` sizes the shared block
         pool (default ``max_batch * capacity`` — the dense footprint);
@@ -121,11 +124,35 @@ class InferenceEngine:
         :meth:`collect_metrics` pulls KV-pool / prefix-cache /
         adapter-pool state into ``obs.registry`` on demand.  All
         instrumentation is host-side Python — nothing crosses the jit
-        boundary or syncs the device."""
+        boundary or syncs the device.
+
+        ``mesh`` (a ``jax.sharding.Mesh`` with a ``"model"`` axis, default
+        None) makes the replica *tensor-parallel*: parameters are loaded
+        as NamedShardings under ``rules`` (default
+        ``make_rules("serving_tp")`` — head-sharded attention, row/col
+        MLPs, replicated embeddings), the KV pool/cache shards on its
+        head axis (MLA's latent stays replicated), and every fused jit
+        traces under those rules so prefill, paged decode, multi-LoRA,
+        and speculative verify all run SPMD without host round-trips.
+        Block tables, lengths, and the whole scheduler stay host-side
+        and layout-invariant.  ``mesh=None`` leaves the single-device
+        code path bit-for-bit untouched."""
         self.cfg, self.params = cfg, params
         self.name = name
         self.clock = clock
         self.obs = obs
+        self.mesh = mesh
+        self.rules = None
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"serving mesh needs a 'model' axis, got "
+                    f"{mesh.axis_names}")
+            self.rules = rules or sharding.make_rules("serving_tp")
+            self.params = jax.device_put(
+                params, sharding.tree_shardings(
+                    M.model_param_axes(cfg), mesh, self.rules))
+        self.tp = 1 if mesh is None else int(mesh.devices.size)
         self.paged = M.supports_paged_cache(cfg) if paged is None else paged
         self.adapters: Optional[AdapterPool] = None
         if adapter_slots > 0:
@@ -135,9 +162,10 @@ class InferenceEngine:
         if self.paged:
             self.slots = PagedCacheSlots(
                 cfg, max_batch, capacity, block_size=sched.prefix_block,
-                pool_tokens=pool_tokens)
+                pool_tokens=pool_tokens, mesh=mesh, rules=self.rules)
         else:
-            self.slots = CacheSlots(cfg, max_batch, capacity)
+            self.slots = CacheSlots(cfg, max_batch, capacity,
+                                    mesh=mesh, rules=self.rules)
         self.ledger = BlockLedger(capacity * max_batch, block_size)
         self.capacity = capacity
         self.queue: deque[Request] = deque()
@@ -151,9 +179,23 @@ class InferenceEngine:
         self.faults = faults
         self.steps = 0
 
-        self._prefill = jax.jit(
-            lambda p, b, lo, ai: M.prefill(cfg, p, b, lora=lo,
-                                           adapter_ids=ai))
+        # every fused step traces under the engine's (mesh, rules) via
+        # sharded_jit — with mesh=None that is plain jax.jit and the
+        # constrain/constrain_cache calls are no-ops, so the
+        # single-device jaxprs are byte-identical to the unsharded
+        # engine's.  Cache/pool outputs are re-constrained before
+        # returning so the donated buffers keep a stable NamedSharding
+        # across micro-steps (no per-step resharding, no recompiles).
+        cache_axes = self.slots._axes
+        mk_jit = lambda f, **kw: sharding.sharded_jit(  # noqa: E731
+            f, mesh, self.rules, **kw)
+
+        def _prefill_fn(p, b, lo, ai):
+            logits, cache, aux = M.prefill(cfg, p, b, lora=lo,
+                                           adapter_ids=ai)
+            return logits, constrain_cache(cache, cache_axes), aux
+
+        self._prefill = mk_jit(_prefill_fn)
 
         # decode + batched sampling fused in one jitted step: per-slot
         # temperature/top-k/top-p vectors in, sampled tokens out — the
@@ -166,6 +208,7 @@ class InferenceEngine:
         def _fused(p, t, c, l, key, temps, tks, tps, lo, ai, greedy):
             logits, nc = M.decode_step(cfg, p, t, c, l, lora=lo,
                                        adapter_ids=ai)
+            nc = constrain_cache(nc, cache_axes)
             if greedy:
                 return jnp.argmax(logits, -1).astype(jnp.int32), nc
             return sample_batched(logits, key, temps, tks, tps), nc
@@ -174,14 +217,15 @@ class InferenceEngine:
                          greedy):
             logits, np_ = M.decode_step_paged(cfg, p, t, pool, bt, l,
                                               lora=lo, adapter_ids=ai)
+            np_ = constrain_cache(np_, cache_axes)
             if greedy:
                 return jnp.argmax(logits, -1).astype(jnp.int32), np_
             return sample_batched(logits, key, temps, tks, tps), np_
 
-        self._decode_sample = jax.jit(_fused, static_argnums=(10,))
-        self._decode_sample_paged = jax.jit(_fused_paged,
-                                            donate_argnums=(2,),
-                                            static_argnums=(11,))
+        self._decode_sample = mk_jit(_fused, static_argnums=(10,))
+        self._decode_sample_paged = mk_jit(_fused_paged,
+                                           donate_argnums=(2,),
+                                           static_argnums=(11,))
 
         # speculative decoding: draft up to spec_k tokens per sequence,
         # score them in ONE multi-token verify launch, accept/reject
@@ -203,6 +247,7 @@ class InferenceEngine:
                           lo, ai, greedy):
             logits, nc = M.verify_step(cfg, p, t, c, l, lora=lo,
                                        adapter_ids=ai)
+            nc = constrain_cache(nc, cache_axes)
             out, nem = spec_accept_batched(logits, t, dprobs, nd, key,
                                            temps, tks, tps, greedy)
             return out, nem, nc
@@ -211,14 +256,15 @@ class InferenceEngine:
                                 dprobs, nd, lo, ai, greedy):
             logits, np_ = M.verify_step_paged(cfg, p, t, pool, bt, l,
                                               lora=lo, adapter_ids=ai)
+            np_ = constrain_cache(np_, cache_axes)
             out, nem = spec_accept_batched(logits, t, dprobs, nd, key,
                                            temps, tks, tps, greedy)
             return out, nem, np_
 
-        self._verify = jax.jit(_verify_fused, static_argnums=(12,))
-        self._verify_paged = jax.jit(_verify_fused_paged,
-                                     donate_argnums=(2,),
-                                     static_argnums=(13,))
+        self._verify = mk_jit(_verify_fused, static_argnums=(12,))
+        self._verify_paged = mk_jit(_verify_fused_paged,
+                                    donate_argnums=(2,),
+                                    static_argnums=(13,))
         self.scheduler = ChunkedPrefillScheduler(self, sched)
 
     # ------------------------------------------------------------ API
@@ -328,18 +374,31 @@ class InferenceEngine:
     def kv_stats(self) -> Dict[str, int]:
         """KV-memory accounting in blocks: live + peak usage, and total.
         Paged engines report real pool blocks (shared prefix blocks count
-        once); dense engines report ledger reservations."""
+        once) plus per-device byte figures (on a TP mesh a GQA pool
+        block is split across devices on its head axis, so per-device
+        peak KV shrinks ~1/tp); dense engines report ledger
+        reservations."""
         if self.paged:
             bp = self.slots.bp
+            # bytes one device holds for the whole pool: shard size for
+            # TP-sharded leaves, full size for replicated ones (MLA)
+            dev_pool = sum(
+                leaf.addressable_shards[0].data.nbytes
+                for leaf in jax.tree.leaves(self.slots.pool))
+            per_block = dev_pool // bp.num_blocks
             return {"kv_blocks_used": bp.num_used,
                     "kv_blocks_peak": bp.peak_used,
                     "kv_blocks_total": bp.num_blocks - 1,
-                    "kv_block_size": self.slots.block_size}
+                    "kv_block_size": self.slots.block_size,
+                    "kv_tp_degree": self.tp,
+                    "kv_block_bytes_per_device": per_block,
+                    "kv_peak_bytes_per_device": per_block * bp.peak_used}
         return {"kv_blocks_used": self.ledger.total_blocks
                 - self.ledger.free_blocks,
                 "kv_blocks_peak": self.ledger.peak_blocks,
                 "kv_blocks_total": self.ledger.total_blocks,
-                "kv_block_size": self.ledger.block_size}
+                "kv_block_size": self.ledger.block_size,
+                "kv_tp_degree": self.tp}
 
     def collect_metrics(self, registry=None):
         """Pull every serving subsystem's state into a metrics registry

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.parallel import sharding
 
 
 def tree_walk(fn, tree, axes):
@@ -52,6 +53,17 @@ def tree_multi(fn, trees, axes):
         return [tree_multi(fn, [t[i] for t in trees], axes[i])
                 for i in range(len(head))]
     return fn(trees, axes)
+
+
+def constrain_cache(tree, axes):
+    """Re-assert each cache leaf's sharding (inside a jit, under active
+    rules) so donated caches/pools keep a *stable* NamedSharding across
+    steps instead of whatever layout the partitioner picked last.  A
+    no-op without an active rules context — the single-device jaxpr is
+    untouched."""
+    if sharding.active() is None:
+        return tree
+    return tree_walk(lambda a, ax: sharding.constrain(a, ax), tree, axes)
 
 
 class BlockLedger:
@@ -145,20 +157,32 @@ class BlockLedger:
 
 
 class CacheSlots:
-    """Fixed decode batch of B slots, each with ``capacity`` positions."""
+    """Fixed decode batch of B slots, each with ``capacity`` positions.
+
+    With ``mesh`` + ``rules`` the cache leaves are laid out as
+    NamedShardings resolved from their logical axes (under
+    ``serving_tp``: head-sharded for GQA, replicated for the MLA
+    latent) and the insert jit traces under those rules, so a sharded
+    engine's dense fallback keeps KV distributed too."""
 
     def __init__(self, cfg: ModelConfig, max_batch: int, capacity: int,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, mesh=None, rules=None):
         self.cfg = cfg
         self.B = max_batch
         self.capacity = capacity
+        self.mesh, self.rules = mesh, rules
         self.cache = M.make_cache(cfg, max_batch, capacity, dtype)
+        self._axes = M.cache_axes(cfg)
+        if mesh is not None:
+            self.cache = jax.device_put(
+                self.cache,
+                sharding.tree_shardings(self._axes, mesh, rules))
         self.lengths = jnp.ones((max_batch,), jnp.int32)  # 1 = inert slot
         # deque: allocate() pops the head, release() appends — O(1) FIFO
         self.free: Deque[int] = deque(range(max_batch))
         self.slot_owner: Dict[int, str] = {}
-        self._axes = M.cache_axes(cfg)
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._insert = sharding.sharded_jit(self._insert_impl, mesh, rules,
+                                            donate_argnums=(0,))
 
     def _insert_impl(self, cache, prefill_cache, slot):
         """Write a single-sequence prefill cache (1, S, ...) into slot."""
@@ -175,7 +199,8 @@ class CacheSlots:
             src = jnp.pad(src, pads)
             return jax.lax.dynamic_update_slice(dst, src, start)
 
-        return tree_multi(one, [cache, prefill_cache], self._axes)
+        out = tree_multi(one, [cache, prefill_cache], self._axes)
+        return constrain_cache(out, self._axes)
 
     def allocate(self, rid: str) -> Optional[int]:
         if not self.free:
@@ -353,16 +378,27 @@ class PagedCacheSlots:
 
     def __init__(self, cfg: ModelConfig, max_batch: int, capacity: int,
                  dtype=jnp.bfloat16, block_size: int = 16,
-                 pool_tokens: Optional[int] = None):
+                 pool_tokens: Optional[int] = None, mesh=None, rules=None):
         self.cfg = cfg
         self.B = max_batch
         self.capacity = capacity
         self.block_size = block_size
+        self.mesh, self.rules = mesh, rules
         self.blocks_per_seq = -(-capacity // block_size)
         pool_tokens = (max_batch * capacity if pool_tokens is None
                        else pool_tokens)
         num_blocks = 1 + max(pool_tokens // block_size, self.blocks_per_seq)
         self.pool = M.make_paged_pool(cfg, num_blocks, block_size, dtype)
+        self._axes = M.cache_axes(cfg)
+        if mesh is not None:
+            # a pool leaf is (num_blocks, block_size, ...) in the cache's
+            # (act_batch, act_kvseq, ...) axis slots; under serving_tp
+            # both map to None, so the pool shards exactly on the KV-head
+            # axis (GQA) or stays replicated (MLA latent) — block ids,
+            # tables, and all host-side accounting are layout-invariant
+            self.pool = jax.device_put(
+                self.pool,
+                sharding.tree_shardings(self._axes, mesh, rules))
         self.bp = BlockPool(num_blocks)
         self.tables = np.full((max_batch, self.blocks_per_seq), NULL_BLOCK,
                               np.int32)
@@ -370,9 +406,9 @@ class PagedCacheSlots:
         self.seq_blocks: Dict[int, List[int]] = {}
         self.free: Deque[int] = deque(range(max_batch))
         self.slot_owner: Dict[int, str] = {}
-        self._axes = M.cache_axes(cfg)
         self._tables_dev = None
-        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+        self._scatter = sharding.sharded_jit(self._scatter_impl, mesh, rules,
+                                             donate_argnums=(0,))
 
     # ------------------------------------------------------------ tables
     def tables_device(self) -> jax.Array:
@@ -490,7 +526,8 @@ class PagedCacheSlots:
             s = jnp.moveaxis(src, bi, 0)
             return jnp.moveaxis(d.at[ids].set(s), 0, bi)
 
-        return tree_multi(one, [pool, prefill_cache], self._axes)
+        out = tree_multi(one, [pool, prefill_cache], self._axes)
+        return constrain_cache(out, self._axes)
 
     def insert_prefill(self, slot: int, prefill_cache, length: int):
         """Scatter a prefill cache for positions ``[0, length)`` into the

@@ -3,8 +3,18 @@ import sys
 
 # Tests must see the single real CPU device (the dry-run sets its own
 # device-count flag in its subprocess) — so no XLA_FLAGS here, but cap
-# compilation parallelism for the 1-core container.
+# compilation parallelism for the 1-core container.  Exception: the
+# sharded-serving suite opts in to N forced host devices by exporting
+# REPRO_FORCE_DEVICES before launching pytest (its in-suite subprocess
+# wrapper and the CI multi-device job both do); it must be appended
+# before the first jax import.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_n_dev = os.environ.get("REPRO_FORCE_DEVICES")
+if _n_dev and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_n_dev)}").strip()
 
 # Property tests use hypothesis; fall back to the deterministic shim in
 # containers that don't ship it (CI installs the real package).

@@ -1,0 +1,53 @@
+"""Golden-token regression net: one tiny model per architecture family
+runs the full serve path greedily and must reproduce the committed
+tokens exactly.
+
+The fixtures pin serve-path *numerics* end to end (forward pass, KV
+bookkeeping, fused decode sampling): a refactor that perturbs logits
+becomes a loud token diff here instead of a silent quality drop in real
+checkpoints.  If a change breaks these on purpose, regenerate with
+
+    PYTHONPATH=src python tools/regen_goldens.py
+
+and justify the fixture update in the same commit (see the script's
+docstring for the determinism rules).
+"""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden" / "golden_tokens.json").read_text())
+
+
+@pytest.mark.parametrize("family", sorted(GOLDEN))
+def test_golden_tokens(family):
+    g = GOLDEN[family]
+    cfg = scaled_down(get_config(g["arch"]))
+    params = M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = InferenceEngine(cfg, params, max_batch=4, capacity=128)
+    assert eng.paged == g["paged"], "KV layout auto-select changed"
+    reqs = [Request(prompt=list(p), max_new_tokens=len(want))
+            for p, want in zip(g["prompts"], g["generated"])]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    got = [r.generated for r in reqs]
+    assert got == g["generated"], (
+        f"{family} ({g['arch']}) greedy tokens drifted; if intentional, "
+        f"rerun tools/regen_goldens.py and commit the new fixture")
+
+
+def test_golden_fixture_shape():
+    # the fixture itself stays well-formed (regen script contract)
+    assert set(GOLDEN) == {"gqa", "mla_moe", "ssm", "hybrid_moe"}
+    for g in GOLDEN.values():
+        assert len(g["prompts"]) == len(g["generated"]) == 3
+        assert all(len(t) > 0 for t in g["generated"])

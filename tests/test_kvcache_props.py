@@ -1,0 +1,221 @@
+"""Property tests for the paged-KV bookkeeping invariants.
+
+Driven by hypothesis (the real package in CI; tests/_hypothesis_shim.py
+in containers without it — keyword strategies only, deterministic seed).
+Each test interprets a generated op script against the allocator and
+checks the documented invariants after *every* op, not just at the end:
+
+- refcounts are never negative (structurally: a tracked block's count is
+  always >= 1, and the multiset of outstanding holds equals ``refs``);
+- free + used + null == capacity, always;
+- a block is never simultaneously free and allocated, and the null
+  block is never handed out;
+- ``adopt_prefix``/``trim``/``release`` round-trip: adopted (shared)
+  blocks survive trim and release, privately grown tails are returned.
+"""
+from collections import Counter
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config, scaled_down
+from repro.serving.kvcache import (NULL_BLOCK, BlockLedger, BlockPool,
+                                   PagedCacheSlots)
+
+CFG = scaled_down(get_config("qwen1.5-4b"), num_layers=2, d_model=32,
+                  d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                  head_dim=8)
+
+
+def _pool_invariants(bp: BlockPool, held: Counter):
+    # free + used + null == capacity
+    assert bp.num_free + bp.num_used + 1 == bp.num_blocks
+    # refcounts never negative / never zero-but-tracked
+    assert all(r >= 1 for r in bp.refs.values())
+    # the allocator's view matches the holders' view exactly
+    assert dict(held) == bp.refs
+    # no block is both free and allocated; null is neither
+    free = set(bp.free)
+    assert not (free & set(bp.refs))
+    assert NULL_BLOCK not in free and NULL_BLOCK not in bp.refs
+    assert bp.peak_used >= bp.num_used
+
+
+@settings(max_examples=30)
+@given(num_blocks=st.integers(min_value=2, max_value=33),
+       ops=st.lists(st.integers(min_value=0, max_value=10_000),
+                    min_size=1, max_size=80))
+def test_blockpool_random_walk(num_blocks, ops):
+    bp = BlockPool(num_blocks)
+    held = Counter()          # multiset of (block -> outstanding refs)
+    order = []                # flat list for pseudo-random pick
+    for op in ops:
+        kind = op % 3
+        if kind == 0:                                   # alloc n blocks
+            n = (op // 3) % 4 + 1
+            ids = bp.alloc(n)
+            if ids is None:
+                # all-or-nothing: a failed alloc changed nothing
+                assert n > bp.num_free
+            else:
+                assert len(ids) == len(set(ids)) == n
+                assert NULL_BLOCK not in ids
+                held.update(ids)
+                order.extend(ids)
+        elif kind == 1 and order:                       # incref a holder
+            b = order[op % len(order)]
+            bp.incref([b])
+            held[b] += 1
+            order.append(b)
+        elif kind == 2 and order:                       # decref a holder
+            b = order.pop(op % len(order))
+            bp.decref([b])
+            held[b] -= 1
+            if not held[b]:
+                del held[b]
+        _pool_invariants(bp, held)
+    # drain every outstanding ref: the pool must come back whole
+    bp.decref(list(order))
+    assert bp.num_used == 0
+    assert bp.num_free == bp.num_blocks - 1
+
+
+@settings(max_examples=20)
+@given(num_blocks=st.integers(min_value=2, max_value=9),
+       extra=st.integers(min_value=0, max_value=5))
+def test_blockpool_alloc_all_or_nothing(num_blocks, extra):
+    bp = BlockPool(num_blocks)
+    assert bp.alloc(bp.num_free + 1 + extra) is None
+    assert bp.num_free == num_blocks - 1        # failed alloc is a no-op
+    ids = bp.alloc(bp.num_free)                 # exact drain succeeds
+    assert ids is not None and bp.num_free == 0
+    bp.decref(ids)
+    assert bp.num_free == num_blocks - 1
+
+
+def test_blockpool_unallocated_ids_raise():
+    bp = BlockPool(4)
+    with pytest.raises(ValueError):
+        bp.incref([2])
+    with pytest.raises(ValueError):
+        bp.decref([2])
+    with pytest.raises(ValueError):
+        bp.incref([NULL_BLOCK])
+    with pytest.raises(ValueError):
+        BlockPool(1)                            # nothing allocatable
+
+
+@settings(max_examples=30)
+@given(capacity=st.integers(min_value=1, max_value=40),
+       block=st.sampled_from([1, 4, 16]),
+       ops=st.lists(st.integers(min_value=0, max_value=10_000),
+                    min_size=1, max_size=60))
+def test_blockledger_random_walk(capacity, block, ops):
+    led = BlockLedger(capacity * block, block_size=block)
+    shadow = {}                                 # rid -> blocks held
+    for op in ops:
+        rid = f"r{op % 5}"
+        kind = op % 3
+        tokens = (op // 7) % (capacity * block + 1)
+        if kind == 0:
+            if led.can_admit(rid, tokens):
+                led.admit(rid, tokens)
+                shadow[rid] = led.blocks_for(tokens)
+            else:
+                with pytest.raises(RuntimeError):
+                    led.admit(rid, tokens)
+        elif kind == 1:
+            need = led.blocks_for(tokens)
+            held = shadow.get(rid, 0)
+            if need - held <= led.free_blocks:
+                led.grow(rid, tokens)
+                if need > held:        # grow-to-less is a recorded no-op
+                    shadow[rid] = need
+            else:
+                with pytest.raises(RuntimeError):
+                    led.grow(rid, tokens)
+        else:
+            led.release(rid)
+            shadow.pop(rid, None)
+        # never over-committed, and accounting matches the shadow model
+        assert led.free_blocks >= 0
+        assert led.free_blocks == led.total_blocks - sum(shadow.values())
+        assert led.used == shadow
+        assert led.peak_blocks <= led.total_blocks
+
+
+def _slots(pool_blocks=12, block_size=4):
+    return PagedCacheSlots(CFG, max_batch=2, capacity=32,
+                           block_size=block_size,
+                           pool_tokens=pool_blocks * block_size)
+
+
+@settings(max_examples=15)
+@given(grow_to=st.integers(min_value=1, max_value=32),
+       trim_to=st.integers(min_value=1, max_value=32))
+def test_paged_slots_grow_trim_roundtrip(grow_to, trim_to):
+    s = _slots()
+    slot = s.allocate("req")
+    assert s.ensure_capacity(slot, grow_to)
+    bp = s.bp
+    assert len(s.seq_blocks[slot]) == s.blocks_for(grow_to)
+    s.trim(slot, min(trim_to, grow_to))
+    keep = s.blocks_for(max(min(trim_to, grow_to), 1))
+    kept = s.seq_blocks[slot]
+    # trim keeps exactly the blocks covering the surviving length...
+    assert len(kept) == min(keep, s.blocks_for(grow_to))
+    # ...nulls the vacated table tail, and keeps table/seq_blocks aligned
+    assert list(s.tables[slot, :len(kept)]) == kept
+    assert all(b == NULL_BLOCK for b in s.tables[slot, len(kept):])
+    assert bp.num_free + bp.num_used + 1 == bp.num_blocks
+    s.release(slot)
+    assert bp.num_used == 0                     # release returns it all
+    assert s.lengths[slot] == 1                 # inert again
+
+
+@settings(max_examples=15)
+@given(nadopt=st.integers(min_value=1, max_value=4),
+       extra_tokens=st.integers(min_value=0, max_value=16))
+def test_paged_slots_adopt_is_refcounted_and_trim_safe(nadopt, extra_tokens):
+    s = _slots()
+    bp = s.bp
+    # simulate the radix tree holding nadopt whole prompt blocks
+    tree_ids = bp.alloc(nadopt)
+    adopted_len = nadopt * s.block_size
+    slot = s.allocate("req")
+    s.adopt_prefix(slot, tree_ids, adopted_len)
+    assert all(bp.refs[b] == 2 for b in tree_ids)     # tree + slot
+    assert s.lengths[slot] == adopted_len
+    # grow privately past the adopted prefix, then trim back to it:
+    # shared blocks must never be freed by a speculative rollback
+    assert s.ensure_capacity(slot, adopted_len + extra_tokens)
+    s.trim(slot, adopted_len)
+    assert s.seq_blocks[slot] == list(tree_ids)
+    assert all(bp.refs[b] == 2 for b in tree_ids)
+    # release drops the slot's ref; the tree's ref keeps the blocks live
+    s.release(slot)
+    assert all(bp.refs[b] == 1 for b in tree_ids)
+    assert bp.num_used == nadopt
+    bp.decref(tree_ids)                                # tree eviction
+    assert bp.num_used == 0
+    assert bp.num_free + bp.num_used + 1 == bp.num_blocks
+
+
+@settings(max_examples=10)
+@given(lens=st.lists(st.integers(min_value=1, max_value=24),
+                     min_size=1, max_size=2))
+def test_paged_slots_exhaustion_is_explicit(lens):
+    s = _slots(pool_blocks=4, block_size=4)
+    slots = []
+    for i, ln in enumerate(lens):
+        sl = s.allocate(f"r{i}")
+        ok = s.ensure_capacity(sl, ln)
+        if not ok:
+            # a refused grow changed nothing: invariant still holds and
+            # the slot can still be released cleanly
+            assert s.bp.num_free + s.bp.num_used + 1 == s.bp.num_blocks
+        slots.append(sl)
+    for sl in slots:
+        s.release(sl)
+    assert s.bp.num_used == 0

@@ -1,23 +1,53 @@
 """Sharding rules + HLO analyzer unit tests (no fake devices needed)."""
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch import hlo_analysis as H
 from repro.parallel import sharding as sh
 
-# see README "Known jax-version-dependent failures"
-OLD_JAX = tuple(int(x) for x in jax.__version__.split(".")[:2]) < (0, 5)
+
+def norm(spec):
+    """Version-proof PartitionSpec comparison key.
+
+    jax >= 0.5 normalizes ``P(("data",)) == P("data")``; 0.4.x does not,
+    which is the only thing the old blanket xfail on test_rules_train
+    actually covered — the rule table itself is version-independent.
+    Collapsing singleton tuples makes the *real* assertions run (and
+    fail loudly) on every jax we support instead of being skipped."""
+    out = []
+    for p in spec:
+        if isinstance(p, (list, tuple)):
+            p = p[0] if len(p) == 1 else tuple(p)
+        out.append(p)
+    return tuple(out)
 
 
-@pytest.mark.xfail(OLD_JAX, reason="jax<0.5: sharding-rules HLO text "
-                   "differs (README: known version failures)",
-                   strict=False)
 def test_rules_train():
     r = sh.make_rules("train")
-    assert r.spec(("fsdp", "tensor")) == P("data", "model")
-    assert r.spec(("act_batch", "act_qseq", None)) == P(("data",), "model",
-                                                        None)
+    assert norm(r.spec(("fsdp", "tensor"))) == norm(P("data", "model"))
+    assert norm(r.spec(("act_batch", "act_qseq", None))) \
+        == norm(P(("data",), "model", None))
+
+
+def test_rules_serving_tp():
+    r = sh.make_rules("serving_tp")
+    # pure TP params: fsdp dim replicated, tensor dim over "model"
+    assert norm(r.spec(("fsdp", "tensor"))) == norm(P(None, "model"))
+    # paged pool leaf (num_blocks, block_size, KV, hd): only the KV-head
+    # axis shards, so block ids/tables are layout-invariant host state
+    assert norm(r.spec(("act_batch", "act_kvseq", "act_heads", None))) \
+        == norm(P(None, None, "model", None))
+    # MLA latent pool (no head axis) stays replicated
+    assert norm(r.spec(("act_batch", "act_kvseq", None))) == P(None, None,
+                                                               None)
+    # logits replicated (act_vocab -> None): sampling is identical on
+    # every device, no host round-trip to reconcile
+    assert norm(r.spec(("act_batch", None, "act_vocab"))) == P(None, None,
+                                                               None)
+    # dense-MoE dispatch: no expert axis, shared experts still TP
+    assert r.resolve("expert") is None
+    assert r.resolve("act_ff") == "model"
+    assert r.resolve("act_qseq") is None
 
 
 def test_rules_dedup_same_axis():

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Regenerate the golden-token fixtures for tests/test_golden_tokens.py.
+
+Runs one tiny model per architecture family through the serving engine
+at temperature 0 and records the greedy tokens.  The fixtures pin the
+*numerics* of the whole serve path — model forward, paged/dense KV
+bookkeeping, fused decode sampling — so an innocent-looking refactor
+that shifts logits shows up as a token diff, not a silent accuracy drop.
+
+Only rerun this when an intentional change breaks the tokens, and say so
+in the commit that updates the fixture:
+
+    PYTHONPATH=src python tools/regen_goldens.py
+
+Keep everything here deterministic: fixed PRNG seeds, fixed prompts
+derived from a seeded generator, float32 params (bf16 matmul order is
+the first thing a jax upgrade reshuffles), greedy sampling.
+"""
+import json
+import os
+import sys
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax                                                  # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+import numpy as np                                          # noqa: E402
+
+from repro.configs import get_config, scaled_down           # noqa: E402
+from repro.models import model as M                         # noqa: E402
+from repro.serving.engine import InferenceEngine, Request   # noqa: E402
+
+OUT = Path(__file__).resolve().parent.parent / "tests" / "golden" / \
+    "golden_tokens.json"
+
+# one representative per serving-relevant architecture family; the
+# scaled_down defaults keep each family's distinguishing machinery
+# (GQA heads, MLA latent + MoE routing, SSM state, hybrid block period)
+FAMILIES = {
+    "gqa": "qwen1.5-4b",
+    "mla_moe": "deepseek-v2-lite-16b",
+    "ssm": "mamba2-1.3b",
+    "hybrid_moe": "jamba-v0.1-52b",
+}
+MAX_NEW = 10
+
+
+def prompts_for(vocab: int, family: str):
+    # no hash(): it is salted per-process; this seed is stable forever
+    rng = np.random.default_rng(sum(ord(c) for c in family))
+    return [[int(x) for x in rng.integers(1, vocab - 1, n)]
+            for n in (5, 9, 14)]
+
+
+def generate(family: str, arch: str):
+    cfg = scaled_down(get_config(arch))
+    params = M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = InferenceEngine(cfg, params, max_batch=4, capacity=128)
+    prompts = prompts_for(cfg.vocab_size, family)
+    reqs = [Request(prompt=list(p), max_new_tokens=MAX_NEW)
+            for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return {
+        "arch": arch,
+        "paged": bool(eng.paged),
+        "prompts": prompts,
+        "generated": [r.generated for r in reqs],
+    }
+
+
+def main():
+    golden = {fam: generate(fam, arch) for fam, arch in FAMILIES.items()}
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(golden, indent=1) + "\n")
+    for fam, g in golden.items():
+        print(f"{fam:>12} ({g['arch']}, paged={g['paged']}): "
+              f"{g['generated']}")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()
