@@ -799,6 +799,85 @@ def sharded_rows(smoke: bool = False) -> List[str]:
     return rows
 
 
+def disagg_rows(smoke: bool = False) -> List[str]:
+    """ISSUE 9 acceptance: disaggregated prefill/decode serving.
+
+    The same greedy mix through (a) one unified paged engine and (b) a
+    prefill-pool -> KV-handoff -> decode-pool pair driven by the
+    gateway's :class:`DisaggRouter` pipelined batch driver — on paged
+    GQA AND paged MLA.  Hard asserts: outputs token-identical at
+    temperature 0, every prompt exported exactly one handoff and every
+    handoff imported, and the ``repro_serving_handoff_*`` counters plus
+    the handoff-latency histogram all land in ONE gateway metrics
+    snapshot.  TTFT/ITL/tokens-per-s rows are reported for both sides;
+    both pools share one CPU here, so the rows demonstrate phase
+    separation and token-exactness, not acceleration (the paper's
+    point is that the phases want *different* hardware)."""
+    from repro.core.gateway import Gateway
+    from repro.obs import Observability
+
+    gen = 10 if smoke else 24
+    n_req = 6 if smoke else 10
+    rows = []
+    for tag, (cfg, params) in (("gqa", _tiny()), ("mla", _tiny_mla())):
+        rng = np.random.default_rng(41)
+        prompts = [list(map(int, rng.integers(1, cfg.vocab_size - 1,
+                                              int(rng.integers(8, 24)))))
+                   for _ in range(n_req)]
+        uni = InferenceEngine(cfg, params, max_batch=4, capacity=192,
+                              paged=True)
+        ureqs = [Request(prompt=list(p), max_new_tokens=gen)
+                 for p in prompts]
+        for r in ureqs:
+            uni.submit(r)
+        su = uni.run_until_idle()
+        base = [r.generated for r in ureqs]
+
+        obs = Observability()
+        pre = InferenceEngine(cfg, params, max_batch=4, capacity=192,
+                              paged=True, role="prefill", obs=obs,
+                              name=f"{tag}-prefill0")
+        dec = InferenceEngine(cfg, params, max_batch=4, capacity=192,
+                              paged=True, role="decode", obs=obs,
+                              name=f"{tag}-decode0")
+        gw = Gateway(obs=obs)
+        router = gw.bind_disagg(cfg.name, [pre], [dec])
+        dreqs = [Request(prompt=list(p), max_new_tokens=gen)
+                 for p in prompts]
+        outs = router.run_pipelined(dreqs)
+        sd = dec.metrics.summary()
+        sp = pre.metrics.summary()
+        identical = int(outs == base)
+        snap = gw.collect_metrics().snapshot()
+        n_out = snap.get("repro_serving_handoff_exported_total", 0)
+        n_in = snap.get("repro_serving_handoff_imported_total", 0)
+        n_bytes = snap.get("repro_serving_handoff_bytes_total", 0)
+        n_lat = snap.get("repro_serving_handoff_seconds",
+                         {}).get("count", 0)
+        rows += [
+            f"serve_disagg_{tag}_outputs_identical,{identical},"
+            f"token-for-token vs unified paged engine at temperature 0 "
+            f"(hard assert)",
+            f"serve_disagg_{tag}_ttft_p50,{sd['ttft_p50_s'] * 1e6:.0f},"
+            f"unified={su['ttft_p50_s'] * 1e6:.0f} (us; disagg TTFT "
+            f"includes the handoff import)",
+            f"serve_disagg_{tag}_itl_mean,{sd['itl_mean_s'] * 1e6:.0f},"
+            f"unified={su['itl_mean_s'] * 1e6:.0f} (us)",
+            f"serve_disagg_{tag}_decode_tokens_per_s,"
+            f"{sd['tokens_per_s']:.1f},unified={su['tokens_per_s']:.1f}"
+            f" (both pools share one CPU: parity, not speedup)",
+            f"serve_disagg_{tag}_handoffs,{n_out:.0f},"
+            f"imported={n_in:.0f} payload_bytes={n_bytes:.0f}"
+            f" latency_samples={n_lat:.0f}",
+        ]
+        assert identical, f"disagg ({tag}) diverged from unified tokens"
+        assert sp["handed_off"] == n_req and sd["completed"] == n_req, (
+            sp["handed_off"], sd["completed"])
+        assert n_out == n_req and n_in >= n_req, (n_out, n_in)
+        assert n_bytes > 0 and n_lat >= n_req, (n_bytes, n_lat)
+    return rows
+
+
 def analytic_itl(arch: str, tp: int, batch: int, ctx: int) -> float:
     """Decode step latency (s) on v5e: max(weights+KV reads / HBM, flops)."""
     cfg = get_config(arch)
@@ -828,11 +907,13 @@ def run(paged: Optional[bool] = None, smoke: bool = False) -> List[str]:
                 + speculative_rows(smoke=True)
                 + observability_rows(smoke=True)
                 + chaos_rows(smoke=True)
-                + sharded_rows(smoke=True))
+                + sharded_rows(smoke=True)
+                + disagg_rows(smoke=True))
     return (measured_rows(paged) + shared_prefix_rows()
             + paged_vs_dense_rows() + multi_adapter_rows()
             + speculative_rows() + observability_rows()
-            + chaos_rows() + sharded_rows() + analytic_rows())
+            + chaos_rows() + sharded_rows() + disagg_rows()
+            + analytic_rows())
 
 
 def rows_to_json(rows: List[str]) -> List[dict]:
@@ -861,6 +942,9 @@ if __name__ == "__main__":
     ap.add_argument("--chaos-smoke", action="store_true",
                     help="run ONLY the fault-tolerance chaos mix (the "
                          "CI chaos job)")
+    ap.add_argument("--disagg-smoke", action="store_true",
+                    help="run ONLY the disaggregated prefill/decode mix "
+                         "(the CI disagg job)")
     ap.add_argument("--json", default="",
                     help="also write rows as JSON to this path (CI "
                          "uploads it as a build artifact)")
@@ -868,6 +952,8 @@ if __name__ == "__main__":
     paged = False if args.dense else True
     if args.chaos_smoke:
         rows = chaos_rows(smoke=True)
+    elif args.disagg_smoke:
+        rows = disagg_rows(smoke=True)
     else:
         rows = run(paged=paged, smoke=args.smoke)
     print("\n".join(rows))

@@ -131,6 +131,218 @@ class ModelEntry:
     footprint_gb: float = 0.0
 
 
+class DisaggRouter:
+    """Prefill/decode pool pairing for one model (disaggregated serving).
+
+    The paper's observation is that the two inference phases stress
+    different resources — prefill is compute-bound and batch-friendly,
+    decode is latency- and bandwidth-bound — so they belong on
+    different pools.  This router owns one model's pair: a request
+    prefills on a ``role="prefill"`` engine, the finished KV leaves as a
+    host-side :class:`~repro.serving.kvcache.KVHandoff`, and a
+    ``role="decode"`` engine imports it and streams every output token
+    (token-identical to a unified engine at temperature 0).
+
+    The gateway's resilience machinery applies *per phase*: each pool is
+    picked through the same health/breaker/queue-depth gates
+    (:meth:`Gateway._pick_from`), failures feed the failing engine's own
+    breaker, and the retry loop resumes from the furthest durable state
+    — a crash before export re-prefills, a crash mid-decode re-imports
+    the SAME cached handoff (the request's committed tokens were folded
+    at evacuation, so resumption is token-exact).  When a pool has no
+    healthy engine and the gateway has unified endpoints bound for the
+    model, :meth:`Gateway.completion` falls back to them.
+    """
+
+    def __init__(self, gateway: "Gateway", model: str,
+                 prefill: List[InferenceEngine],
+                 decode: List[InferenceEngine]):
+        self.gw = gateway
+        self.model = model
+        self.prefill = list(prefill)
+        self.decode = list(decode)
+        self._h_handoff = None
+        if gateway.obs is not None:
+            self._h_handoff = gateway.obs.registry.histogram(
+                "repro_serving_handoff_seconds",
+                "prefill export to decode import latency")
+
+    def _note_handoff(self, ho, src, dst):
+        gw = self.gw
+        if gw.obs is None:
+            return
+        self._h_handoff.observe(max(0.0, gw.clock() - ho.exported_at))
+        gw.obs.tracer.instant(
+            "gateway", "handoff", cat="gateway", rid=ho.request_id,
+            src=src.name, dst=dst.name, tokens=ho.length,
+            payload_bytes=ho.payload_bytes)
+
+    # ------------------------------------------------------------ phases
+    def _pop_pair(self, eng, req):
+        """Pull this request's (req, handoff) pair off the prefill
+        engine's outbox — matched by identity, the engine batches other
+        requests' exports too."""
+        for i, (r, h) in enumerate(eng.outbox):
+            if r is req:
+                del eng.outbox[i]
+                return h
+        return None
+
+    def _prefill_phase(self, req, ns, adapter, deadline, deadline_s,
+                       run):
+        gw = self.gw
+        eng = gw._pick_from(self.prefill, f"{self.model} prefill pool",
+                            prompt=list(req.prompt), namespace=ns,
+                            adapter=adapter)
+        br = gw._breaker(eng)
+        try:
+            rid = eng.submit(req)
+            if run:
+                eng.run_until_idle(deadline=deadline)
+        except EngineTimeout as e:
+            de = DeadlineExceeded(
+                f"deadline of {deadline_s}s exceeded on {eng.name} "
+                f"(prefill)")
+            raise de from e
+        except EngineFailure as e:
+            br.record_failure()
+            uf = UpstreamFailure(f"{eng.name}: {e}")
+            uf.__cause__ = e
+            raise uf
+        ho = self._pop_pair(eng, req)
+        if ho is None and not req.done:
+            # the request left the engine without an export and without
+            # finishing (evacuated by a crash surfaced on another
+            # request's drive): an upstream failure, so the retry loop
+            # re-prefills token-exactly
+            br.record_failure()
+            uf = UpstreamFailure(
+                f"{eng.name}: no handoff exported for {req.request_id}")
+            raise uf
+        br.record_success()
+        return eng, rid, ho
+
+    def _decode_phase(self, req, ho, ns, adapter, deadline, deadline_s,
+                      run, src):
+        gw = self.gw
+        eng = gw._pick_from(self.decode, f"{self.model} decode pool",
+                            prompt=list(req.prompt), namespace=ns,
+                            adapter=adapter)
+        br = gw._breaker(eng)
+        try:
+            eng.submit_handoff(req, ho)
+            self._note_handoff(ho, src, eng)
+            if run:
+                eng.run_until_idle(deadline=deadline)
+        except EngineTimeout as e:
+            de = DeadlineExceeded(
+                f"deadline of {deadline_s}s exceeded on {eng.name} "
+                f"(decode)")
+            raise de from e
+        except EngineFailure as e:
+            br.record_failure()
+            uf = UpstreamFailure(f"{eng.name}: {e}")
+            uf.__cause__ = e
+            raise uf
+        br.record_success()
+        return eng
+
+    # -------------------------------------------------------- completion
+    def completion(self, k, base, adapter, ns, req, n_prompt, budget,
+                   deadline, deadline_s, run, model):
+        """Two-phase attempt loop with the gateway's retry semantics.
+        The handoff payload is cached host-side across attempts: once
+        prefill succeeded, only the decode phase is retried."""
+        gw = self.gw
+        if not run:
+            raise GatewayError(
+                "disaggregated serving drives both phases itself; "
+                "run=False is only supported on unified endpoints")
+        attempt = 0
+        src, rid, ho = None, None, None
+        while True:
+            err: GatewayError
+            try:
+                if ho is None:
+                    src, rid, ho = self._prefill_phase(
+                        req, ns, adapter, deadline, deadline_s, run)
+                    if ho is None:
+                        # rejected at admission (can never fit / bad
+                        # adapter): metered like the unified path
+                        return gw._meter(k, base, adapter, req, rid,
+                                         n_prompt, src)
+                eng = self._decode_phase(req, ho, ns, adapter, deadline,
+                                         deadline_s, run, src)
+                return gw._meter(k, base, adapter, req, rid, n_prompt,
+                                 eng)
+            except Unauthorized:
+                raise
+            except DeadlineExceeded as de:
+                gw._note_reject(de, model)
+                raise
+            except NoHealthyEndpoint as e:
+                if gw.endpoints.get(base):
+                    raise    # Gateway.completion falls back to unified
+                err = e
+            except GatewayError as e:
+                err = e
+            attempt += 1
+            if attempt > budget:
+                gw._note_reject(err, model)
+                raise err
+            delay = gw._backoff.delay(attempt - 1)
+            if deadline is not None and gw.clock() + delay >= deadline:
+                de = DeadlineExceeded(
+                    f"deadline of {deadline_s}s exceeded after "
+                    f"{attempt} attempt(s)")
+                de.__cause__ = err
+                gw._note_reject(de, model)
+                raise de
+            gw._note_retry(err, attempt, delay)
+            gw._sleep(delay)
+
+    # --------------------------------------------------------- pipelined
+    def run_pipelined(self, requests: List[Request],
+                      namespace: str = "",
+                      max_steps: int = 100_000) -> List[List[int]]:
+        """Batch driver used by benchmarks and load tests: submit every
+        request to the prefill pool, then step both pools in lockstep,
+        moving exported handoffs to the decode pool as they appear — so
+        the prefill engines are already prefilling request N+1 while the
+        decode engines stream request N's tokens.  Returns each
+        request's generated tokens in submission order."""
+        gw = self.gw
+        for r in requests:
+            eng = gw._pick_from(self.prefill,
+                                f"{self.model} prefill pool",
+                                prompt=list(r.prompt),
+                                namespace=namespace, adapter=r.adapter)
+            eng.submit(r)
+        while max_steps:
+            busy = False
+            for e in self.prefill:
+                if e.num_active:
+                    e.step()
+                    busy = True
+                while e.outbox:
+                    req, ho = e.outbox.popleft()
+                    dst = gw._pick_from(self.decode,
+                                        f"{self.model} decode pool",
+                                        prompt=list(req.prompt),
+                                        namespace=namespace,
+                                        adapter=req.adapter)
+                    dst.submit_handoff(req, ho)
+                    self._note_handoff(ho, e, dst)
+            for d in self.decode:
+                if d.num_active:
+                    d.step()
+                    busy = True
+            if not busy:
+                break
+            max_steps -= 1
+        return [list(r.generated) for r in requests]
+
+
 class Gateway:
     def __init__(self, clock: Callable[[], float] = time.monotonic,
                  obs=None, *, retry_budget: int = 0,
@@ -163,6 +375,9 @@ class Gateway:
         self.keys: Dict[str, ApiKey] = {}
         self.models: Dict[str, ModelEntry] = {}
         self.endpoints: Dict[str, List[InferenceEngine]] = {}
+        # model -> DisaggRouter (prefill/decode pool pair); consulted
+        # before the unified endpoints, which stay the fallback
+        self.routers: Dict[str, DisaggRouter] = {}
         self._windows: Dict[str, deque] = {}
         # adapter -> owning project.  An owned adapter is a tenant's
         # private fine-tune: only that project's keys may serve it.
@@ -246,6 +461,21 @@ class Gateway:
     def bind_endpoints(self, model: str, engines: List[InferenceEngine]):
         self.endpoints[model] = list(engines)
 
+    def bind_disagg(self, model: str, prefill: List[InferenceEngine],
+                    decode: List[InferenceEngine],
+                    unified: Optional[List[InferenceEngine]] = None) \
+            -> DisaggRouter:
+        """Register a disaggregated prefill/decode pool pair for
+        ``model``.  ``completion`` routes through the pair first;
+        ``unified`` (or engines already bound via
+        :meth:`bind_endpoints`) serve as the fallback when either pool
+        has no healthy engine."""
+        router = DisaggRouter(self, model, prefill, decode)
+        self.routers[model] = router
+        if unified is not None:
+            self.bind_endpoints(model, unified)
+        return router
+
     def own_adapter(self, adapter: str, project: str):
         """Record ``project`` as the owner of ``adapter``: a fine-tune
         can regurgitate its training data, so an owned adapter is only
@@ -283,11 +513,21 @@ class Gateway:
 
     def _pick(self, model: str, prompt: Optional[List[int]] = None,
               namespace: str = "", adapter: str = "") -> InferenceEngine:
-        """Least-loaded healthy replica, with prefix affinity: when a
-        prompt is given, prefer the replica whose radix tree holds the
-        longest matching prefix (ties fall back to load).  With an
-        ``adapter``, only replicas whose pool has it registered are
-        eligible; among those, replicas where it is already
+        """Least-loaded healthy replica among ``model``'s unified
+        endpoints — see :meth:`_pick_from` for the gate order."""
+        return self._pick_from(self.endpoints.get(model, []), model,
+                               prompt=prompt, namespace=namespace,
+                               adapter=adapter)
+
+    def _pick_from(self, pool: List[InferenceEngine], what: str,
+                   prompt: Optional[List[int]] = None,
+                   namespace: str = "", adapter: str = "") \
+            -> InferenceEngine:
+        """Least-loaded healthy replica from ``pool``, with prefix
+        affinity: when a prompt is given, prefer the replica whose radix
+        tree holds the longest matching prefix (ties fall back to load).
+        With an ``adapter``, only replicas whose pool has it registered
+        are eligible; among those, replicas where it is already
         device-resident (no load on admit) win ties.
 
         Resilience gates, in order: replicas whose ``health()`` is not
@@ -297,10 +537,10 @@ class Gateway:
         bounded — :class:`Overloaded` when that leaves nothing.  A
         half-open breaker wins routing outright: its single probe is how
         a recovered replica re-earns traffic."""
-        engines = [e for e in self.endpoints.get(model, [])
-                   if self._health(e) == "ok"]
+        model = what
+        engines = [e for e in pool if self._health(e) == "ok"]
         if not engines:
-            raise NoHealthyEndpoint(f"no healthy endpoint for {model}")
+            raise NoHealthyEndpoint(f"no healthy endpoint for {what}")
         if adapter:
             engines = [e for e in engines if e.adapters is not None
                        and e.adapters.has(adapter)]
@@ -385,6 +625,24 @@ class Gateway:
             deadline_s = self.deadline_s
         deadline = (None if deadline_s is None
                     else self.clock() + deadline_s)
+        router = self.routers.get(base)
+        if router is not None:
+            try:
+                return router.completion(k, base, adapter, ns, req,
+                                         n_prompt, budget, deadline,
+                                         deadline_s, run, model)
+            except NoHealthyEndpoint as e:
+                if not self.endpoints.get(base):
+                    self._note_reject(e, model)
+                    raise
+                # one pool is empty or entirely unhealthy: fall back to
+                # the unified engines below (the request object already
+                # carries any folded progress, so the resumption stays
+                # token-exact)
+                if self.obs is not None:
+                    self.obs.tracer.instant(
+                        "gateway", "disagg_fallback", cat="gateway",
+                        model=model, reason=str(e))
         attempt = 0
         while True:
             err: GatewayError
@@ -497,7 +755,11 @@ class Gateway:
         reg.gauge("repro_gateway_models_count",
                   "models onboarded").set(len(self.models))
         seen = set()
-        for engines in self.endpoints.values():
+        pools = list(self.endpoints.values())
+        for router in self.routers.values():
+            pools.append(router.prefill)
+            pools.append(router.decode)
+        for engines in pools:
             for eng in engines:
                 if id(eng) not in seen and hasattr(eng, "collect_metrics"):
                     seen.add(id(eng))

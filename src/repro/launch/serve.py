@@ -91,6 +91,19 @@ def main():
                          "weights unless --draft-ckpt-dir is given")
     ap.add_argument("--draft-ckpt-dir", default="",
                     help="checkpoint dir for the draft model's weights")
+    ap.add_argument("--role", choices=["unified", "prefill", "decode"],
+                    default="unified",
+                    help="engine role (disaggregated serving): "
+                         "'prefill' runs prompts to KV-handoff export "
+                         "and reports the outbox (one side of a "
+                         "disaggregated deployment); 'decode' alone is "
+                         "an error (nothing feeds it handoffs) — use "
+                         "--disagg for the full pair in one process")
+    ap.add_argument("--disagg", action="store_true",
+                    help="serve a disaggregated prefill/decode engine "
+                         "pair behind the gateway's DisaggRouter "
+                         "(prefill pool -> KV handoff -> decode pool; "
+                         "token-identical to unified at temperature 0)")
     ap.add_argument("--chaos", nargs="?", const="crash@micro_step:8",
                     default=None, metavar="KIND@POINT[:AT_CALL]",
                     help="arm fault injection on the engine (e.g. "
@@ -136,6 +149,12 @@ def main():
             except Exception as e:  # noqa: BLE001
                 print(f"no usable checkpoint ({e}); serving random init")
 
+    if args.role == "decode" and not args.disagg:
+        ap.error("--role decode has no handoff source in a single-engine "
+                 "process; use --disagg for the prefill/decode pair")
+    if (args.disagg or args.role != "unified") and args.dense:
+        ap.error("disaggregated roles need the paged KV layout "
+                 "(KV handoffs are block-granular); drop --dense")
     adapter_slots = (min(args.adapters, 4) if args.adapter_slots is None
                      else args.adapter_slots)
     if args.adapters and adapter_slots < 1:
@@ -171,15 +190,28 @@ def main():
         mesh = jax.make_mesh((args.tp,), ("model",))
         print(f"tensor parallel: TP={args.tp} over "
               f"{[d.platform + str(d.id) for d in mesh.devices.flat]}")
-    eng = InferenceEngine(cfg, params, max_batch=args.max_batch,
-                          capacity=args.capacity,
-                          paged=False if args.dense else None,
-                          pool_tokens=args.pool_tokens,
-                          adapter_slots=adapter_slots,
-                          speculative=args.speculative,
-                          spec_k=args.spec_k,
-                          draft_cfg=draft_cfg, draft_params=draft_params,
-                          obs=obs, mesh=mesh)
+    def mk_engine(name="engine", role="unified", spec=True):
+        # speculative decoding only makes sense where tokens are
+        # emitted, so a prefill-role engine never carries a drafter
+        return InferenceEngine(
+            cfg, params, max_batch=args.max_batch,
+            capacity=args.capacity,
+            paged=False if args.dense else None,
+            pool_tokens=args.pool_tokens,
+            adapter_slots=adapter_slots,
+            speculative=args.speculative if spec else None,
+            spec_k=args.spec_k,
+            draft_cfg=draft_cfg if spec else None,
+            draft_params=draft_params if spec else None,
+            obs=obs, mesh=mesh, name=name, role=role)
+
+    pre = None
+    if args.disagg:
+        pre = mk_engine("prefill0", "prefill", spec=False)
+        eng = mk_engine("decode0", "decode")
+        print("disaggregated pair: prefill0 -> KV handoff -> decode0")
+    else:
+        eng = mk_engine(role=args.role)
     names = [cfg.name]
     if args.adapters:
         from repro.finetune.lora import (LoraConfig, lora_init,
@@ -191,7 +223,37 @@ def main():
                 lora_init(params, lcfg, jax.random.PRNGKey(100 + i)),
                 jax.random.PRNGKey(200 + i))
             publish_adapter(eng, f"tenant{i}", ad, lcfg)
+            if pre is not None:
+                # the adapter pin transfers with the handoff, so the
+                # prefill pool must hold the same adapters
+                publish_adapter(pre, f"tenant{i}", ad, lcfg)
             names.append(f"{cfg.name}@tenant{i}")
+
+    if args.role == "prefill" and not args.disagg:
+        # one side of a disaggregated deployment: run the prompts to
+        # handoff export and report the outbox (no decode peer in this
+        # process — --disagg serves the full pair)
+        rng = np.random.default_rng(0)
+        for i in range(args.requests):
+            prompt = [int(x) for x in rng.integers(1, cfg.vocab_size - 1,
+                                                   4 + i % 5)]
+            eng.submit(Request(prompt=prompt,
+                               max_new_tokens=args.max_tokens,
+                               temperature=args.temperature))
+        eng.run_until_idle()
+        for req, ho in eng.outbox:
+            print(f"handoff: rid={ho.request_id} tokens={ho.length} "
+                  f"blocks={ho.n_blocks} bytes={ho.payload_bytes}")
+        s = eng.metrics.summary()
+        print("metrics:", {k: round(v, 4) for k, v in s.items()})
+        if obs is not None:
+            eng.collect_metrics()
+            if args.metrics_out:
+                obs.write_metrics(args.metrics_out)
+                print(f"metrics snapshot -> {args.metrics_out}")
+            if args.trace_out:
+                obs.write_trace(args.trace_out)
+        return
     endpoint = eng
     if args.chaos:
         from repro.serving.faults import (ChaosEngine, FaultInjector,
@@ -205,7 +267,10 @@ def main():
                  deadline_s=args.deadline_s,
                  breaker_threshold=1, breaker_cooldown_s=0.05)
     gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
-    gw.bind_endpoints(cfg.name, [endpoint])
+    if args.disagg:
+        gw.bind_disagg(cfg.name, [pre], [endpoint])
+    else:
+        gw.bind_endpoints(cfg.name, [endpoint])
     key = gw.mint_key("cli", budget_usd=10.0)
 
     def dump_snapshot():
@@ -235,6 +300,10 @@ def main():
             dump_snapshot()
     s = eng.metrics.summary()
     print("metrics:", {k: round(v, 4) for k, v in s.items()})
+    if args.disagg:
+        ps = pre.metrics.summary()
+        print(f"disagg: handoffs={ps['handed_off']} "
+              f"(prefill0 -> decode0)")
     if args.tp > 1:
         kv = eng.kv_stats()
         line = f"sharded replica: tp={kv.get('kv_tp_degree', args.tp)}"

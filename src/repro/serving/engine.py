@@ -81,7 +81,8 @@ class InferenceEngine:
                  spec_k: int = 4,
                  draft_cfg=None, draft_params=None,
                  obs=None, faults=None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None,
+                 role: str = "unified"):
         """``paged=None`` auto-selects the paged KV path when the
         architecture supports it.  ``pool_tokens`` sizes the shared block
         pool (default ``max_batch * capacity`` — the dense footprint);
@@ -136,7 +137,19 @@ class InferenceEngine:
         and speculative verify all run SPMD without host round-trips.
         Block tables, lengths, and the whole scheduler stay host-side
         and layout-invariant.  ``mesh=None`` leaves the single-device
-        code path bit-for-bit untouched."""
+        code path bit-for-bit untouched.
+
+        ``role`` selects the engine's place in a *disaggregated*
+        serving pair (serving/README.md "Disaggregated serving"):
+        ``"unified"`` (default — prefill and decode on one engine,
+        byte-identical to the pre-role behaviour), ``"prefill"``
+        (accepts raw prompts, runs prefill only, and emits a
+        :class:`~repro.serving.kvcache.KVHandoff` into :attr:`outbox`
+        instead of streaming tokens), or ``"decode"`` (rejects raw
+        prompts; admits requests from :meth:`submit_handoff`, importing
+        the migrated KV with zero re-prefill).  Both non-unified roles
+        need the paged KV layout — the handoff is a block-table
+        export/import."""
         self.cfg, self.params = cfg, params
         self.name = name
         self.clock = clock
@@ -154,6 +167,17 @@ class InferenceEngine:
                     M.model_param_axes(cfg), mesh, self.rules))
         self.tp = 1 if mesh is None else int(mesh.devices.size)
         self.paged = M.supports_paged_cache(cfg) if paged is None else paged
+        if role not in ("unified", "prefill", "decode"):
+            raise ValueError(f"unknown engine role {role!r}")
+        if role != "unified" and not self.paged:
+            raise ValueError(
+                f"role={role!r} needs the paged KV layout (handoffs are "
+                f"block exports); {cfg.name} resolved to dense")
+        self.role = role
+        # prefill role: completed (req, KVHandoff) pairs for the router
+        self.outbox: deque = deque()
+        # decode role: (req, KVHandoff) pairs waiting for admission
+        self.handoffs: deque = deque()
         self.adapters: Optional[AdapterPool] = None
         if adapter_slots > 0:
             self.adapters = AdapterPool(cfg, params, slots=adapter_slots,
@@ -291,11 +315,41 @@ class InferenceEngine:
         if st != "ok":
             raise EngineFailure(f"{self.name} is {st}", point="submit",
                                 kind=st)
+        if self.role == "decode":
+            # decode-only admission: raw prompts have no KV to import —
+            # route them through a prefill engine (or a unified one)
+            raise EngineFailure(
+                f"{self.name} is decode-role: submit_handoff() a "
+                f"prefilled request, not a raw prompt", point="submit",
+                kind="role")
         self._fault("admission")
         if not req.request_id:
             req.request_id = f"{self.name}-r{next(self._ids)}"
         self.metrics.arrival(req.request_id, self.clock(), len(req.prompt))
         self.queue.append(req)
+        return req.request_id
+
+    def submit_handoff(self, req: Request, handoff) -> str:
+        """Submit a prefilled request plus its exported KV to a
+        decode-role engine.  The request resumes with zero re-prefill:
+        admission imports the handoff's blocks (adopting any prefix the
+        local radix tree already holds) and streams only tokens past
+        the handoff's coverage (none, unless a preemption fold grew the
+        prompt)."""
+        if self.role == "prefill":
+            raise EngineFailure(
+                f"{self.name} is prefill-role: it exports handoffs, it "
+                f"does not import them", point="submit", kind="role")
+        st = self.health()
+        if st != "ok":
+            raise EngineFailure(f"{self.name} is {st}", point="submit",
+                                kind=st)
+        self._fault("admission")
+        if not req.request_id:
+            req.request_id = handoff.request_id or \
+                f"{self.name}-r{next(self._ids)}"
+        self.metrics.arrival(req.request_id, self.clock(), len(req.prompt))
+        self.handoffs.append((req, handoff))
         return req.request_id
 
     # -------------------------------------------------------- lifecycle
@@ -360,7 +414,9 @@ class InferenceEngine:
 
     @property
     def num_active(self) -> int:
-        return len(self.running) + len(self.queue)
+        # outbox is excluded: an exported handoff is the *router's* work
+        # now, and counting it would wedge run_until_idle
+        return len(self.running) + len(self.queue) + len(self.handoffs)
 
     @property
     def prefix_cache(self):

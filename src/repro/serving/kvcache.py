@@ -19,6 +19,7 @@ pool blocks instead.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Sequence
@@ -248,6 +249,42 @@ NULL_BLOCK = 0   # reserved physical block: writes from inert slots and
                  # reads past a sequence's length land here, never on data
 
 
+@dataclasses.dataclass
+class KVHandoff:
+    """Host-side KV migration payload (prefill engine -> decode engine).
+
+    Produced by :meth:`PagedCacheSlots.export_kv` on the prefill side:
+    the finished prefill's physical blocks gathered to host memory in
+    block-major layout (each cache leaf becomes ``(n_blocks, ...)`` with
+    the pool's block axis moved to the front).  Consumed by
+    :meth:`PagedCacheSlots.import_kv` on the decode side, which
+    allocates fresh pool blocks and scatters the payload back — or, for
+    a prefix the decode-side radix tree already holds, splices the
+    shared blocks in place of re-uploading them.
+
+    The payload is plain host data: it survives the death of either
+    engine, so a crash mid-handoff is recovered by re-importing the same
+    object elsewhere (token-exact at temperature 0).  ``prompt_tokens``
+    doubles as the prefix-cache key on the decode side; ``adapter``
+    names the LoRA adapter whose pin must transfer with the request
+    (the adapter *weights* must already be registered on the decode
+    pool — the handoff moves KV, not parameters).
+    """
+    request_id: str
+    length: int              # prompt tokens materialised in the blocks
+    block_size: int
+    n_blocks: int
+    blocks: Any              # host pytree; leaf (n_blocks, ...) block-major
+    prompt_tokens: List[int] = dataclasses.field(default_factory=list)
+    adapter: str = ""
+    exported_at: float = 0.0  # engine-clock export timestamp
+
+    @property
+    def payload_bytes(self) -> int:
+        import jax as _jax
+        return sum(leaf.nbytes for leaf in _jax.tree.leaves(self.blocks))
+
+
 class BlockPool:
     """Ref-counted allocator over the physical blocks of a paged pool.
 
@@ -409,6 +446,12 @@ class PagedCacheSlots:
         self._tables_dev = None
         self._scatter = sharding.sharded_jit(self._scatter_impl, mesh, rules,
                                              donate_argnums=(0,))
+        # KV handoff (disaggregated prefill/decode): gather reads block
+        # contents out (no donation — the pool stays live), the block
+        # scatter writes an imported payload into freshly allocated ids
+        self._gather = sharding.sharded_jit(self._gather_impl, mesh, rules)
+        self._scatter_blocks = sharding.sharded_jit(
+            self._scatter_blocks_impl, mesh, rules, donate_argnums=(0,))
 
     # ------------------------------------------------------------ tables
     def tables_device(self) -> jax.Array:
@@ -540,3 +583,78 @@ class PagedCacheSlots:
         self.pool = self._scatter(self.pool, prefill_cache,
                                   jnp.asarray(ids[:nblk], jnp.int32))
         self.lengths[slot] = length
+
+    # ------------------------------------------------------------ handoff
+    def _gather_impl(self, pool, ids):
+        """Read the ``len(ids)`` physical blocks named by ``ids`` out of
+        the pool, block axis first — the exact inverse layout of
+        :meth:`_scatter_blocks_impl`."""
+        def one(arr, ax):
+            bi = ax.index("act_batch")
+            return jnp.moveaxis(arr, bi, 0)[ids]
+
+        return tree_walk(one, pool, self._axes)
+
+    def _scatter_blocks_impl(self, pool, blocks, ids):
+        """Write block-major payloads (leaf ``(len(ids), ...)``) into the
+        physical blocks named by ``ids``."""
+        def one(leaves, ax):
+            dst, src = leaves
+            bi = ax.index("act_batch")
+            d = jnp.moveaxis(dst, bi, 0)
+            return jnp.moveaxis(d.at[ids].set(src.astype(dst.dtype)), 0, bi)
+
+        out = tree_multi(one, [pool, blocks], self._axes)
+        return constrain_cache(out, self._axes)
+
+    def export_kv(self, rid: str) -> KVHandoff:
+        """Export request ``rid``'s finished-prefill KV as a host-side
+        :class:`KVHandoff` (block contents + length).  The slot keeps
+        its blocks — the caller releases it after the export so a failed
+        handoff never loses the KV mid-flight."""
+        slot = next((s for s, r in self.slot_owner.items() if r == rid),
+                    None)
+        if slot is None:
+            raise KeyError(f"export_kv: no slot owned by {rid!r}")
+        length = int(self.lengths[slot])
+        nblk = self.blocks_for(length)
+        ids = self.seq_blocks.get(slot, [])[:nblk]
+        assert len(ids) == nblk, "slot blocks do not cover its length"
+        blocks = jax.device_get(
+            self._gather(self.pool, jnp.asarray(ids, jnp.int32)))
+        return KVHandoff(request_id=rid, length=length,
+                         block_size=self.block_size, n_blocks=nblk,
+                         blocks=blocks)
+
+    def import_kv(self, slot: int, handoff: KVHandoff,
+                  adopted_ids: Sequence[int] = (),
+                  adopted_tokens: int = 0) -> bool:
+        """Import a :class:`KVHandoff` into a fresh slot: allocate pool
+        blocks for the payload (through :meth:`BlockPool.alloc`, so
+        imported blocks are charged to the pool's peak accounting like
+        any other allocation), scatter the block contents, and splice
+        the table.  ``adopted_ids`` names shared-prefix blocks the
+        decode-side radix tree already holds — those are refcount-spliced
+        (:meth:`adopt_prefix`) instead of re-uploaded, and only the
+        payload tail past ``adopted_tokens`` moves.
+
+        Returns False when the pool cannot supply the private blocks;
+        the caller must then roll back by releasing the slot (which
+        decrefs any adopted prefix) and defer the handoff."""
+        if handoff.block_size != self.block_size:
+            raise ValueError(
+                f"handoff block size {handoff.block_size} != pool block "
+                f"size {self.block_size} — repack before migrating")
+        if adopted_ids:
+            self.adopt_prefix(slot, adopted_ids, adopted_tokens)
+        if not self.ensure_capacity(slot, handoff.length):
+            return False
+        k0 = len(adopted_ids)
+        if handoff.n_blocks > k0:
+            ids = self.seq_blocks[slot][k0:handoff.n_blocks]
+            tail = tree_walk(lambda a, ax: jnp.asarray(a[k0:]),
+                             handoff.blocks, self._axes)
+            self.pool = self._scatter_blocks(
+                self.pool, tail, jnp.asarray(ids, jnp.int32))
+        self.lengths[slot] = handoff.length
+        return True

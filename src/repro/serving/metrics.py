@@ -17,6 +17,7 @@ import numpy as np
 STATUS_ACTIVE = "active"
 STATUS_FINISHED = "finished"
 STATUS_REJECTED = "rejected"
+STATUS_HANDED_OFF = "handed_off"
 
 
 @dataclasses.dataclass
@@ -135,6 +136,16 @@ class MetricsCollector:
         r.finish = t
         r.status = STATUS_REJECTED
 
+    def handoff(self, rid: str, t: float):
+        """Prefill-role terminal event: the request's finished KV was
+        exported to the engine's outbox.  Like :meth:`reject` it must
+        not pollute this engine's latency quantiles — the request emits
+        every token on a *decode* engine whose own collector owns its
+        TTFT/ITL/E2EL."""
+        r = self.requests[rid]
+        r.finish = t
+        r.status = STATUS_HANDED_OFF
+
     @staticmethod
     def _pct(xs, q):
         return float(np.percentile(xs, q)) if xs else float("nan")
@@ -159,6 +170,8 @@ class MetricsCollector:
         return {
             "completed": len(done),
             "rejected": len(rejected),
+            "handed_off": sum(1 for r in vals
+                              if r.status == STATUS_HANDED_OFF),
             "preempted": sum(r.n_preempted for r in vals),
             "preempt_to_resume_mean_s": (float(np.mean(resumes))
                                          if resumes else float("nan")),
@@ -251,6 +264,9 @@ class TracingMetricsCollector(MetricsCollector):
         self._resume = reg.histogram(
             "repro_serving_preempt_resume_seconds",
             "preemption to re-admission delay")
+        self._handoffs = reg.counter(
+            "repro_serving_handoff_requests_total",
+            "requests handed off to a decode engine after prefill")
 
     def _track(self, rid: str) -> str:
         return f"req {rid}"
@@ -317,4 +333,11 @@ class TracingMetricsCollector(MetricsCollector):
         self._rejected.inc()
         self._switch(rid, "")
         self.obs.tracer.instant(self._track(rid), "reject",
+                                cat="request")
+
+    def handoff(self, rid: str, t: float):
+        super().handoff(rid, t)
+        self._handoffs.inc()
+        self._switch(rid, "")
+        self.obs.tracer.instant(self._track(rid), "handoff",
                                 cat="request")

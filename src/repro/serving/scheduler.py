@@ -97,6 +97,10 @@ class ChunkedPrefillScheduler:
         self.eng = engine
         self.config = config or SchedulerConfig()
         self.paged = getattr(engine, "paged", False)
+        # disaggregated serving: "prefill" ticks export a KVHandoff when
+        # a prompt's KV is complete (never decoding), "decode" ticks
+        # admit from the engine's handoff queue (never raw prompts)
+        self.role = getattr(engine, "role", "unified")
         self.supported = supports_prefix_cache(engine.cfg)
         self.prefix_cache: Optional[PrefixCache] = None
         if self.config.enable_prefix_cache and self.supported:
@@ -126,6 +130,9 @@ class ChunkedPrefillScheduler:
         self._admit_seq = itertools.count()
         # slot -> device adapter id (rows without an entry decode as base)
         self._slot_adapter: Dict[int, int] = {}
+        # decode role: slot -> the KVHandoff it was admitted from, kept
+        # so preemption can requeue the pair (re-admission re-imports)
+        self._slot_handoff: Dict[int, object] = {}
         # graceful-degradation ladder: 0 = normal, 1 = speculative
         # decoding suspended, 2 = admission paused too.  Pressure events
         # (kv admission defers, preemptions) push it down; pressure-free
@@ -166,6 +173,23 @@ class ChunkedPrefillScheduler:
                 "repro_sched_degrade_level_count",
                 "degradation level (0 normal, 1 spec off, 2 admission "
                 "paused)")
+            self._c_handoff_out = reg.counter(
+                "repro_serving_handoff_exported_total",
+                "prefill-role KV handoffs exported to the outbox")
+            self._c_handoff_in = reg.counter(
+                "repro_serving_handoff_imported_total",
+                "decode-role KV handoffs imported into a slot")
+            self._c_handoff_blocks = reg.counter(
+                "repro_serving_handoff_blocks_total",
+                "physical KV blocks carried by handoffs (exported, or "
+                "scattered on import — adopted blocks excluded)")
+            self._c_handoff_bytes = reg.counter(
+                "repro_serving_handoff_bytes_total",
+                "host payload bytes gathered for exported handoffs")
+            self._c_handoff_adopted = reg.counter(
+                "repro_serving_handoff_adopted_blocks_total",
+                "imported-handoff blocks satisfied by the decode-side "
+                "radix tree (spliced, not re-uploaded)")
 
     def _defer(self, reason: str) -> bool:
         """Count a deferred admission (kv pressure / pinned adapter
@@ -197,7 +221,7 @@ class ChunkedPrefillScheduler:
             # span when the phase has no work — decode-heavy ticks with
             # an empty queue stay one event, not three
             tr = self.obs.tracer
-            if self.eng.queue:
+            if self.eng.queue or self.eng.handoffs:
                 sp = tr.begin("scheduler", "admit", cat="sched")
                 self._admit_tick()
                 tr.end(sp)
@@ -220,7 +244,7 @@ class ChunkedPrefillScheduler:
             # deepest ladder rung: shed admission load entirely so the
             # running batch can finish and free pool blocks.  This defer
             # must NOT count as pressure or the pause would self-sustain.
-            if self.eng.queue:
+            if self.eng.queue or self.eng.handoffs:
                 self._defer("degraded")
             return
         admitted = 0
@@ -259,7 +283,8 @@ class ChunkedPrefillScheduler:
                 cat="sched", level=level)
 
     def drained(self) -> bool:
-        return not self.eng.queue and not self.eng.running
+        return (not self.eng.queue and not self.eng.running
+                and not self.eng.handoffs)
 
     def match_len(self, namespace: str, tokens) -> int:
         """Longest stored prefix (tokens) — used for affinity routing."""
@@ -276,6 +301,8 @@ class ChunkedPrefillScheduler:
 
     # ------------------------------------------------------------ admission
     def _admit_one(self) -> bool:
+        if self.role == "decode":
+            return self._admit_handoff()
         eng = self.eng
         if not eng.queue:
             return False
@@ -407,11 +434,143 @@ class ChunkedPrefillScheduler:
 
         if chunk < n:
             self.pending[slot] = chunk
+        elif self.role == "prefill":
+            self._store_prompt(slot, req)
+            self._handoff_out(slot, req)
         else:
             self._store_prompt(slot, req)
             tok = eng._sample(logits, req)
             self._emit(slot, req, int(tok[0]))
         return True
+
+    # ----------------------------------------------------------- handoff
+    def _admit_handoff(self) -> bool:
+        """Decode-role admission: import a prefilled request's KV from
+        the engine's handoff queue.  Mirrors :meth:`_admit_one`
+        (capacity checks, adapter pins, prefix adoption, explicit
+        rejection) but never runs prefill compute — the handoff blocks
+        are spliced/scattered in and the standard pending-stream path
+        re-feeds the final prompt token to produce the first-token
+        logits on THIS engine.  Pool pressure defers (the pair stays
+        queued); nothing is ever silently dropped."""
+        eng = self.eng
+        if not eng.handoffs:
+            return False
+        if not eng.slots.free:
+            return self._defer("slots")
+        req, ho = eng.handoffs[0]
+        need = (len(req.prompt) + req.max_new_tokens - len(req.generated))
+        if eng.drafter is not None:
+            need += eng.spec_k
+        if need > eng.capacity or (req.adapter and (
+                eng.adapters is None or not eng.adapters.has(req.adapter))):
+            eng.handoffs.popleft()
+            req.done = True
+            eng.metrics.reject(req.request_id, eng.clock())
+            return True
+        # worst-case block need for the imported prefix (prefix adoption
+        # can only shrink it); eviction of unpinned tree leaves can free
+        # at most evictable_blocks() more
+        avail = eng.slots.bp.num_free
+        if self.prefix_cache is not None:
+            avail += self.prefix_cache.evictable_blocks()
+        if eng.slots.blocks_for(ho.length) > avail:
+            return self._defer("kv")
+        aid = 0
+        if req.adapter:
+            aid = eng.adapters.acquire(req.adapter)
+            if aid is None:
+                return self._defer("adapter")
+        eng.handoffs.popleft()
+        slot = eng.slots.allocate(req.request_id)
+        if aid:
+            self._slot_adapter[slot] = aid
+        eng.metrics.prefill_start(req.request_id, eng.clock())
+
+        adopted_ids: List[int] = []
+        adopted = 0
+        if self.prefix_cache is not None and not req.extras:
+            bs = eng.slots.block_size
+            m: Match = self.prefix_cache.match(self._ns(req), req.prompt)
+            # cap adoption so position ho.length - 1 (re-fed locally for
+            # the first-token logits) lands in a privately imported
+            # block — shared tree blocks are never written
+            n_use = min(len(m.nodes), (ho.length - 1) // bs)
+            if n_use > 0:
+                nodes = m.nodes[:n_use]
+                self.prefix_cache.lock(nodes)
+                self._locked.setdefault(req.request_id, []).extend(nodes)
+                adopted_ids = list(
+                    self.prefix_cache.gather_block_ids(m, n_use))
+                adopted = n_use * bs
+                eng.metrics.prefix_hit(req.request_id, adopted)
+        shortfall = eng.slots.blocks_for(ho.length) - len(adopted_ids)
+        if eng.slots.bp.num_free < shortfall:
+            self._reclaim(shortfall)
+        ok = eng.slots.import_kv(slot, ho, adopted_ids, adopted)
+        if not ok:
+            # pool raced away between the avail check and the alloc:
+            # roll the admission back completely and retry next tick
+            self._release_adapter(slot, req)
+            if self.prefix_cache is not None:
+                nodes = self._locked.pop(req.request_id, None)
+                if nodes:
+                    self.prefix_cache.unlock(nodes)
+            eng.slots.release(slot)
+            eng.handoffs.appendleft((req, ho))
+            return self._defer("kv")
+        eng.running[slot] = req
+        self._admit_order[slot] = next(self._admit_seq)
+        self._slot_handoff[slot] = ho
+        # resume point: the imported KV covers [0, ho.length); rewind one
+        # token so the standard pending stream re-feeds the final prompt
+        # token at its true position (rewriting identical KV in a private
+        # block) and samples the first token here — token-identical to a
+        # unified engine at temperature 0.  A preempted-and-refolded
+        # request streams its folded suffix through the same path.
+        eng.slots.lengths[slot] = ho.length - 1
+        self.pending[slot] = ho.length - 1
+        if self.obs is not None:
+            self._c_handoff_in.inc()
+            self._c_handoff_blocks.inc(ho.n_blocks - len(adopted_ids))
+            if adopted_ids:
+                self._c_handoff_adopted.inc(len(adopted_ids))
+            self.obs.tracer.instant(
+                "scheduler", "handoff_import", cat="sched",
+                rid=req.request_id, tokens=ho.length,
+                adopted_blocks=len(adopted_ids))
+        return True
+
+    def _handoff_out(self, slot: int, req):
+        """Prefill-role completion: instead of sampling the first token,
+        export the slot's finished KV as a host-side payload onto the
+        engine's outbox and retire the slot.  The request is NOT done —
+        a decode-role engine imports the payload and finishes it."""
+        eng = self.eng
+        ho = eng.slots.export_kv(req.request_id)
+        ho.prompt_tokens = list(req.prompt)
+        ho.adapter = req.adapter
+        ho.exported_at = eng.clock()
+        eng.metrics.handoff(req.request_id, eng.clock())
+        eng.ledger.release(req.request_id)
+        eng.slots.release(slot)
+        eng.running.pop(slot, None)
+        self.pending.pop(slot, None)
+        self._admit_order.pop(slot, None)
+        self._release_adapter(slot, req)
+        self._release_drafter(slot)
+        if self.prefix_cache is not None:
+            nodes = self._locked.pop(req.request_id, None)
+            if nodes:
+                self.prefix_cache.unlock(nodes)
+        eng.outbox.append((req, ho))
+        if self.obs is not None:
+            self._c_handoff_out.inc()
+            self._c_handoff_blocks.inc(ho.n_blocks)
+            self._c_handoff_bytes.inc(ho.payload_bytes)
+            self.obs.tracer.instant(
+                "scheduler", "handoff_export", cat="sched",
+                rid=req.request_id, tokens=ho.length, blocks=ho.n_blocks)
 
     def _lora_args(self, ids):
         """(lora_tree, adapter_ids) for a model call — (None, None) on
@@ -493,7 +652,14 @@ class ChunkedPrefillScheduler:
             req.n_folded = len(req.generated)
         eng.slots.release(slot)
         eng.ledger.release(req.request_id)
-        eng.queue.appendleft(req)
+        ho = self._slot_handoff.pop(slot, None)
+        if ho is not None:
+            # decode-role slot: the engine rejects raw prompts, so the
+            # (request, handoff) pair requeues; re-admission re-imports
+            # the payload and streams the folded suffix token-exactly
+            eng.handoffs.appendleft((req, ho))
+        else:
+            eng.queue.appendleft(req)
         eng.metrics.preempt(req.request_id, eng.clock())
         self._tick_pressure += 1
 
@@ -509,6 +675,11 @@ class ChunkedPrefillScheduler:
             self._preempt_latest()
         out = list(eng.queue)
         eng.queue.clear()
+        # decode role: prefilled-but-waiting pairs evacuate as plain
+        # requests — the handoff payload referenced a pool that may be
+        # gone, so the gateway resubmits them for a fresh prefill
+        out.extend(r for r, _ in eng.handoffs)
+        eng.handoffs.clear()
         return out
 
     def reset_cache(self) -> None:
@@ -634,7 +805,10 @@ class ChunkedPrefillScheduler:
                     # next-token logits — prefill is complete
                     del self.pending[slot]
                     self._store_prompt(slot, req)
-                    self._emit(slot, req, int(sampled[slot]))
+                    if self.role == "prefill":
+                        self._handoff_out(slot, req)
+                    else:
+                        self._emit(slot, req, int(sampled[slot]))
             else:
                 self._emit(slot, req, int(sampled[slot]))
 
@@ -753,7 +927,10 @@ class ChunkedPrefillScheduler:
                 if self.pending[slot] >= len(req.prompt):
                     del self.pending[slot]
                     self._store_prompt(slot, req)
-                    self._emit(slot, req, int(out[slot, 0]))
+                    if self.role == "prefill":
+                        self._handoff_out(slot, req)
+                    else:
+                        self._emit(slot, req, int(out[slot, 0]))
                 continue
             n = int(nem[slot])
             emitted = 0
@@ -802,6 +979,7 @@ class ChunkedPrefillScheduler:
             eng.running.pop(slot, None)
             self.pending.pop(slot, None)
             self._admit_order.pop(slot, None)
+            self._slot_handoff.pop(slot, None)
             self._release_adapter(slot, req)
             self._release_drafter(slot)
             if self.prefix_cache is not None:

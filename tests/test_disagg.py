@@ -1,0 +1,455 @@
+"""Disaggregated prefill/decode serving (KV-cache handoff): role
+gating, export/import metadata, token-identity vs. the unified engine
+on GQA and MLA (plain, speculative, and multi-LoRA decode), decode-pool
+exhaustion deferral, preemption of imported requests, peak-accounting
+of imported blocks, decode-side prefix adoption, gateway pairing with
+crash recovery on both phases, unified fallback, and the handoff
+metric/span surface."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.core.gateway import (Gateway, ModelEntry, NoHealthyEndpoint)
+from repro.finetune.lora import LoraConfig, lora_init, lora_randomize
+from repro.models import model as M
+from repro.obs import Observability
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.faults import (EngineFailure, FaultInjector, FaultSpec,
+                                  VirtualClock)
+from repro.serving.scheduler import SchedulerConfig
+
+PROMPT = [5, 7, 11, 13, 17, 19, 23, 29]
+GEN = 8
+
+
+@pytest.fixture(scope="module")
+def served(tiny_cfg):
+    return tiny_cfg, M.init(tiny_cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def served_mla():
+    cfg = scaled_down(get_config("deepseek-v2-lite-16b"), num_layers=2,
+                      d_model=64, d_ff=128, vocab_size=128, num_heads=4)
+    return cfg, M.init(cfg, jax.random.PRNGKey(1))
+
+
+def _sched(**kw):
+    kw.setdefault("prefix_block", 4)
+    kw.setdefault("prefill_chunk", 8)
+    return SchedulerConfig(**kw)
+
+
+def _engine(cfg, params, role="unified", **kw):
+    kw.setdefault("sched", _sched())
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("capacity", 128)
+    return InferenceEngine(cfg, params, role=role, **kw)
+
+
+def _run_unified(cfg, params, prompts, gen=GEN, **kw):
+    eng = _engine(cfg, params, **kw)
+    reqs = [Request(prompt=list(p), max_new_tokens=gen) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return [list(r.generated) for r in reqs], eng
+
+
+def _drive(pre, dec, reqs):
+    """Minimal disagg driver: prefill to completion, walk every exported
+    (req, handoff) pair over to the decode engine, decode to idle."""
+    for r in reqs:
+        pre.submit(r)
+    pre.run_until_idle()
+    while pre.outbox:
+        dec.submit_handoff(*pre.outbox.popleft())
+    dec.run_until_idle()
+    return [list(r.generated) for r in reqs]
+
+
+def _prompts(vocab, n=4, lo=6, hi=20, seed=3):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, vocab - 1, int(k))))
+            for k in rng.integers(lo, hi, n)]
+
+
+# ------------------------------------------------------------------ roles
+def test_role_gating(served):
+    cfg, params = served
+    with pytest.raises(ValueError, match="unknown engine role"):
+        _engine(cfg, params, role="draft")
+    with pytest.raises(ValueError, match="paged"):
+        InferenceEngine(cfg, params, role="prefill", paged=False)
+    pre = _engine(cfg, params, role="prefill")
+    dec = _engine(cfg, params, role="decode")
+    with pytest.raises(EngineFailure) as ei:
+        dec.submit(Request(prompt=list(PROMPT)))
+    assert ei.value.kind == "role"
+    with pytest.raises(EngineFailure) as ei:
+        pre.submit_handoff(Request(prompt=list(PROMPT)), None)
+    assert ei.value.kind == "role"
+
+
+def test_export_metadata_and_handed_off_status(served):
+    cfg, params = served
+    pre = _engine(cfg, params, role="prefill")
+    req = Request(prompt=list(PROMPT), max_new_tokens=GEN)
+    pre.submit(req)
+    pre.run_until_idle()
+    assert not req.done and req.generated == []   # zero decode on prefill
+    assert len(pre.outbox) == 1
+    r, ho = pre.outbox[0]
+    assert r is req
+    assert ho.length == len(PROMPT)
+    assert ho.prompt_tokens == list(PROMPT)
+    assert ho.n_blocks == pre.slots.blocks_for(len(PROMPT))
+    # the payload is a host pytree with a leading block axis
+    assert all(leaf.shape[0] == ho.n_blocks
+               for leaf in jax.tree.leaves(ho.blocks))
+    assert ho.payload_bytes > 0
+    s = pre.metrics.summary()
+    assert s["handed_off"] == 1 and s["completed"] == 0
+    # the slot is released after export (the radix tree may keep the
+    # prompt blocks cached — evictable, like any finished request's)
+    assert not pre.running and pre.slots.active_slots == []
+    # num_active excludes the outbox: the export is the router's work now
+    assert pre.num_active == 0
+
+
+# --------------------------------------------------------- token identity
+def test_disagg_token_identity_gqa(served):
+    cfg, params = served
+    prompts = _prompts(cfg.vocab_size)
+    prompts.append(prompts[0][:10] + [3, 1, 4])   # shared-prefix tail
+    ref, _ = _run_unified(cfg, params, prompts)
+    pre = _engine(cfg, params, role="prefill")
+    dec = _engine(cfg, params, role="decode")
+    reqs = [Request(prompt=list(p), max_new_tokens=GEN) for p in prompts]
+    out = _drive(pre, dec, reqs)
+    assert out == ref
+    assert all(r.done for r in reqs)
+    assert dec.metrics.summary()["completed"] == len(prompts)
+
+
+def test_disagg_token_identity_mla(served_mla):
+    cfg, params = served_mla
+    prompts = _prompts(cfg.vocab_size, seed=5)
+    ref, _ = _run_unified(cfg, params, prompts)
+    pre = _engine(cfg, params, role="prefill")
+    dec = _engine(cfg, params, role="decode")
+    out = _drive(pre, dec, [Request(prompt=list(p), max_new_tokens=GEN)
+                            for p in prompts])
+    assert out == ref
+
+
+def test_disagg_speculative_decode_identity(served):
+    """The decode pool may run speculative decoding — greedy output must
+    still equal the plain unified engine (repetitive prompts so the
+    n-gram drafter actually drafts)."""
+    cfg, params = served
+    rng = np.random.default_rng(9)
+    pat = list(map(int, rng.integers(1, cfg.vocab_size - 1, 5)))
+    prompts = [pat * 3 + list(map(int, rng.integers(1, cfg.vocab_size - 1,
+                                                    2)))
+               for _ in range(3)]
+    ref, _ = _run_unified(cfg, params, prompts)
+    pre = _engine(cfg, params, role="prefill")
+    dec = _engine(cfg, params, role="decode", speculative="ngram",
+                  spec_k=2)
+    out = _drive(pre, dec, [Request(prompt=list(p), max_new_tokens=GEN)
+                            for p in prompts])
+    assert out == ref
+
+
+def test_disagg_lora_adapter_pin_transfer(served):
+    """An adapter'd request keeps its adapter across the handoff: the
+    prefill engine pins it for prefill, the handoff names it, and the
+    decode engine re-pins it at import — output identical to a unified
+    multi-LoRA engine."""
+    cfg, params = served
+    lcfg = LoraConfig(rank=4)
+    ads = {n: lora_randomize(
+        lora_init(params, lcfg, jax.random.PRNGKey(i)),
+        jax.random.PRNGKey(i + 100)) for i, n in enumerate(("t0", "t1"))}
+    prompts = _prompts(cfg.vocab_size, n=4, seed=11)
+    names = ["t0", "t1", "t0", "t1"]
+
+    def mk(role):
+        eng = _engine(cfg, params, role=role, adapter_slots=2)
+        for n, ad in ads.items():
+            eng.register_adapter(n, ad, lcfg)
+        return eng
+
+    reqs = [Request(prompt=list(p), max_new_tokens=GEN, adapter=n)
+            for p, n in zip(prompts, names)]
+    uni = mk("unified")
+    urs = [Request(prompt=list(p), max_new_tokens=GEN, adapter=n)
+           for p, n in zip(prompts, names)]
+    for r in urs:
+        uni.submit(r)
+    uni.run_until_idle()
+    pre, dec = mk("prefill"), mk("decode")
+    for r in reqs:
+        pre.submit(r)
+    pre.run_until_idle()
+    assert all(ho.adapter == r.adapter for r, ho in pre.outbox)
+    while pre.outbox:
+        dec.submit_handoff(*pre.outbox.popleft())
+    dec.run_until_idle()
+    assert [r.generated for r in reqs] == [r.generated for r in urs]
+    # all pins released on both sides once drained
+    assert pre.adapter_stats()["pinned"] == 0
+    assert dec.adapter_stats()["pinned"] == 0
+
+
+# ------------------------------------------------- capacity and accounting
+def test_decode_pool_exhaustion_defers_not_drops(served):
+    """When the decode pool cannot hold another import, the handoff
+    waits in the admission queue (a defer) — it is never rejected — and
+    completes token-exactly once blocks free up."""
+    cfg, params = served
+    prompts = [list(map(int, np.random.default_rng(s).integers(
+        1, cfg.vocab_size - 1, 16))) for s in (21, 22)]
+    ref, _ = _run_unified(cfg, params, prompts, gen=6)
+    pre = _engine(cfg, params, role="prefill")
+    # 8 allocatable blocks of 4 tokens: one 16-tok import + its growth
+    # fits, a second concurrent one cannot
+    dec = _engine(cfg, params, role="decode", max_batch=2, capacity=32,
+                  pool_tokens=32,
+                  sched=_sched(enable_prefix_cache=False))
+    reqs = [Request(prompt=list(p), max_new_tokens=6) for p in prompts]
+    for r in reqs:
+        pre.submit(r)
+    pre.run_until_idle()
+    while pre.outbox:
+        dec.submit_handoff(*pre.outbox.popleft())
+    deferred = False
+    for _ in range(200):
+        if dec.scheduler.drained():
+            break
+        dec.step()
+        deferred |= bool(dec.running) and bool(dec.handoffs)
+    assert deferred                       # second import actually waited
+    assert [list(r.generated) for r in reqs] == ref
+    assert dec.metrics.summary()["rejected"] == 0
+
+
+def test_preempted_import_requeues_as_handoff(served):
+    """Pool pressure mid-decode preempts the youngest request; on a
+    decode-role engine it re-enters the *handoff* queue (there is no raw
+    prompt to re-prefill) and re-imports token-exactly."""
+    cfg, params = served
+    rng = np.random.default_rng(33)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size - 1, 12)))
+               for _ in range(2)]
+    ref, _ = _run_unified(cfg, params, prompts, gen=10)
+    pre = _engine(cfg, params, role="prefill")
+    # both imports fit initially (3+3 of 8 blocks) but growth to
+    # 12+10=22 tokens each (6+6 blocks) overflows -> preemption
+    dec = _engine(cfg, params, role="decode", max_batch=2, capacity=32,
+                  pool_tokens=32,
+                  sched=_sched(enable_prefix_cache=False))
+    reqs = [Request(prompt=list(p), max_new_tokens=10) for p in prompts]
+    out = _drive(pre, dec, reqs)
+    assert out == ref
+    assert dec.metrics.summary()["preempted"] >= 1
+
+
+def test_peak_accounting_includes_imported_blocks(served):
+    """Regression: blocks that enter the pool via import_kv must charge
+    peak accounting exactly like locally-prefilled ones — the decode
+    engine's peak matches a unified engine running the same request."""
+    cfg, params = served
+    ref, uni = _run_unified(cfg, params, [PROMPT], gen=GEN,
+                            sched=_sched(enable_prefix_cache=False))
+    pre = _engine(cfg, params, role="prefill")
+    dec = _engine(cfg, params, role="decode",
+                  sched=_sched(enable_prefix_cache=False))
+    req = Request(prompt=list(PROMPT), max_new_tokens=GEN)
+    assert _drive(pre, dec, [req]) == ref
+    ds, us = dec.kv_stats(), uni.kv_stats()
+    assert ds["kv_blocks_peak"] == us["kv_blocks_peak"]
+    # the import alone reserves the handoff's footprint
+    assert ds["kv_blocks_peak"] >= dec.slots.blocks_for(len(PROMPT))
+    assert ds["kv_blocks_used"] == 0      # fully released after drain
+
+
+def test_decode_side_prefix_adoption(served):
+    """A second handoff sharing a prompt prefix adopts the decode-side
+    radix tree's blocks instead of re-importing them — fewer blocks
+    scattered, same tokens."""
+    cfg, params = served
+    head = list(PROMPT)                    # 8 tokens = 2 full blocks
+    p0, p1 = head + [31, 37, 41, 43], head + [47, 53, 59, 61]
+    ref, _ = _run_unified(cfg, params, [p0, p1], gen=GEN)
+    obs = Observability()
+    pre = _engine(cfg, params, role="prefill")
+    dec = _engine(cfg, params, role="decode", obs=obs)
+    r0 = Request(prompt=list(p0), max_new_tokens=GEN)
+    r1 = Request(prompt=list(p1), max_new_tokens=GEN)
+    pre.submit(r0), pre.submit(r1)
+    pre.run_until_idle()
+    # sequential imports so r0's blocks are in the tree before r1 lands
+    dec.submit_handoff(*pre.outbox.popleft())
+    dec.run_until_idle()
+    dec.submit_handoff(*pre.outbox.popleft())
+    dec.run_until_idle()
+    assert [r0.generated, r1.generated] == ref
+    snap = obs.registry.snapshot()
+    assert snap["repro_serving_handoff_adopted_blocks_total"] >= 2
+    assert snap["repro_serving_handoff_imported_total"] == 2
+
+
+# ---------------------------------------------------------------- gateway
+def _gw_disagg(cfg, params, *, n_pre=1, n_dec=1, unified=0, clock=None,
+               obs=None, pre_faults=(), dec_faults=(), **kw):
+    mk = lambda role, name, faults: _engine(  # noqa: E731
+        cfg, params, role=role, name=name,
+        **({"clock": clock} if clock is not None else {}),
+        **({"faults": faults} if faults is not None else {}))
+    pres = [mk("prefill", f"p{i}",
+               pre_faults[i] if i < len(pre_faults) else None)
+            for i in range(n_pre)]
+    decs = [mk("decode", f"d{i}",
+               dec_faults[i] if i < len(dec_faults) else None)
+            for i in range(n_dec)]
+    gw = Gateway(**({} if clock is None else {"clock": clock,
+                                              "sleep": clock.sleep}),
+                 obs=obs, **kw)
+    gw.vet_model(ModelEntry(cfg.name, cfg.name, 0.5, 1.5), cfg)
+    gw.bind_disagg(cfg.name, pres, decs)
+    unis = [_engine(cfg, params, name=f"u{i}") for i in range(unified)]
+    if unis:
+        gw.bind_endpoints(cfg.name, unis)
+    return gw, gw.mint_key("proj"), pres, decs, unis
+
+
+def test_gateway_disagg_completion(served):
+    cfg, params = served
+    ref, _ = _run_unified(cfg, params, [PROMPT])
+    gw, key, pres, decs, _ = _gw_disagg(cfg, params)
+    out = gw.completion(api_key=key.key, model=cfg.name,
+                        prompt=list(PROMPT), max_tokens=GEN)
+    assert out["tokens"] == ref[0]
+    assert out["usage"]["engine"] == "d0"
+    assert pres[0].metrics.summary()["handed_off"] == 1
+
+
+def test_gateway_falls_back_to_unified_when_pool_down(served):
+    cfg, params = served
+    ref, _ = _run_unified(cfg, params, [PROMPT])
+    gw, key, pres, decs, unis = _gw_disagg(cfg, params, unified=1)
+    pres[0].crash()
+    out = gw.completion(api_key=key.key, model=cfg.name,
+                        prompt=list(PROMPT), max_tokens=GEN)
+    assert out["tokens"] == ref[0]
+    assert out["usage"]["engine"] == "u0"
+    # without unified endpoints the same outage is a typed reject
+    gw2, key2, pres2, _, _ = _gw_disagg(cfg, params)
+    pres2[0].crash()
+    with pytest.raises(NoHealthyEndpoint):
+        gw2.completion(api_key=key2.key, model=cfg.name,
+                       prompt=list(PROMPT), max_tokens=GEN)
+
+
+def test_gateway_crash_mid_decode_reimports_same_handoff(served):
+    """Decode replica dies mid-stream: the router retries the decode
+    phase only, re-importing the cached handoff on the next replica —
+    no re-prefill, token-exact resume."""
+    cfg, params = served
+    ref, _ = _run_unified(cfg, params, [PROMPT])
+    vc = VirtualClock()
+    obs = Observability(clock=vc.now)
+    inj = FaultInjector(
+        [FaultSpec(point="emission", kind="crash", at_call=4)],
+        clock_advance=vc.advance)
+    gw, key, pres, decs, _ = _gw_disagg(
+        cfg, params, n_dec=2, clock=vc, obs=obs, dec_faults=(inj,),
+        retry_budget=3, breaker_threshold=1, breaker_cooldown_s=5.0)
+    out = gw.completion(api_key=key.key, model=cfg.name,
+                        prompt=list(PROMPT), max_tokens=GEN)
+    assert out["tokens"] == ref[0]
+    assert out["usage"]["engine"] == "d1"
+    assert gw._breakers[id(decs[0])].state == "open"
+    # prefill ran once; the handoff crossed the wire twice (d0 then d1)
+    assert pres[0].metrics.summary()["handed_off"] == 1
+    snap = obs.registry.snapshot()
+    assert snap["repro_serving_handoff_seconds"]["count"] == 2
+    assert snap['repro_serving_retries_total'
+                '{reason="UpstreamFailure"}'] >= 1
+
+
+def test_gateway_crash_during_prefill_retries_prefill(served):
+    """Prefill replica dies mid-chunked-prefill (prompt > chunk, so the
+    crash lands inside a micro-step): no handoff exists yet, so the
+    router re-runs the whole prefill phase on the next replica."""
+    cfg, params = served
+    prompt = _prompts(cfg.vocab_size, n=1, lo=20, hi=21, seed=29)[0]
+    ref, _ = _run_unified(cfg, params, [prompt])
+    vc = VirtualClock()
+    inj = FaultInjector(
+        [FaultSpec(point="micro_step", kind="crash", at_call=2)],
+        clock_advance=vc.advance)
+    gw, key, pres, decs, _ = _gw_disagg(
+        cfg, params, n_pre=2, clock=vc, pre_faults=(inj,),
+        retry_budget=3, breaker_threshold=1)
+    out = gw.completion(api_key=key.key, model=cfg.name,
+                        prompt=list(prompt), max_tokens=GEN)
+    assert out["tokens"] == ref[0]
+    assert gw._breakers[id(pres[0])].state == "open"
+    assert pres[0].metrics.summary()["handed_off"] == 0
+    assert pres[1].metrics.summary()["handed_off"] == 1
+
+
+def test_gateway_run_pipelined_identity(served):
+    cfg, params = served
+    prompts = _prompts(cfg.vocab_size, n=5, seed=17)
+    ref, _ = _run_unified(cfg, params, prompts)
+    gw, key, pres, decs, _ = _gw_disagg(cfg, params)
+    router = gw.routers[cfg.name]
+    reqs = [Request(prompt=list(p), max_new_tokens=GEN) for p in prompts]
+    assert router.run_pipelined(reqs) == ref
+
+
+def test_evacuation_returns_queued_handoffs(served):
+    """A decode-engine crash surfaces requests still waiting in the
+    handoff queue — nothing is silently lost."""
+    cfg, params = served
+    pre = _engine(cfg, params, role="prefill")
+    dec = _engine(cfg, params, role="decode")
+    req = Request(prompt=list(PROMPT), max_new_tokens=GEN)
+    pre.submit(req)
+    pre.run_until_idle()
+    dec.submit_handoff(*pre.outbox.popleft())
+    assert dec.num_active == 1
+    evac = dec.crash()
+    assert req in evac and not dec.handoffs
+
+
+# ---------------------------------------------------------------- obs
+def test_handoff_metrics_and_spans_one_snapshot(served):
+    """One shared registry carries the full handoff story: exported /
+    imported / blocks / bytes counters, per-request handoff status, and
+    scheduler-track export/import instants."""
+    cfg, params = served
+    obs = Observability()
+    pre = _engine(cfg, params, role="prefill", obs=obs)
+    dec = _engine(cfg, params, role="decode", obs=obs)
+    prompts = _prompts(cfg.vocab_size, n=3, seed=23)
+    reqs = [Request(prompt=list(p), max_new_tokens=4) for p in prompts]
+    _drive(pre, dec, reqs)
+    snap = obs.registry.snapshot()
+    assert snap["repro_serving_handoff_exported_total"] == 3
+    assert snap["repro_serving_handoff_imported_total"] == 3
+    assert snap["repro_serving_handoff_requests_total"] == 3
+    assert snap["repro_serving_handoff_bytes_total"] > 0
+    assert snap["repro_serving_handoff_blocks_total"] > 0
+    sched_events = [e["name"]
+                    for e in obs.tracer.events_for("scheduler")]
+    assert sched_events.count("handoff_export") == 3
+    assert sched_events.count("handoff_import") == 3
+    rid = reqs[0].request_id
+    names = [e["name"] for e in obs.tracer.events_for(f"req {rid}")]
+    assert "handoff" in names and "finish" in names

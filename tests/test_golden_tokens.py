@@ -20,29 +20,89 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config, scaled_down
+from repro.finetune.lora import LoraConfig, lora_init, lora_randomize
 from repro.models import model as M
+from repro.serving.adapters import supports_multi_lora
 from repro.serving.engine import InferenceEngine, Request
 
 GOLDEN = json.loads(
     (Path(__file__).parent / "golden" / "golden_tokens.json").read_text())
 
 
+def _served(g):
+    cfg = scaled_down(get_config(g["arch"]))
+    return cfg, M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+
+def _run(cfg, params, prompts, lens, adapter="", **kw):
+    eng = InferenceEngine(cfg, params, max_batch=4, capacity=128, **kw)
+    reqs = [Request(prompt=list(p), max_new_tokens=n, adapter=adapter)
+            for p, n in zip(prompts, lens)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return [r.generated for r in reqs], eng
+
+
 @pytest.mark.parametrize("family", sorted(GOLDEN))
 def test_golden_tokens(family):
     g = GOLDEN[family]
-    cfg = scaled_down(get_config(g["arch"]))
-    params = M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
-    eng = InferenceEngine(cfg, params, max_batch=4, capacity=128)
+    cfg, params = _served(g)
+    got, eng = _run(cfg, params, g["prompts"],
+                    [len(w) for w in g["generated"]])
     assert eng.paged == g["paged"], "KV layout auto-select changed"
-    reqs = [Request(prompt=list(p), max_new_tokens=len(want))
-            for p, want in zip(g["prompts"], g["generated"])]
+    assert got == g["generated"], (
+        f"{family} ({g['arch']}) greedy tokens drifted; if intentional, "
+        f"rerun tools/regen_goldens.py and commit the new fixture")
+
+
+@pytest.mark.parametrize("kind", ["ngram", "draft"])
+@pytest.mark.parametrize("family", sorted(GOLDEN))
+def test_golden_speculative_tokens(family, kind):
+    """Both drafters must reproduce the committed greedy stream: the
+    fixture pins the verify/accept numerics AND their identity with the
+    plain decode path (one drift shows up as two distinct diffs)."""
+    g = GOLDEN[family]
+    if "spec_generated" not in g:
+        pytest.skip(f"{family} does not support speculative decoding")
+    cfg, params = _served(g)
+    kw = ({"draft_cfg": cfg, "draft_params": params}
+          if kind == "draft" else {})
+    got, _ = _run(cfg, params, g["spec_prompts"],
+                  [len(w) for w in g["spec_generated"]],
+                  speculative=kind, spec_k=3, **kw)
+    assert got == g["spec_generated"], (
+        f"{family} spec({kind}) tokens drifted from the plain-path "
+        f"golden; rerun tools/regen_goldens.py if intentional")
+
+
+@pytest.mark.parametrize("family", sorted(GOLDEN))
+def test_golden_lora_tokens(family):
+    """Adapter'd decode is pinned with a deterministic randomized LoRA
+    (seeds 1/2, rank from the fixture) — drift in the factored-weight
+    batched decode path lands here."""
+    g = GOLDEN[family]
+    if "lora_generated" not in g:
+        pytest.skip(f"{family} does not support multi-LoRA serving")
+    cfg, params = _served(g)
+    assert supports_multi_lora(cfg)
+    lcfg = LoraConfig(rank=g["lora_rank"])
+    ad = lora_randomize(lora_init(params, lcfg, jax.random.PRNGKey(1)),
+                        jax.random.PRNGKey(2))
+    eng = InferenceEngine(cfg, params, max_batch=4, capacity=128,
+                          adapter_slots=2)
+    eng.register_adapter("golden", ad, lcfg)
+    reqs = [Request(prompt=list(p), max_new_tokens=len(w),
+                    adapter="golden")
+            for p, w in zip(g["prompts"], g["lora_generated"])]
     for r in reqs:
         eng.submit(r)
     eng.run_until_idle()
     got = [r.generated for r in reqs]
-    assert got == g["generated"], (
-        f"{family} ({g['arch']}) greedy tokens drifted; if intentional, "
-        f"rerun tools/regen_goldens.py and commit the new fixture")
+    assert got == g["lora_generated"], (
+        f"{family} LoRA tokens drifted; rerun tools/regen_goldens.py "
+        f"if intentional")
+    assert got != g["generated"]         # the adapter is not a no-op
 
 
 def test_golden_fixture_shape():
@@ -51,3 +111,14 @@ def test_golden_fixture_shape():
     for g in GOLDEN.values():
         assert len(g["prompts"]) == len(g["generated"]) == 3
         assert all(len(t) > 0 for t in g["generated"])
+        # variant nets ride on the same fixture where supported
+        if "spec_generated" in g:
+            assert len(g["spec_prompts"]) == len(g["spec_generated"]) == 3
+            assert all(len(t) > 0 for t in g["spec_generated"])
+        if "lora_generated" in g:
+            assert len(g["lora_generated"]) == len(g["generated"])
+            assert g["lora_rank"] > 0
+    # the two attention families carry both variant nets
+    for fam in ("gqa", "mla_moe"):
+        assert "spec_generated" in GOLDEN[fam]
+        assert "lora_generated" in GOLDEN[fam]

@@ -1,0 +1,231 @@
+"""Scheduler lifecycle property layer (shadow-model style, like
+test_kvcache_props.py): random admit/step/preempt/crash/handoff
+schedules drive real engines on a virtual clock while a host-side
+shadow checks, after every operation, that slot/ledger/pool accounting
+stays consistent, that no request's token stream ever loses or repeats
+a token (generated is append-only, bounded by max_new_tokens), and that
+the degradation ladder moves monotonically one rung at a time.  The
+disaggregated simulator additionally checks request *conservation* —
+every live request sits in exactly one place (queue / running / outbox
+/ handoff queue) — and that arbitrary interleavings of prefill steps,
+handoff moves, decode steps, preemptions, and crashes still end
+token-identical to a unified engine."""
+import numpy as np
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, scaled_down
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.faults import VirtualClock
+from repro.serving.scheduler import SchedulerConfig
+
+CFG = scaled_down(get_config("qwen1.5-4b"), num_layers=2, d_model=32,
+                  d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                  head_dim=8)
+
+
+@pytest.fixture(scope="module")
+def served():
+    return CFG, M.init(CFG, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, role="unified", **kw):
+    # deliberately tight pool: 3 slots x up to 5 blocks each against 12
+    # allocatable blocks, so schedules really hit defers and preemptions
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("capacity", 32)
+    kw.setdefault("pool_tokens", 48)
+    kw.setdefault("sched", SchedulerConfig(
+        prefix_block=4, prefill_chunk=8, enable_prefix_cache=False,
+        degrade_after=2, restore_after=2))
+    return InferenceEngine(cfg, params, role=role, clock=VirtualClock(),
+                           **kw)
+
+
+def _mk_req(rng, vocab):
+    n = int(rng.integers(4, 13))
+    return Request(prompt=list(map(int, rng.integers(1, vocab - 1, n))),
+                   max_new_tokens=int(rng.integers(3, 7)))
+
+
+def _check_engine(eng, prev_level):
+    """Per-operation structural invariants of one paged engine."""
+    sch, bp = eng.scheduler, eng.slots.bp
+    assert bp.num_free + bp.num_used == bp.num_blocks - 1   # null block
+    assert bp.peak_used >= bp.num_used
+    assert set(sch.pending) <= set(eng.running)
+    assert set(sch._admit_order) == set(eng.running)
+    for slot in eng.running:
+        assert eng.slots.lengths[slot] <= eng.capacity
+    lvl = sch.degrade_level
+    assert 0 <= lvl <= 2
+    assert abs(lvl - prev_level) <= 1        # one rung at a time
+    return lvl
+
+
+def _check_streams(shadow):
+    """Shadow token-stream invariants: append-only (nothing lost, no
+    position re-emitted) and bounded by the request's budget."""
+    for ent in shadow:
+        req, seen = ent
+        g = list(req.generated)
+        assert g[:len(seen)] == seen
+        assert len(g) <= req.max_new_tokens
+        ent[1] = g
+
+
+# ----------------------------------------------------------- unified sim
+UNI_OPS = ["submit", "step", "step", "step", "preempt", "crash"]
+
+
+@settings(max_examples=5, deadline=None)
+@given(ops=st.lists(st.sampled_from(UNI_OPS), min_size=8, max_size=22),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_unified_lifecycle_invariants(served, ops, seed):
+    cfg, params = served
+    rng = np.random.default_rng(seed)
+    eng = _engine(cfg, params)
+    shadow, lvl = [], 0
+    for op in ops:
+        if op == "submit":
+            req = _mk_req(rng, cfg.vocab_size)
+            eng.submit(req)
+            shadow.append([req, []])
+        elif op == "step" and eng.num_active:
+            eng.step()
+        elif op == "preempt" and eng.running:
+            eng.scheduler._preempt_latest()
+        elif op == "crash":
+            evac = eng.crash()
+            eng.recover()
+            for r in evac:           # resubmit folded, token-exact
+                eng.submit(r)
+        lvl = _check_engine(eng, lvl)
+        _check_streams(shadow)
+    eng.run_until_idle()
+    _check_streams(shadow)
+    assert eng.scheduler.drained()
+    assert not eng.scheduler.pending and not eng.scheduler._admit_order
+    for req, _ in shadow:
+        assert req.done
+        assert len(req.generated) == req.max_new_tokens
+    # prefix cache is off: a drained engine holds zero pool blocks
+    assert eng.slots.bp.num_used == 0
+    assert eng.metrics.summary()["rejected"] == 0
+
+
+# ------------------------------------------------------------ disagg sim
+def _locations(pre, dec):
+    """id -> occurrence count across every place a request can live."""
+    c = {}
+
+    def add(r):
+        c[id(r)] = c.get(id(r), 0) + 1
+    for r in pre.queue:
+        add(r)
+    for r in pre.running.values():
+        add(r)
+    for r, _ in pre.outbox:
+        add(r)
+    for r in dec.queue:
+        add(r)
+    for r, _ in dec.handoffs:
+        add(r)
+    for r in dec.running.values():
+        add(r)
+    return c
+
+
+DIS_OPS = ["submit", "pstep", "pstep", "move", "dstep", "dstep",
+           "preempt", "dcrash"]
+
+
+@settings(max_examples=4, deadline=None)
+@given(ops=st.lists(st.sampled_from(DIS_OPS), min_size=10, max_size=24),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_disagg_lifecycle_conservation_and_identity(served, ops, seed):
+    cfg, params = served
+    rng = np.random.default_rng(seed)
+    pre = _engine(cfg, params, role="prefill")
+    dec = _engine(cfg, params, role="decode")
+    shadow, plvl, dlvl = [], 0, 0
+    for op in ops:
+        if op == "submit" and len(shadow) < 4:
+            req = _mk_req(rng, cfg.vocab_size)
+            pre.submit(req)
+            shadow.append([req, []])
+        elif op == "pstep" and pre.num_active:
+            pre.step()
+        elif op == "move" and pre.outbox:
+            dec.submit_handoff(*pre.outbox.popleft())
+        elif op == "dstep" and dec.num_active:
+            dec.step()
+        elif op == "preempt" and dec.running:
+            dec.scheduler._preempt_latest()
+        elif op == "dcrash":
+            evac = dec.crash()
+            dec.recover()
+            for r in evac:
+                # an evacuated decode request lost its pool KV: it goes
+                # back for a fresh prefill of the folded prompt
+                pre.submit(r)
+        plvl = _check_engine(pre, plvl)
+        dlvl = _check_engine(dec, dlvl)
+        _check_streams(shadow)
+        locs = _locations(pre, dec)
+        for req, _ in shadow:
+            expect = 0 if req.done else 1
+            assert locs.get(id(req), 0) == expect   # conservation
+    # drain the pipeline: prefill -> move -> decode until everyone done
+    for _ in range(500):
+        if all(r.done for r, _ in shadow):
+            break
+        if pre.num_active:
+            pre.step()
+        while pre.outbox:
+            dec.submit_handoff(*pre.outbox.popleft())
+        if dec.num_active:
+            dec.step()
+        _check_streams(shadow)
+    assert all(r.done for r, _ in shadow)
+    for req, _ in shadow:
+        assert len(req.generated) == req.max_new_tokens
+    # and the whole scrambled lifecycle is token-identical to a fresh
+    # unified engine running the original prompts
+    uni = _engine(cfg, params)
+    refs = [Request(prompt=list(r.prompt[:len(r.prompt) - r.n_folded]),
+                    max_new_tokens=r.max_new_tokens) for r, _ in shadow]
+    for r in refs:
+        uni.submit(r)
+    uni.run_until_idle()
+    assert [list(r.generated) for r, _ in shadow] == \
+        [list(r.generated) for r in refs]
+    assert pre.slots.bp.num_used == 0 and dec.slots.bp.num_used == 0
+
+
+# ------------------------------------------------- degradation ladder
+def test_degrade_ladder_down_and_restore(served):
+    """Sustained pressure walks the ladder down one rung at a time (1 =
+    speculation off, 2 = admission paused); sustained calm walks it back
+    up — never skipping a level in either direction."""
+    cfg, params = served
+    eng = _engine(cfg, params)
+    sch = eng.scheduler
+    seen = [0]
+    # synthetic pressure: two events per tick with degrade_after=2
+    for _ in range(4):
+        sch._tick_pressure = 2
+        sch._degrade_update()
+        seen.append(sch.degrade_level)
+    assert max(seen) == 2 and sch.degrade_level == 2
+    for _ in range(6):
+        sch._degrade_update()                # calm ticks
+        seen.append(sch.degrade_level)
+    assert sch.degrade_level == 0
+    assert all(abs(b - a) <= 1 for a, b in zip(seen, seen[1:]))
+    # one descent then one recovery: the level sequence is unimodal
+    peak = seen.index(max(seen))
+    assert seen[:peak + 1] == sorted(seen[:peak + 1])
+    assert seen[peak:] == sorted(seen[peak:], reverse=True)

@@ -29,7 +29,10 @@ import jax.numpy as jnp                                     # noqa: E402
 import numpy as np                                          # noqa: E402
 
 from repro.configs import get_config, scaled_down           # noqa: E402
+from repro.finetune.lora import (LoraConfig, lora_init,     # noqa: E402
+                                 lora_randomize)
 from repro.models import model as M                         # noqa: E402
+from repro.serving.adapters import supports_multi_lora      # noqa: E402
 from repro.serving.engine import InferenceEngine, Request   # noqa: E402
 
 OUT = Path(__file__).resolve().parent.parent / "tests" / "golden" / \
@@ -45,6 +48,8 @@ FAMILIES = {
     "hybrid_moe": "jamba-v0.1-52b",
 }
 MAX_NEW = 10
+SPEC_K = 3
+LORA_RANK = 4
 
 
 def prompts_for(vocab: int, family: str):
@@ -54,22 +59,66 @@ def prompts_for(vocab: int, family: str):
             for n in (5, 9, 14)]
 
 
-def generate(family: str, arch: str):
-    cfg = scaled_down(get_config(arch))
-    params = M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
-    eng = InferenceEngine(cfg, params, max_batch=4, capacity=128)
-    prompts = prompts_for(cfg.vocab_size, family)
-    reqs = [Request(prompt=list(p), max_new_tokens=MAX_NEW)
-            for p in prompts]
+def spec_prompts_for(vocab: int, family: str):
+    # repetitive (pattern * 3 + tail) so the n-gram drafter actually
+    # finds suffix matches and the acceptance path runs for real
+    rng = np.random.default_rng(1 + sum(ord(c) for c in family))
+    pat = [int(x) for x in rng.integers(1, vocab - 1, 5)]
+    return [pat * 3 + [int(x) for x in rng.integers(1, vocab - 1, 2)]
+            for _ in range(3)]
+
+
+def golden_adapter(params):
+    lcfg = LoraConfig(rank=LORA_RANK)
+    return lora_randomize(lora_init(params, lcfg, jax.random.PRNGKey(1)),
+                          jax.random.PRNGKey(2)), lcfg
+
+
+def run_engine(cfg, params, prompts, adapter=None, **kw):
+    eng = InferenceEngine(cfg, params, max_batch=4, capacity=128, **kw)
+    if adapter is not None:
+        ad, lcfg = golden_adapter(params)
+        eng.register_adapter(adapter, ad, lcfg)
+    reqs = [Request(prompt=list(p), max_new_tokens=MAX_NEW,
+                    adapter=adapter or "") for p in prompts]
     for r in reqs:
         eng.submit(r)
     eng.run_until_idle()
-    return {
+    return [r.generated for r in reqs], eng
+
+
+def generate(family: str, arch: str):
+    cfg = scaled_down(get_config(arch))
+    params = M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = prompts_for(cfg.vocab_size, family)
+    generated, eng = run_engine(cfg, params, prompts)
+    g = {
         "arch": arch,
         "paged": bool(eng.paged),
         "prompts": prompts,
-        "generated": [r.generated for r in reqs],
+        "generated": generated,
     }
+    if M.supports_speculative(cfg):
+        # one greedy token stream pins all three decode paths: the
+        # fixture stores the plain engine's output and regen *verifies*
+        # that both speculative drafters reproduce it exactly
+        sp = spec_prompts_for(cfg.vocab_size, family)
+        want, _ = run_engine(cfg, params, sp)
+        for kind, kw in (("ngram", {}),
+                         ("draft", {"draft_cfg": cfg,
+                                    "draft_params": params})):
+            got, _ = run_engine(cfg, params, sp, speculative=kind,
+                                spec_k=SPEC_K, **kw)
+            assert got == want, f"{family}: spec({kind}) != plain"
+        g["spec_prompts"] = sp
+        g["spec_generated"] = want
+    if supports_multi_lora(cfg):
+        got, _ = run_engine(cfg, params, prompts, adapter="golden",
+                            adapter_slots=2)
+        assert got != generated, f"{family}: adapter was a no-op"
+        g["lora_rank"] = LORA_RANK
+        g["lora_generated"] = got
+    return g
 
 
 def main():
