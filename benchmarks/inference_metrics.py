@@ -49,9 +49,17 @@ Reproductions:
    a CLI the module forces two XLA host devices before jax loads, so
    the rows are live even on a one-CPU CI runner.
 
+9. kv-quant A/B: the same greedy mix through a bf16-KV and an int8-KV
+   paged engine at a fixed pool_tokens budget.  The int8 pool carries
+   2x the blocks in the same device bytes, so it sustains >= 1.8x the
+   concurrent decode batch; greedy tokens must agree with the bf16 run
+   at >= 90% (the accuracy-guard floor; see serving/README.md
+   "Quantized serving").
+
 CLI: ``--paged`` (default) / ``--dense`` select the KV layout for the
 measured mixes; ``--smoke`` runs the fast subset (3 + 4 + 5 + 6 + 7 +
-8) for CI; ``--chaos-smoke`` runs only mix 7 (the CI chaos job);
+8 + 9) for CI; ``--chaos-smoke`` runs only mix 7 (the CI chaos job);
+``--kv-quant-smoke`` runs only mix 9 (the CI kv-quant job);
 ``--json PATH`` additionally writes the rows as a machine-readable
 artifact (uploaded by the CI workflow).
 """
@@ -878,6 +886,79 @@ def disagg_rows(smoke: bool = False) -> List[str]:
     return rows
 
 
+def kv_quant_rows(smoke: bool = False) -> List[str]:
+    """ISSUE 10 acceptance: int8 quantized KV serving, same-budget A/B.
+
+    The same greedy mix through a bf16-KV and an int8-KV paged engine
+    at a FIXED ``pool_tokens`` budget (bf16-byte-equivalent, so the
+    int8 pool carries 2x the blocks in the same device bytes).  Hard
+    asserts: the int8 engine sustains >= 1.8x the bf16 engine's peak
+    concurrent decode batch, its per-block device bytes land at ~1/2
+    (int8 payload + f32 scale sliver), and its greedy tokens match the
+    bf16 run at >= 90% per-token agreement (the accuracy-guard floor —
+    on these tiny models agreement is typically exact)."""
+    budget, capacity = 96, 64
+    gen = 10 if smoke else 16
+    n_req = 8
+    sched = SchedulerConfig(enable_prefix_cache=False, admit_per_tick=8,
+                            prefill_chunk=32, prefix_block=8)
+    rng = np.random.default_rng(47)
+    # 20-token prompts = 3 blocks each at admission: the 12-block bf16
+    # pool admits 4, the 24-block int8 pool the full max_batch of 8
+    prompts = [list(map(int, rng.integers(1, 255, 20)))
+               for _ in range(n_req)]
+    cfg, params = _tiny()
+    res = {}
+    for dt in ("bf16", "int8"):
+        eng = InferenceEngine(cfg, params, max_batch=8, capacity=capacity,
+                              sched=sched, paged=True,
+                              pool_tokens=budget, kv_dtype=dt)
+        reqs = [Request(prompt=list(p), max_new_tokens=gen)
+                for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        peak = 0
+        while eng.num_active:
+            eng.step()
+            peak = max(peak, len(eng.running))
+        res[dt] = (peak, eng.metrics.summary(), eng.kv_stats(),
+                   [r.generated for r in reqs])
+    hit = tot = 0
+    for a, b in zip(res["int8"][3], res["bf16"][3]):
+        tot += len(b)
+        hit += sum(1 for x, y in zip(a, b) if x == y)
+    match = hit / max(tot, 1)
+    gain = res["int8"][0] / max(res["bf16"][0], 1)
+    bratio = (res["int8"][2]["kv_block_bytes_per_device"]
+              / res["bf16"][2]["kv_block_bytes_per_device"])
+    rows = []
+    for dt in ("bf16", "int8"):
+        peak, s, kv, _ = res[dt]
+        rows.append(
+            f"serve_kv_{dt}_concurrent_batch_peak,{peak},"
+            f"pool_tokens={budget} blocks_total={kv['kv_blocks_total']}"
+            f" block_tokens={kv['kv_block_size']}")
+        rows.append(
+            f"serve_kv_{dt}_block_bytes_per_device,"
+            f"{kv['kv_block_bytes_per_device']},"
+            f"peak_bytes={kv['kv_peak_bytes_per_device']}")
+        rows.append(
+            f"serve_kv_{dt}_decode_tokens_per_s,{s['tokens_per_s']:.1f},"
+            f"generated={s['generated_tokens']}")
+    rows.append(f"serve_kv_int8_batch_gain,{gain:.2f},"
+                f"int8_peak/bf16_peak at equal pool_tokens; target>=1.8")
+    rows.append(f"serve_kv_int8_block_bytes_ratio,{bratio:.2f},"
+                f"int8/bf16 per-block device bytes; target~0.5")
+    rows.append(f"serve_kv_int8_match_rate_pct,{match * 100:.1f},"
+                f"greedy per-token agreement vs bf16; floor=90")
+    assert gain >= 1.8, (
+        f"int8 sustained only {gain:.2f}x the bf16 concurrent batch "
+        f"({res['int8'][0]} vs {res['bf16'][0]}) at pool_tokens={budget}")
+    assert 0.45 < bratio < 0.6, bratio
+    assert match >= 0.90, f"int8 KV match rate {match:.2f} below floor"
+    return rows
+
+
 def analytic_itl(arch: str, tp: int, batch: int, ctx: int) -> float:
     """Decode step latency (s) on v5e: max(weights+KV reads / HBM, flops)."""
     cfg = get_config(arch)
@@ -908,12 +989,13 @@ def run(paged: Optional[bool] = None, smoke: bool = False) -> List[str]:
                 + observability_rows(smoke=True)
                 + chaos_rows(smoke=True)
                 + sharded_rows(smoke=True)
-                + disagg_rows(smoke=True))
+                + disagg_rows(smoke=True)
+                + kv_quant_rows(smoke=True))
     return (measured_rows(paged) + shared_prefix_rows()
             + paged_vs_dense_rows() + multi_adapter_rows()
             + speculative_rows() + observability_rows()
             + chaos_rows() + sharded_rows() + disagg_rows()
-            + analytic_rows())
+            + kv_quant_rows() + analytic_rows())
 
 
 def rows_to_json(rows: List[str]) -> List[dict]:
@@ -945,6 +1027,9 @@ if __name__ == "__main__":
     ap.add_argument("--disagg-smoke", action="store_true",
                     help="run ONLY the disaggregated prefill/decode mix "
                          "(the CI disagg job)")
+    ap.add_argument("--kv-quant-smoke", action="store_true",
+                    help="run ONLY the int8-vs-bf16 quantized-KV A/B "
+                         "(the CI kv-quant job)")
     ap.add_argument("--json", default="",
                     help="also write rows as JSON to this path (CI "
                          "uploads it as a build artifact)")
@@ -954,6 +1039,8 @@ if __name__ == "__main__":
         rows = chaos_rows(smoke=True)
     elif args.disagg_smoke:
         rows = disagg_rows(smoke=True)
+    elif args.kv_quant_smoke:
+        rows = kv_quant_rows(smoke=True)
     else:
         rows = run(paged=paged, smoke=args.smoke)
     print("\n".join(rows))

@@ -12,8 +12,11 @@ import numpy as np
 
 from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.ref import decode_ref
-from repro.kernels.paged_attention.kernel import paged_decode_attention
-from repro.kernels.paged_attention.ref import paged_decode_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_decode_attention, paged_decode_attention_int8,
+    paged_verify_attention, paged_verify_attention_int8)
+from repro.kernels.paged_attention.ref import (
+    paged_decode_int8_ref, paged_decode_ref, paged_verify_ref)
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rmsnorm.kernel import rmsnorm
@@ -98,6 +101,52 @@ def run() -> List[str]:
     rows.append(f"kernel_paged_decode_interpret,{t_paged:.0f},"
                 f"dense_us={t_dense:.0f};gather_ref_us={t_pref:.0f};"
                 f"max_err_vs_dense={err:.1e};block_tokens={bs}")
+
+    # int8 paged decode/verify: fused-dequant kernels on the same pool,
+    # quantized per-block-per-head (KV bytes halve; scales are a sliver)
+    ksc = (np.abs(np.asarray(kp)).max(axis=(1, 3)) / 127.0).astype(
+        np.float32)
+    vsc = (np.abs(np.asarray(vp)).max(axis=(1, 3)) / 127.0).astype(
+        np.float32)
+    kq = jnp.asarray(np.clip(np.round(
+        np.asarray(kp) / np.maximum(ksc, 1e-12)[:, None, :, None]),
+        -127, 127).astype(np.int8))
+    vq = jnp.asarray(np.clip(np.round(
+        np.asarray(vp) / np.maximum(vsc, 1e-12)[:, None, :, None]),
+        -127, 127).astype(np.int8))
+    ksc, vsc = jnp.asarray(ksc), jnp.asarray(vsc)
+    t_q8 = _t(jax.jit(lambda a, k, v, s1, s2, t, l:
+                      paged_decode_attention_int8(
+                          a, k, v, s1, s2, t, l, interpret=True)),
+              q1, kq, vq, ksc, vsc, bt, lens)
+    t_q8ref = _t(jax.jit(paged_decode_int8_ref), q1, kq, vq, ksc, vsc,
+                 bt, lens)
+    err8 = float(jnp.max(jnp.abs(
+        paged_decode_attention_int8(q1, kq, vq, ksc, vsc, bt, lens,
+                                    interpret=True)
+        - decode_attention(q1, kc, vc, lens, blk_k=bs, interpret=True))))
+    kv_b16 = 2 * kp.size * 2          # the serving pool stores bf16
+    kv_b8 = kq.nbytes + vq.nbytes + ksc.nbytes + vsc.nbytes
+    rows.append(f"kernel_paged_decode_int8_interpret,{t_q8:.0f},"
+                f"bf16_us={t_paged:.0f};deq_ref_us={t_q8ref:.0f};"
+                f"max_err_vs_fp={err8:.1e};"
+                f"kv_bytes_ratio={kv_b8 / kv_b16:.2f}")
+    T = 4
+    qt = jax.random.normal(jax.random.split(key, 5)[4], (B, T, H, D),
+                           jnp.float32)
+    t_v16 = _t(jax.jit(lambda a, k, v, t, l: paged_verify_attention(
+        a, k, v, t, l, interpret=True)), qt, kp, vp, bt, lens)
+    t_v8 = _t(jax.jit(lambda a, k, v, s1, s2, t, l:
+                      paged_verify_attention_int8(
+                          a, k, v, s1, s2, t, l, interpret=True)),
+              qt, kq, vq, ksc, vsc, bt, lens)
+    errv = float(jnp.max(jnp.abs(
+        paged_verify_attention_int8(qt, kq, vq, ksc, vsc, bt, lens,
+                                    interpret=True)
+        - paged_verify_ref(qt, kp, vp, bt, lens))))
+    rows.append(f"kernel_paged_verify_int8_interpret,{t_v8:.0f},"
+                f"bf16_us={t_v16:.0f};max_err_vs_fp={errv:.1e};"
+                f"verify_tokens={T}")
 
     # ssd: BH8 L1024 P64 N64 chunk 128
     BH, L, P, N = 8, 1024, 64, 64

@@ -25,7 +25,7 @@ from repro.data.pipeline import (DataConfig, PreferenceDataset, SFTDataset,
 from repro.finetune.dpo import make_lora_dpo_step
 from repro.finetune.evals import CapabilityGuard, evaluate
 from repro.finetune.lora import lora_init, lora_merge
-from repro.finetune.quantize import dequantize_tree, quantize_tree, quantized_bytes
+from repro.finetune.quantize import quantize_tree, quantized_bytes
 from repro.finetune.recipes import resolve
 from repro.finetune.sft import make_lora_sft_step, publish_adapter
 from repro.models import model as M
@@ -147,13 +147,14 @@ def main():
 
     def stage_release(ctx):
         q = quantize_tree(ctx.state["aligned"])
-        released = dequantize_tree(q, jnp.float32)
         before = sum(x.size * 4 for x in jax.tree.leaves(
             ctx.state["aligned"]))
         after = quantized_bytes(q)
         print(f"  release: int8 quantization {before/1e6:.1f}MB -> "
               f"{after/1e6:.1f}MB")
-        ctx.state["released"] = released
+        # publish the quantized artifact itself — deploy hands it to the
+        # engine, which detects the layout and dequantizes at param load
+        ctx.state["released"] = q
         aid = ctx.register("release", "model", "models/tiny-v1-int8",
                            parent_stages=["align", "eval"],
                            size_bytes=after)

@@ -9,8 +9,11 @@ import jax.numpy as jnp
 
 
 def quantize_tree(params, min_size: int = 1024):
-    """Returns (quantized tree, meta tree).  2D+ leaves above min_size are
-    stored as {"q": int8, "scale": f32 per output channel}."""
+    """Returns one quantized tree.  2D+ leaves above ``min_size`` are
+    stored as ``{"q": int8, "scale": f32 per output channel}``
+    (symmetric); everything else is passed through as ``{"raw": leaf}``.
+    ``dequantize_tree`` inverts it, and ``InferenceEngine`` accepts the
+    quantized tree directly (dequantizing at param load)."""
     def one(leaf):
         if leaf.ndim < 2 or leaf.size < min_size:
             return {"raw": leaf}

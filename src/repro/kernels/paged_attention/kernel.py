@@ -20,6 +20,14 @@ parity tests permute tables to prove layout independence).
 Physical block 0 is reserved as a null block: table entries past a
 sequence's length point at it, the ``k_start < length`` guard skips their
 compute, and the tail-block mask covers a partially-filled last block.
+
+The ``*_int8`` variants read an int8 pool with per-block-per-head f32
+scales (symmetric: ``x ≈ q * scale``).  The scale arrays
+``(num_blocks, KV)`` ride the same scalar-prefetch path as the block
+table, so the kernel resolves ``scale[bt[b, j]]`` from SMEM and
+dequantizes the int8 tile *in-register* inside the online-softmax loop —
+the pool's HBM traffic stays int8 end to end, which is the entire win
+(paged decode is bandwidth-bound on the KV read).
 """
 from __future__ import annotations
 
@@ -110,6 +118,115 @@ def _paged_verify_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
         KV = k.shape[-1] // D
         k = k.reshape(blk, KV, D)
         v = v_ref[0].astype(jnp.float32).reshape(blk, KV, D)
+        scale = 1.0 / (D ** 0.5)
+        qg = q.reshape(T, KV, G, D)
+        s = jnp.einsum("tkgd,skd->tkgs", qg * scale, k,
+                       preferred_element_type=jnp.float32)
+        s = s.reshape(T * H, blk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = (length - T
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // H)
+        s = jnp.where((kpos <= qpos) & (kpos < length), s, NEG_INF)
+        m_prev = m_scr[...]                               # (T*H, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+        pv = jnp.einsum("tkgs,skd->tkgd", p.reshape(T, KV, G, blk), v,
+                        preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv.reshape(T * H, D)
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).reshape(o_ref.shape[1:]).astype(
+            o_ref.dtype)
+
+
+def _paged_decode_kernel_int8(len_ref, bt_ref, ks_ref, vs_ref, q_ref,
+                              k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                              *, blk: int, G: int):
+    """Int8 variant of :func:`_paged_decode_kernel`: K/V tiles arrive as
+    int8 and are dequantized in-register with the block's per-head scale
+    (``ks_ref``/``vs_ref``, (num_blocks, KV) f32 in SMEM, indexed through
+    the same prefetched block table the K/V index maps walk)."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    k_start = j * blk
+
+    @pl.when(k_start < length)
+    def _compute():
+        pid = bt_ref[b, j]
+        q = q_ref[0].astype(jnp.float32)                  # (H, D)
+        k = k_ref[0].astype(jnp.float32)                  # (blk, KV*D) int8
+        H, D = q.shape
+        KV = k.shape[-1] // D
+        k_sc = ks_ref[pid]                                # (KV,) f32
+        v_sc = vs_ref[pid]
+        k = k.reshape(blk, KV, D) * k_sc[None, :, None]
+        v = (v_ref[0].astype(jnp.float32).reshape(blk, KV, D)
+             * v_sc[None, :, None])
+        scale = 1.0 / (D ** 0.5)
+        qg = q.reshape(KV, G, D)
+        s = jnp.einsum("kgd,skd->kgs", qg * scale, k,
+                       preferred_element_type=jnp.float32)  # (KV,G,blk)
+        s = s.reshape(H, blk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[...]                               # (H, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+        pv = jnp.einsum("kgs,skd->kgd", p.reshape(KV, G, blk), v,
+                        preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv.reshape(H, D)
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _paged_verify_kernel_int8(len_ref, bt_ref, ks_ref, vs_ref, q_ref,
+                              k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                              *, blk: int, G: int, T: int):
+    """Int8 variant of :func:`_paged_verify_kernel` (same T-queries-folded
+    -into-heads layout), K/V dequantized in-register per block."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    k_start = j * blk
+
+    @pl.when(k_start < length)
+    def _compute():
+        pid = bt_ref[b, j]
+        q = q_ref[0].astype(jnp.float32)                  # (T, H, D)
+        k = k_ref[0].astype(jnp.float32)                  # (blk, KV*D) int8
+        _, H, D = q.shape
+        KV = k.shape[-1] // D
+        k_sc = ks_ref[pid]                                # (KV,) f32
+        v_sc = vs_ref[pid]
+        k = k.reshape(blk, KV, D) * k_sc[None, :, None]
+        v = (v_ref[0].astype(jnp.float32).reshape(blk, KV, D)
+             * v_sc[None, :, None])
         scale = 1.0 / (D ** 0.5)
         qg = q.reshape(T, KV, G, D)
         s = jnp.einsum("tkgd,skd->tkgs", qg * scale, k,
@@ -233,4 +350,114 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), q, kr, vr)
+    return out
+
+
+def paged_decode_attention_int8(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, k_scale: jax.Array,
+                                v_scale: jax.Array,
+                                block_tables: jax.Array,
+                                lengths: jax.Array, *,
+                                interpret: bool = False) -> jax.Array:
+    """Int8-pool variant of :func:`paged_decode_attention`.
+
+    k_pool/v_pool: (num_blocks, block_size, KV, D) int8; k_scale/v_scale:
+    (num_blocks, KV) f32 symmetric per-block-per-head scales (``x ≈ q *
+    scale``).  Scales ride scalar prefetch into SMEM next to the block
+    table, so dequantization happens in-register per tile and the HBM
+    read stays int8.  Returns (B, H, D) in q.dtype.
+    """
+    B, H, D = q.shape
+    nb, blk, KV, _ = k_pool.shape
+    G = H // KV
+    W = block_tables.shape[1]
+    kr = k_pool.reshape(nb, blk, KV * D)
+    vr = v_pool.reshape(nb, blk, KV * D)
+
+    grid = (B, W)
+    kernel = functools.partial(_paged_decode_kernel_int8, blk=blk, G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, D),
+                             lambda b, j, lens, bt, ks, vs: (b, 0, 0)),
+                pl.BlockSpec((1, blk, KV * D),
+                             lambda b, j, lens, bt, ks, vs:
+                             (bt[b, j], 0, 0)),
+                pl.BlockSpec((1, blk, KV * D),
+                             lambda b, j, lens, bt, ks, vs:
+                             (bt[b, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, D),
+                                   lambda b, j, lens, bt, ks, vs:
+                                   (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+      q, kr, vr)
+    return out
+
+
+def paged_verify_attention_int8(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, k_scale: jax.Array,
+                                v_scale: jax.Array,
+                                block_tables: jax.Array,
+                                lengths: jax.Array, *,
+                                interpret: bool = False) -> jax.Array:
+    """Int8-pool variant of :func:`paged_verify_attention`: q is
+    (B, T, H, D), pools are int8 with (num_blocks, KV) f32 scales, and
+    the causal-tail verify semantics match the bf16 kernel exactly."""
+    B, T, H, D = q.shape
+    nb, blk, KV, _ = k_pool.shape
+    G = H // KV
+    W = block_tables.shape[1]
+    kr = k_pool.reshape(nb, blk, KV * D)
+    vr = v_pool.reshape(nb, blk, KV * D)
+
+    grid = (B, W)
+    kernel = functools.partial(_paged_verify_kernel_int8, blk=blk, G=G,
+                               T=T)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, T, H, D),
+                             lambda b, j, lens, bt, ks, vs: (b, 0, 0, 0)),
+                pl.BlockSpec((1, blk, KV * D),
+                             lambda b, j, lens, bt, ks, vs:
+                             (bt[b, j], 0, 0)),
+                pl.BlockSpec((1, blk, KV * D),
+                             lambda b, j, lens, bt, ks, vs:
+                             (bt[b, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, T, H, D),
+                                   lambda b, j, lens, bt, ks, vs:
+                                   (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((T * H, 1), jnp.float32),
+                pltpu.VMEM((T * H, 1), jnp.float32),
+                pltpu.VMEM((T * H, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+      q, kr, vr)
     return out

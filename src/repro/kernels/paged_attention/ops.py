@@ -4,8 +4,9 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.paged_attention.kernel import (paged_decode_attention,
-                                                  paged_verify_attention)
+from repro.kernels.paged_attention.kernel import (
+    paged_decode_attention, paged_decode_attention_int8,
+    paged_verify_attention, paged_verify_attention_int8)
 
 
 @jax.jit
@@ -24,3 +25,23 @@ def paged_verify(q, k_pool, v_pool, block_tables, lengths):
     at position ``lengths - T + t`` -> (B,T,H,D)."""
     return paged_verify_attention(q, k_pool, v_pool, block_tables, lengths,
                                   interpret=jax.default_backend() == "cpu")
+
+
+@jax.jit
+def paged_decode_int8(q, k_pool, v_pool, k_scale, v_scale, block_tables,
+                      lengths):
+    """Int8-pool decode: q (B,1,H,D); pools int8 with (num_blocks, KV)
+    f32 scales -> (B,1,H,D)."""
+    o = paged_decode_attention_int8(
+        q[:, 0], k_pool, v_pool, k_scale, v_scale, block_tables, lengths,
+        interpret=jax.default_backend() == "cpu")
+    return o[:, None]
+
+
+@jax.jit
+def paged_verify_int8(q, k_pool, v_pool, k_scale, v_scale, block_tables,
+                      lengths):
+    """Int8-pool multi-token verify: q (B,T,H,D) -> (B,T,H,D)."""
+    return paged_verify_attention_int8(
+        q, k_pool, v_pool, k_scale, v_scale, block_tables, lengths,
+        interpret=jax.default_backend() == "cpu")

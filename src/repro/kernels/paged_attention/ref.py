@@ -33,3 +33,27 @@ def paged_verify_ref(q, k_pool, v_pool, block_tables, lengths) -> jax.Array:
     outs = [decode_ref(q[:, t],
                        k, v, lengths - (T - 1 - t)) for t in range(T)]
     return jnp.stack(outs, axis=1)
+
+
+def _dequant_pool(pool, scale):
+    """int8 pool (nb, blk, KV, D) * per-block-per-head scale (nb, KV)."""
+    import jax.numpy as jnp
+
+    return pool.astype(jnp.float32) * scale[:, None, :, None]
+
+
+def paged_decode_int8_ref(q, k_pool, v_pool, k_scale, v_scale,
+                          block_tables, lengths) -> jax.Array:
+    """Int8 oracle: dequantize the whole pool up front (the cost the
+    fused kernel avoids), then delegate to the bf16 paged oracle."""
+    return paged_decode_ref(q, _dequant_pool(k_pool, k_scale),
+                            _dequant_pool(v_pool, v_scale),
+                            block_tables, lengths)
+
+
+def paged_verify_int8_ref(q, k_pool, v_pool, k_scale, v_scale,
+                          block_tables, lengths) -> jax.Array:
+    """Int8 multi-query oracle (dequantize pool, then verify oracle)."""
+    return paged_verify_ref(q, _dequant_pool(k_pool, k_scale),
+                            _dequant_pool(v_pool, v_scale),
+                            block_tables, lengths)

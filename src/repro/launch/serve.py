@@ -63,6 +63,13 @@ def main():
     ap.add_argument("--pool-tokens", type=int, default=None,
                     help="paged KV pool size in tokens (default: "
                          "max_batch * capacity)")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8"],
+                    default="bf16",
+                    help="paged KV pool storage precision: 'int8' "
+                         "quantizes blocks symmetrically with per-block "
+                         "f32 scales — the same --pool-tokens budget "
+                         "buys ~2x the blocks (accuracy-guarded; see "
+                         "serving/README.md 'Quantized serving')")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree of this replica (one "
                          "sharded engine = one gateway endpoint); KV "
@@ -155,6 +162,9 @@ def main():
     if (args.disagg or args.role != "unified") and args.dense:
         ap.error("disaggregated roles need the paged KV layout "
                  "(KV handoffs are block-granular); drop --dense")
+    if args.kv_dtype == "int8" and args.dense:
+        ap.error("--kv-dtype int8 needs the paged KV layout (per-block "
+                 "scales live in the block pool); drop --dense")
     adapter_slots = (min(args.adapters, 4) if args.adapter_slots is None
                      else args.adapter_slots)
     if args.adapters and adapter_slots < 1:
@@ -203,7 +213,8 @@ def main():
             spec_k=args.spec_k,
             draft_cfg=draft_cfg if spec else None,
             draft_params=draft_params if spec else None,
-            obs=obs, mesh=mesh, name=name, role=role)
+            obs=obs, mesh=mesh, name=name, role=role,
+            kv_dtype=args.kv_dtype)
 
     pre = None
     if args.disagg:
@@ -304,6 +315,13 @@ def main():
         ps = pre.metrics.summary()
         print(f"disagg: handoffs={ps['handed_off']} "
               f"(prefill0 -> decode0)")
+    if args.kv_dtype == "int8":
+        kv = eng.kv_stats()
+        print(f"quantized KV: dtype=int8 "
+              f"blocks_total={kv['kv_blocks_total']} "
+              f"block_bytes_per_device="
+              f"{kv.get('kv_block_bytes_per_device', 0)} B "
+              f"(~2x blocks at the same --pool-tokens budget)")
     if args.tp > 1:
         kv = eng.kv_stats()
         line = f"sharded replica: tp={kv.get('kv_tp_degree', args.tp)}"

@@ -291,6 +291,96 @@ def paged_verify_attention(q, k_pool, v_pool, block_tables, lengths):
     return verify_attention(q, k_seq, v_seq, lengths)
 
 
+def paged_decode_attention_int8(q, k_pool, v_pool, k_scale, v_scale,
+                                block_tables, lengths):
+    """One-token attention against an *int8* paged cache (jnp oracle).
+
+    k_pool/v_pool: (num_blocks, block_size, KV, hd) int8; k_scale/v_scale:
+    (num_blocks, KV) f32 symmetric per-block-per-head scales.  Gathers and
+    dequantizes each sequence's blocks, then runs the dense decode math —
+    the fused Pallas kernel keeps the HBM read int8 and dequantizes
+    in-register instead.
+    """
+    B = q.shape[0]
+    _, blk, KV, hd = k_pool.shape
+    W = block_tables.shape[1]
+    k_seq = sharding.constrain(
+        (k_pool[block_tables].astype(jnp.float32)
+         * k_scale[block_tables][:, :, None, :, None]
+         ).reshape(B, W * blk, KV, hd),
+        ("act_batch", "act_kvseq", "act_heads", None))
+    v_seq = sharding.constrain(
+        (v_pool[block_tables].astype(jnp.float32)
+         * v_scale[block_tables][:, :, None, :, None]
+         ).reshape(B, W * blk, KV, hd),
+        ("act_batch", "act_kvseq", "act_heads", None))
+    return decode_attention(q, k_seq, v_seq, lengths)
+
+
+def paged_verify_attention_int8(q, k_pool, v_pool, k_scale, v_scale,
+                                block_tables, lengths):
+    """Multi-token tail attention against an *int8* paged cache (jnp
+    oracle); same contract as :func:`paged_verify_attention` with
+    gather-time dequantization."""
+    B = q.shape[0]
+    _, blk, KV, hd = k_pool.shape
+    W = block_tables.shape[1]
+    k_seq = sharding.constrain(
+        (k_pool[block_tables].astype(jnp.float32)
+         * k_scale[block_tables][:, :, None, :, None]
+         ).reshape(B, W * blk, KV, hd),
+        ("act_batch", "act_kvseq", "act_heads", None))
+    v_seq = sharding.constrain(
+        (v_pool[block_tables].astype(jnp.float32)
+         * v_scale[block_tables][:, :, None, :, None]
+         ).reshape(B, W * blk, KV, hd),
+        ("act_batch", "act_kvseq", "act_heads", None))
+    return verify_attention(q, k_seq, v_seq, lengths)
+
+
+def quantized_scatter_token(pool, scales, x_t, pb, off):
+    """Scatter one token's values into an int8 paged pool leaf.
+
+    pool: (num_blocks, blk, *inner) int8; scales: (num_blocks,) or
+    (num_blocks, heads) f32 — one symmetric scale per block (per head when
+    the leaf has a head axis, reducing over everything else); x_t:
+    (B, *inner) new values; pb/off: (B,) physical block and in-block slot.
+
+    The block scale is a running max: if the new token raises it, the
+    block's resident rows are requantized under the wider scale (gather
+    one block per row, rescale, scatter back).  When the scale is
+    unchanged the requant ratio is exactly 1.0, integers round to
+    themselves, and resident codes are bit-identical — so appends within
+    a block's existing dynamic range never disturb earlier tokens.
+    Duplicate ``pb`` rows only occur for inert slots parked on the
+    reserved null block 0, which is never read.
+    """
+    blk = pool.shape[1]
+    per_head = scales.ndim == 2
+    x = x_t.astype(jnp.float32)
+    q_old = pool[pb].astype(jnp.float32)            # (B, blk, *inner)
+    s_old = scales[pb]                              # (B,) or (B, heads)
+    if per_head:
+        s_tok = jnp.max(jnp.abs(x), axis=-1) / 127.0      # (B, heads)
+        bcast = (slice(None), None, slice(None), None)    # -> (B,1,h,1)
+        tokb = (slice(None), slice(None), None)           # -> (B,h,1)
+    else:
+        s_tok = jnp.max(jnp.abs(x), axis=-1) / 127.0      # (B,)
+        bcast = (slice(None), None, None)                 # -> (B,1,1)
+        tokb = (slice(None), None)                        # -> (B,1)
+    s_new = jnp.maximum(s_old, s_tok)
+    denom = jnp.maximum(s_new, 1e-12)
+    ratio = jnp.where(s_new > 0, s_old / denom, 0.0)
+    q_res = jnp.round(q_old * ratio[bcast])
+    q_tok = jnp.clip(jnp.round(x / denom[tokb]), -127, 127)
+    sel = jnp.arange(blk) == off[:, None]                 # (B, blk)
+    sel = sel.reshape(sel.shape + (1,) * (pool.ndim - 2))
+    blk_new = jnp.where(sel, q_tok[:, None], q_res)
+    pool = pool.at[pb].set(blk_new.astype(pool.dtype))
+    scales = scales.at[pb].set(s_new)
+    return pool, scales
+
+
 def attention_block(cfg: ModelConfig, p, x, positions, *,
                     mode: str, cache=None, lengths=None,
                     kv_valid_len=None, causal: bool = True,
@@ -321,6 +411,40 @@ def attention_block(cfg: ModelConfig, p, x, positions, *,
         new_cache = None
         if mode == "prefill":
             new_cache = {"k": k.astype(dt), "v": v.astype(dt)}
+    elif block_tables is not None and "k_scale" in cache:
+        # int8 pool: symmetric per-block-per-head scales, quantized at
+        # write time (running-max block scale, see
+        # :func:`quantized_scatter_token`); attention reads dequantize on
+        # gather (the fused Pallas kernel dequantizes in-register)
+        q, k, v = project_qkv(cfg, p, x, positions,
+                              lora=lora, adapter_ids=adapter_ids)
+        S = q.shape[1]
+        blk = cache["k"].shape[1]
+        k_pool, v_pool = cache["k"], cache["v"]
+        k_sc, v_sc = cache["k_scale"], cache["v_scale"]
+        for t in range(S):
+            idx = lengths - S + t
+            pb = jnp.take_along_axis(block_tables, (idx // blk)[:, None],
+                                     axis=1)[:, 0]
+            off = idx % blk
+            k_pool, k_sc = quantized_scatter_token(k_pool, k_sc,
+                                                   k[:, t], pb, off)
+            v_pool, v_sc = quantized_scatter_token(v_pool, v_sc,
+                                                   v[:, t], pb, off)
+        k_pool = sharding.constrain(
+            k_pool, ("act_batch", "act_kvseq", "act_heads", None))
+        v_pool = sharding.constrain(
+            v_pool, ("act_batch", "act_kvseq", "act_heads", None))
+        k_sc = sharding.constrain(k_sc, ("act_batch", "act_heads"))
+        v_sc = sharding.constrain(v_sc, ("act_batch", "act_heads"))
+        if S == 1:
+            o = paged_decode_attention_int8(q, k_pool, v_pool, k_sc, v_sc,
+                                            block_tables, lengths)
+        else:
+            o = paged_verify_attention_int8(q, k_pool, v_pool, k_sc, v_sc,
+                                            block_tables, lengths)
+        new_cache = {"k": k_pool, "v": v_pool,
+                     "k_scale": k_sc, "v_scale": v_sc}
     elif block_tables is not None:
         q, k, v = project_qkv(cfg, p, x, positions,
                               lora=lora, adapter_ids=adapter_ids)

@@ -135,7 +135,39 @@ def mla_block(cfg: ModelConfig, p, x, positions, *, mode: str,
     # S == 1 is the decode micro-step; S > 1 is the speculative verify
     # tail (the S newest tokens, written then causally attended — each
     # query t sits at position ``lengths - S + t``).
-    if block_tables is not None:
+    if block_tables is not None and "ckv_scale" in cache:
+        # int8 latent pool: the leaves have no head axis, so each block
+        # carries one scalar f32 scale (running-max, requant-on-widen —
+        # same write discipline as the GQA int8 pool)
+        from repro.models.attention import quantized_scatter_token
+
+        blk = cache["ckv"].shape[1]
+        ckv_p, kpe_p = cache["ckv"], cache["kpe"]
+        ckv_s, kpe_s = cache["ckv_scale"], cache["kpe_scale"]
+        for t in range(S):
+            idx = lengths - S + t
+            pb = jnp.take_along_axis(block_tables, (idx // blk)[:, None],
+                                     axis=1)[:, 0]
+            off = idx % blk
+            ckv_p, ckv_s = quantized_scatter_token(ckv_p, ckv_s,
+                                                   c_kv[:, t], pb, off)
+            kpe_p, kpe_s = quantized_scatter_token(kpe_p, kpe_s,
+                                                   k_pe[:, t], pb, off)
+        ckv_p = sharding.constrain(ckv_p, ("act_batch", "act_kvseq", None))
+        kpe_p = sharding.constrain(kpe_p, ("act_batch", "act_kvseq", None))
+        ckv_s = sharding.constrain(ckv_s, ("act_batch",))
+        kpe_s = sharding.constrain(kpe_s, ("act_batch",))
+        new_cache = {"ckv": ckv_p, "kpe": kpe_p,
+                     "ckv_scale": ckv_s, "kpe_scale": kpe_s}
+        # gather + dequantize each sequence's blocks into logical order
+        W = block_tables.shape[1]
+        ckv_c = (ckv_p[block_tables].astype(jnp.float32)
+                 * ckv_s[block_tables][:, :, None, None]
+                 ).reshape(B, W * blk, kvl)
+        kpe_c = (kpe_p[block_tables].astype(jnp.float32)
+                 * kpe_s[block_tables][:, :, None, None]
+                 ).reshape(B, W * blk, rope)
+    elif block_tables is not None:
         blk = cache["ckv"].shape[1]
         ckv_p, kpe_p = cache["ckv"], cache["kpe"]
         # a multi-token tail may straddle a block boundary: resolve each

@@ -244,6 +244,75 @@ def make_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
     return make_cache(cfg, num_blocks, block_size, dtype, abstract)
 
 
+def _quantized_layer_pool_struct(cfg: ModelConfig, mixer: str, nb: int,
+                                 bs: int):
+    """One layer of an int8 paged pool: the int8 data leaves plus f32
+    ``<name>_scale`` siblings (symmetric, per-block — and per-KV-head for
+    leaves that carry a head axis; MLA's latent leaves get one scalar
+    scale per block)."""
+    base = _layer_cache_struct(cfg, mixer, nb, bs, jnp.int8)
+    ax = _cache_axes_one(cfg, mixer)
+    out: Dict[str, Any] = {}
+    for name, leaf in base.items():
+        shape, _ = leaf
+        out[name] = leaf
+        if "act_heads" in ax[name]:
+            heads = shape[ax[name].index("act_heads")]
+            out[name + "_scale"] = ((nb, heads), jnp.float32)
+        else:
+            out[name + "_scale"] = ((nb,), jnp.float32)
+    return out
+
+
+def _quantized_pool_axes_one(cfg: ModelConfig, mixer: str):
+    ax = _cache_axes_one(cfg, mixer)
+    out: Dict[str, Any] = {}
+    for name, a in ax.items():
+        out[name] = a
+        # scales shard with the KV-head axis under TP (or replicate when
+        # the leaf has no head axis, e.g. MLA latents)
+        out[name + "_scale"] = (("act_batch", "act_heads")
+                                if "act_heads" in a else ("act_batch",))
+    return out
+
+
+def make_quantized_paged_pool(cfg: ModelConfig, num_blocks: int,
+                              block_size: int, abstract: bool = False):
+    """Int8 paged pool: same layer/stack layout as :func:`make_paged_pool`
+    but with int8 block data and f32 per-block scale leaves riding inside
+    each layer dict — so scan threading, donation, export/import and byte
+    accounting all treat scales as ordinary pool leaves."""
+    if not supports_paged_cache(cfg):
+        raise ValueError("architecture has no position-sliceable KV cache")
+    plan = stack_plan(cfg)
+    c: Dict[str, Any] = {}
+    if plan["first"]:
+        c["first"] = [_quantized_layer_pool_struct(cfg, m, num_blocks,
+                                                   block_size)
+                      for m, _ in plan["first"]]
+    c["stack"] = _stackc(
+        _quantized_layer_pool_struct(cfg, plan["mixer"], num_blocks,
+                                     block_size),
+        plan["n"])
+    return _materialize(c, abstract)
+
+
+def paged_pool_axes(cfg: ModelConfig, kv_dtype: str = "bf16"):
+    """Logical sharding axes for a paged pool.  ``bf16`` pools share the
+    plain cache axes; ``int8`` pools add the ``*_scale`` leaves."""
+    if kv_dtype != "int8":
+        return cache_axes(cfg)
+    plan = stack_plan(cfg)
+    pre = ("layers",)
+    ax1 = _quantized_pool_axes_one(cfg, plan["mixer"])
+    c: Dict[str, Any] = {"stack": jax.tree.map(
+        lambda a: pre + a, ax1, is_leaf=lambda x: isinstance(x, tuple))}
+    if plan["first"]:
+        c["first"] = [_quantized_pool_axes_one(cfg, m)
+                      for m, _ in plan["first"]]
+    return c
+
+
 def pad_cache(cfg: ModelConfig, cache, capacity: int):
     """Pad the KV-sequence dim of every cache entry up to ``capacity``
     (prefill returns caches sized to the prompt; the engine/serve loop

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.finetune.quantize import dequantize_tree
 from repro.models import model as M
 from repro.parallel import sharding
 from repro.serving.adapters import AdapterPool, supports_multi_lora
@@ -45,6 +46,23 @@ from repro.serving.sampling import (sample, sample_batched,
                                     spec_accept_batched)
 from repro.serving.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.serving.speculative import make_drafter
+
+
+def _is_quantized_params(tree) -> bool:
+    """True when ``tree`` is a ``finetune.quantize.quantize_tree``
+    artifact: its leaves are ``{"q", "scale"}`` / ``{"raw"}`` dicts
+    (the same leaf test ``dequantize_tree`` keys on)."""
+    found = False
+
+    def chk(x):
+        nonlocal found
+        if isinstance(x, dict) and ("raw" in x or "q" in x):
+            found = True
+            return True
+        return False
+
+    jax.tree.leaves(tree, is_leaf=chk)
+    return found
 
 
 @dataclasses.dataclass
@@ -82,7 +100,8 @@ class InferenceEngine:
                  draft_cfg=None, draft_params=None,
                  obs=None, faults=None,
                  mesh=None, rules=None,
-                 role: str = "unified"):
+                 role: str = "unified",
+                 kv_dtype: str = "bf16"):
         """``paged=None`` auto-selects the paged KV path when the
         architecture supports it.  ``pool_tokens`` sizes the shared block
         pool (default ``max_batch * capacity`` — the dense footprint);
@@ -149,7 +168,25 @@ class InferenceEngine:
         prompts; admits requests from :meth:`submit_handoff`, importing
         the migrated KV with zero re-prefill).  Both non-unified roles
         need the paged KV layout — the handoff is a block-table
-        export/import."""
+        export/import.
+
+        ``kv_dtype`` selects the paged pool's storage precision:
+        ``"bf16"`` (default — byte-identical to the pre-option engine)
+        or ``"int8"`` (symmetric per-block quantized KV with f32
+        scales; the same ``pool_tokens`` budget buys ~2x the physical
+        blocks, at a small accuracy-guarded decode error — see
+        serving/README.md "Quantized serving").  Requires the paged
+        layout.
+
+        ``params`` may also be a release artifact from
+        ``finetune.quantize.quantize_tree`` — the engine detects the
+        quantized leaf layout and dequantizes at load, closing the
+        lifecycle's quantize -> publish -> deploy loop."""
+        if _is_quantized_params(params):
+            # a published int8 weight artifact: restore serving dtypes
+            # before sharding/jit so every downstream jaxpr sees plain
+            # tensors (f32 matches the lifecycle release path)
+            params = dequantize_tree(params, jnp.float32)
         self.cfg, self.params = cfg, params
         self.name = name
         self.clock = clock
@@ -182,11 +219,21 @@ class InferenceEngine:
         if adapter_slots > 0:
             self.adapters = AdapterPool(cfg, params, slots=adapter_slots,
                                         rank_bucket=adapter_rank_bucket)
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8', "
+                             f"got {kv_dtype!r}")
+        if kv_dtype == "int8" and not self.paged:
+            raise ValueError(
+                "kv_dtype='int8' needs the paged KV layout (per-block "
+                f"scales live in the block pool); {cfg.name} resolved "
+                "to dense")
+        self.kv_dtype = kv_dtype
         sched = sched or SchedulerConfig()
         if self.paged:
             self.slots = PagedCacheSlots(
                 cfg, max_batch, capacity, block_size=sched.prefix_block,
-                pool_tokens=pool_tokens, mesh=mesh, rules=self.rules)
+                pool_tokens=pool_tokens, mesh=mesh, rules=self.rules,
+                kv_dtype=kv_dtype)
         else:
             self.slots = CacheSlots(cfg, max_batch, capacity,
                                     mesh=mesh, rules=self.rules)
@@ -210,6 +257,12 @@ class InferenceEngine:
         # engine's.  Cache/pool outputs are re-constrained before
         # returning so the donated buffers keep a stable NamedSharding
         # across micro-steps (no per-step resharding, no recompiles).
+        # two axes trees: the *dense* cache axes for prefill and the
+        # dense decode/verify steps (their cache trees never carry scale
+        # leaves), and the slots' axes for the paged steps (identical to
+        # the dense tree for bf16 pools; int8 pools add ``*_scale``
+        # leaves)
+        dense_axes = M.cache_axes(cfg)
         cache_axes = self.slots._axes
         mk_jit = lambda f, **kw: sharding.sharded_jit(  # noqa: E731
             f, mesh, self.rules, **kw)
@@ -217,7 +270,7 @@ class InferenceEngine:
         def _prefill_fn(p, b, lo, ai):
             logits, cache, aux = M.prefill(cfg, p, b, lora=lo,
                                            adapter_ids=ai)
-            return logits, constrain_cache(cache, cache_axes), aux
+            return logits, constrain_cache(cache, dense_axes), aux
 
         self._prefill = mk_jit(_prefill_fn)
 
@@ -232,7 +285,7 @@ class InferenceEngine:
         def _fused(p, t, c, l, key, temps, tks, tps, lo, ai, greedy):
             logits, nc = M.decode_step(cfg, p, t, c, l, lora=lo,
                                        adapter_ids=ai)
-            nc = constrain_cache(nc, cache_axes)
+            nc = constrain_cache(nc, dense_axes)
             if greedy:
                 return jnp.argmax(logits, -1).astype(jnp.int32), nc
             return sample_batched(logits, key, temps, tks, tps), nc
@@ -271,7 +324,7 @@ class InferenceEngine:
                           lo, ai, greedy):
             logits, nc = M.verify_step(cfg, p, t, c, l, lora=lo,
                                        adapter_ids=ai)
-            nc = constrain_cache(nc, cache_axes)
+            nc = constrain_cache(nc, dense_axes)
             out, nem = spec_accept_batched(logits, t, dprobs, nd, key,
                                            temps, tks, tps, greedy)
             return out, nem, nc

@@ -415,18 +415,35 @@ class PagedCacheSlots:
 
     def __init__(self, cfg: ModelConfig, max_batch: int, capacity: int,
                  dtype=jnp.bfloat16, block_size: int = 16,
-                 pool_tokens: Optional[int] = None, mesh=None, rules=None):
+                 pool_tokens: Optional[int] = None, mesh=None, rules=None,
+                 kv_dtype: str = "bf16"):
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8', "
+                             f"got {kv_dtype!r}")
         self.cfg = cfg
         self.B = max_batch
         self.capacity = capacity
         self.block_size = block_size
+        self.kv_dtype = kv_dtype
         self.mesh, self.rules = mesh, rules
         self.blocks_per_seq = -(-capacity // block_size)
         pool_tokens = (max_batch * capacity if pool_tokens is None
                        else pool_tokens)
-        num_blocks = 1 + max(pool_tokens // block_size, self.blocks_per_seq)
-        self.pool = M.make_paged_pool(cfg, num_blocks, block_size, dtype)
-        self._axes = M.cache_axes(cfg)
+        if kv_dtype == "int8":
+            # ``pool_tokens`` is a bf16-byte-equivalent budget: int8
+            # blocks cost half the bytes, so the same budget buys twice
+            # the physical blocks — admission capacity doubles for free
+            num_blocks = 1 + max((pool_tokens * 2) // block_size,
+                                 self.blocks_per_seq)
+            self.pool = M.make_quantized_paged_pool(cfg, num_blocks,
+                                                    block_size)
+            self._axes = M.paged_pool_axes(cfg, "int8")
+        else:
+            num_blocks = 1 + max(pool_tokens // block_size,
+                                 self.blocks_per_seq)
+            self.pool = M.make_paged_pool(cfg, num_blocks, block_size,
+                                          dtype)
+            self._axes = M.cache_axes(cfg)
         if mesh is not None:
             # a pool leaf is (num_blocks, block_size, ...) in the cache's
             # (act_batch, act_kvseq, ...) axis slots; under serving_tp
@@ -444,7 +461,9 @@ class PagedCacheSlots:
         self.free: Deque[int] = deque(range(max_batch))
         self.slot_owner: Dict[int, str] = {}
         self._tables_dev = None
-        self._scatter = sharding.sharded_jit(self._scatter_impl, mesh, rules,
+        scatter_impl = (self._scatter_impl_q if kv_dtype == "int8"
+                        else self._scatter_impl)
+        self._scatter = sharding.sharded_jit(scatter_impl, mesh, rules,
                                              donate_argnums=(0,))
         # KV handoff (disaggregated prefill/decode): gather reads block
         # contents out (no donation — the pool stays live), the block
@@ -570,6 +589,73 @@ class PagedCacheSlots:
             return jnp.moveaxis(d.at[ids].set(s), 0, bi)
 
         out = tree_multi(one, [pool, prefill_cache], self._axes)
+        return constrain_cache(out, self._axes)
+
+    def _scatter_impl_q(self, pool, prefill_cache, ids):
+        """Int8 variant of :meth:`_scatter_impl`: quantize the dense
+        (bf16) prefill cache into the int8 pool at write time, computing
+        each block's symmetric scale over everything the scale leaf does
+        not index (in-block positions and feature dims; per KV head when
+        the leaf has a head axis).  The prefill cache carries no scale
+        leaves — they are derived here."""
+        nblk = ids.shape[0]
+        blk = self.block_size
+
+        def qone(dst, sc, src, ax, sc_ax):
+            bi = ax.index("act_batch")
+            ki = ax.index("act_kvseq")
+            span = nblk * blk
+            src = src.astype(jnp.float32)
+            if src.shape[ki] < span:
+                pads = [(0, 0)] * src.ndim
+                pads[ki] = (0, span - src.shape[ki])
+                src = jnp.pad(src, pads)
+            idx = [slice(None)] * src.ndim
+            idx[ki] = slice(0, span)
+            src = src[tuple(idx)]
+            shape = list(src.shape)
+            shape[bi:ki + 1] = [nblk, blk]
+            src = src.reshape(shape)
+            # after the reshape the act_batch slot is the block axis and
+            # the act_kvseq slot the in-block position; reduce the scale
+            # over every axis the scale leaf does not keep
+            labels = list(ax)
+            labels[bi] = "act_batch"
+            labels[ki] = None
+            red = tuple(i for i, a in enumerate(labels)
+                        if a not in ("layers", "act_batch", "act_heads"))
+            s_kd = jnp.max(jnp.abs(src), axis=red, keepdims=True) / 127.0
+            q = jnp.clip(jnp.round(src / jnp.maximum(s_kd, 1e-12)),
+                         -127, 127).astype(dst.dtype)
+            scale = jnp.squeeze(s_kd, axis=red)
+            d_new = jnp.moveaxis(
+                jnp.moveaxis(dst, bi, 0).at[ids].set(
+                    jnp.moveaxis(q, bi, 0)), 0, bi)
+            sbi = sc_ax.index("act_batch")
+            s_new = jnp.moveaxis(
+                jnp.moveaxis(sc, sbi, 0).at[ids].set(
+                    jnp.moveaxis(scale, sbi, 0)), 0, sbi)
+            return d_new, s_new
+
+        def walk(pl, pc, ax):
+            if isinstance(pl, dict):
+                if any(k.endswith("_scale") for k in pl):
+                    out: Dict[str, Any] = {}
+                    for k in pl:
+                        if k.endswith("_scale"):
+                            continue
+                        d_new, s_new = qone(pl[k], pl[k + "_scale"],
+                                            pc[k], ax[k],
+                                            ax[k + "_scale"])
+                        out[k] = d_new
+                        out[k + "_scale"] = s_new
+                    return out
+                return {k: walk(pl[k], pc[k], ax[k]) for k in pl}
+            if isinstance(pl, list):
+                return [walk(p, c, a) for p, c, a in zip(pl, pc, ax)]
+            raise TypeError("int8 pool leaf without a scale sibling")
+
+        out = walk(pool, prefill_cache, self._axes)
         return constrain_cache(out, self._axes)
 
     def insert_prefill(self, slot: int, prefill_cache, length: int):

@@ -332,7 +332,10 @@ class ChunkedPrefillScheduler:
         if self.paged:
             # worst-case (cache-miss) block need for the first chunk;
             # eviction of unpinned tree leaves can free at most
-            # evictable_blocks() more
+            # evictable_blocks() more.  Admission is counted in physical
+            # pool blocks, so an int8 pool (kv_dtype="int8") doubles the
+            # admittable load at the same pool_tokens budget with no
+            # change here — num_free simply starts ~2x higher.
             avail = eng.slots.bp.num_free
             if self.prefix_cache is not None:
                 avail += self.prefix_cache.evictable_blocks()

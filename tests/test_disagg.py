@@ -453,3 +453,55 @@ def test_handoff_metrics_and_spans_one_snapshot(served):
     rid = reqs[0].request_id
     names = [e["name"] for e in obs.tracer.events_for(f"req {rid}")]
     assert "handoff" in names and "finish" in names
+
+
+# ---------------------------------------------------------------- int8
+import jax.numpy as jnp  # noqa: E402
+
+
+def test_disagg_quantized_handoff(served):
+    """Both pools on int8 KV: the handoff carries the quantized payload
+    plus scales (~half the bf16 wire bytes) and the decode side resumes
+    token-exactly against an int8 unified engine."""
+    cfg, params = served
+    prompts = _prompts(cfg.vocab_size, seed=41)
+    ref, _ = _run_unified(cfg, params, prompts, kv_dtype="int8")
+    pre = _engine(cfg, params, role="prefill", kv_dtype="int8")
+    dec = _engine(cfg, params, role="decode", kv_dtype="int8")
+    reqs = [Request(prompt=list(p), max_new_tokens=GEN) for p in prompts]
+    for r in reqs:
+        pre.submit(r)
+    pre.run_until_idle()
+    hand = [ho for _, ho in pre.outbox]
+    # wire payload ~halves vs a bf16 prefill pool of the same requests
+    pre16 = _engine(cfg, params, role="prefill")
+    reqs16 = [Request(prompt=list(p), max_new_tokens=GEN)
+              for p in prompts]
+    for r in reqs16:
+        pre16.submit(r)
+    pre16.run_until_idle()
+    for h8, (_, h16) in zip(hand, pre16.outbox):
+        assert h8.length == h16.length and h8.n_blocks == h16.n_blocks
+        ratio = h8.payload_bytes / h16.payload_bytes
+        assert 0.45 < ratio < 0.6
+        assert any(leaf.dtype == jnp.int8
+                   for leaf in jax.tree.leaves(h8.blocks))
+    while pre.outbox:
+        dec.submit_handoff(*pre.outbox.popleft())
+    dec.run_until_idle()
+    assert [list(r.generated) for r in reqs] == ref
+
+
+def test_disagg_mixed_dtype_handoff_rejected(served):
+    """A quantized handoff cannot be imported into a bf16 decode pool
+    (and vice versa): the leaf structures differ, so the import raises
+    instead of silently corrupting the pool."""
+    cfg, params = served
+    pre = _engine(cfg, params, role="prefill", kv_dtype="int8")
+    dec = _engine(cfg, params, role="decode")
+    req = Request(prompt=list(PROMPT), max_new_tokens=GEN)
+    pre.submit(req)
+    pre.run_until_idle()
+    with pytest.raises(Exception):
+        dec.submit_handoff(*pre.outbox.popleft())
+        dec.run_until_idle()

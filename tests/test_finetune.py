@@ -101,3 +101,23 @@ def test_quantize_roundtrip(tiny_params):
             assert np.max(np.abs(a - b) - scale) < 1e-5  # within 1 LSB
         else:
             np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_quantized_bytes_halves_bf16(tiny_params):
+    """The serving artifact is ~half the bf16 footprint: int8 payload +
+    per-output-channel f32 scales on quantized leaves, raw passthrough
+    for the small ones."""
+    from repro.finetune.quantize import quantized_bytes
+    q = quantize_tree(tiny_params)
+    bf16 = sum(x.size * 2 for x in jax.tree.leaves(tiny_params))
+    ratio = quantized_bytes(q) / bf16
+    assert 0.4 < ratio < 0.75
+    # the quantized leaves themselves sit at ~1/2 exactly
+    qb = rb = 0
+    for leaf in jax.tree.leaves(
+            q, is_leaf=lambda x: isinstance(x, dict)
+            and ("raw" in x or "q" in x)):
+        if "q" in leaf:
+            qb += leaf["q"].nbytes + leaf["scale"].nbytes
+            rb += leaf["q"].size * 2
+    assert rb and 0.45 < qb / rb < 0.6

@@ -1,0 +1,188 @@
+"""Accuracy guard for int8 quantized KV-cache serving.
+
+Three gates (ISSUE: quantized serving must not silently change what the
+engine says):
+
+* ``kv_dtype="bf16"`` is BIT-FOR-BIT identical to the default path —
+  the golden-token fixtures are replayed with the explicit flag and
+  must reproduce the committed tokens exactly.  The int8 machinery is
+  keyed off scale leaves in the cache tree, so bf16 jaxprs are
+  structurally untouched.
+* int8 greedy tokens must match the fp path at >= ``MATCH_FLOOR`` on
+  the golden fixtures (both attention families: GQA and MLA).
+* int8 paged decode logits stay within ``LOGIT_TOL`` of the dense fp
+  logits on the same state (model-level A/B through
+  ``PagedCacheSlots`` + ``decode_step_paged``).
+
+Also covers satellite wiring: the engine accepts ``quantize_tree``
+output directly (dequantizing at param load) and rejects invalid
+``kv_dtype`` combinations.
+"""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.finetune.quantize import dequantize_tree, quantize_tree
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.kvcache import PagedCacheSlots
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden" / "golden_tokens.json").read_text())
+PAGED_FAMILIES = sorted(f for f in GOLDEN if GOLDEN[f]["paged"])
+
+MATCH_FLOOR = 0.90     # min greedy-token agreement, int8 KV vs fp KV
+LOGIT_TOL = 0.25       # max |logit diff|, int8 paged vs dense fp
+
+
+def _served(g):
+    cfg = scaled_down(get_config(g["arch"]))
+    return cfg, M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+
+def _run(cfg, params, prompts, lens, **kw):
+    eng = InferenceEngine(cfg, params, max_batch=4, capacity=128, **kw)
+    reqs = [Request(prompt=list(p), max_new_tokens=n)
+            for p, n in zip(prompts, lens)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return [r.generated for r in reqs], eng
+
+
+def _match_rate(got, want):
+    hit = tot = 0
+    for g, w in zip(got, want):
+        tot += len(w)
+        hit += sum(1 for a, b in zip(g, w) if a == b)
+    return hit / max(tot, 1)
+
+
+@pytest.mark.parametrize("family", PAGED_FAMILIES)
+def test_bf16_explicit_is_bit_for_bit(family):
+    """kv_dtype="bf16" must be indistinguishable from the default —
+    the golden tokens pin the pre-quantization numerics exactly."""
+    g = GOLDEN[family]
+    cfg, params = _served(g)
+    got, eng = _run(cfg, params, g["prompts"],
+                    [len(w) for w in g["generated"]], kv_dtype="bf16")
+    assert eng.kv_dtype == "bf16"
+    assert got == g["generated"]
+
+
+@pytest.mark.parametrize("family", PAGED_FAMILIES)
+def test_int8_match_rate_floor(family):
+    g = GOLDEN[family]
+    cfg, params = _served(g)
+    got, eng = _run(cfg, params, g["prompts"],
+                    [len(w) for w in g["generated"]], kv_dtype="int8")
+    assert eng.kv_dtype == "int8"
+    assert all(len(t) == len(w) for t, w in zip(got, g["generated"]))
+    rate = _match_rate(got, g["generated"])
+    assert rate >= MATCH_FLOOR, (
+        f"{family}: int8 KV greedy match rate {rate:.2f} below floor "
+        f"{MATCH_FLOOR}")
+
+
+def test_int8_capacity_doubles_same_budget(tiny_cfg, tiny_params):
+    """At the same pool_tokens budget int8 carries ~2x the blocks with
+    ~half the per-block device bytes."""
+    stats = {}
+    for dt in ("bf16", "int8"):
+        eng = InferenceEngine(tiny_cfg, tiny_params, max_batch=2,
+                              capacity=64, pool_tokens=256, kv_dtype=dt)
+        stats[dt] = eng.kv_stats()
+    assert stats["int8"]["kv_blocks_total"] == \
+        2 * stats["bf16"]["kv_blocks_total"]
+    ratio = (stats["int8"]["kv_block_bytes_per_device"]
+             / stats["bf16"]["kv_block_bytes_per_device"])
+    assert 0.45 < ratio < 0.6   # int8 payload + small f32 scale overhead
+
+
+def test_engine_int8_matches_bf16_gqa(tiny_cfg, tiny_params):
+    prompts = [[3, 5, 7, 11, 13], [2, 4, 6], [9, 1, 8, 2, 7, 6, 5]]
+    lens = [12, 12, 12]
+    bf, _ = _run(tiny_cfg, tiny_params, prompts, lens, kv_dtype="bf16")
+    q8, _ = _run(tiny_cfg, tiny_params, prompts, lens, kv_dtype="int8")
+    assert _match_rate(q8, bf) >= MATCH_FLOOR
+
+
+def test_engine_int8_matches_bf16_mla():
+    cfg = scaled_down(get_config("deepseek-v2-lite-16b"), num_layers=2,
+                      d_model=64, vocab_size=128, num_heads=4)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    prompts = [[3, 5, 7, 11, 13], [2, 4, 6]]
+    lens = [12, 12]
+    bf, _ = _run(cfg, params, prompts, lens, kv_dtype="bf16")
+    q8, eng = _run(cfg, params, prompts, lens, kv_dtype="int8")
+    assert "ckv_scale" in str(jax.tree_util.tree_structure(eng.slots.pool))
+    assert _match_rate(q8, bf) >= MATCH_FLOOR
+
+
+def test_int8_logit_error_bound(tiny_cfg, tiny_params):
+    """Model-level A/B: one decode step over an int8 paged pool vs the
+    dense fp cache on identical state — logits bounded, argmax equal."""
+    cfg = tiny_cfg
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), tiny_params)
+    B, L, S = 2, 12, 16
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, S), 1,
+                              cfg.vocab_size).astype(jnp.int32)
+    batch = {"tokens": toks,
+             "prompt_lengths": jnp.full((B,), L, jnp.int32)}
+    logits0, cache, _ = M.prefill(cfg, params, batch)
+    lengths = batch["prompt_lengths"]
+    nxt = jnp.argmax(logits0, -1).astype(jnp.int32)[:, None]
+
+    # dense fp reference step
+    ref, _ = M.decode_step(cfg, params, nxt, cache, lengths + 1)
+
+    slots = PagedCacheSlots(cfg, max_batch=B, capacity=S, block_size=4,
+                            pool_tokens=B * S, kv_dtype="int8")
+    dense_ax = M.cache_axes(cfg)
+
+    def cut(x, ax, i):
+        idx = [slice(None)] * x.ndim
+        idx[ax.index("act_batch")] = slice(i, i + 1)
+        idx[ax.index("act_kvseq")] = slice(0, L)
+        return x[tuple(idx)]
+
+    from repro.serving.kvcache import tree_walk
+    for b in range(B):
+        slot = slots.allocate(f"r{b}")
+        assert slots.ensure_capacity(slot, L + 1)
+        one = tree_walk(lambda x, ax, i=b: cut(x, ax, i), cache, dense_ax)
+        slots.insert_prefill(slot, one, L)
+    got, _ = M.decode_step_paged(cfg, params, nxt, slots.pool,
+                                 slots.tables_device(), lengths + 1)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    assert err < LOGIT_TOL, f"int8 paged logit error {err:.3f}"
+    assert jnp.array_equal(jnp.argmax(got, -1), jnp.argmax(ref, -1))
+
+
+def test_engine_accepts_quantized_params(tiny_cfg, tiny_params):
+    """Satellite: quantize_tree output plugs straight into the engine
+    (lifecycle release -> deploy without a manual dequant step) and
+    serves the exact tokens of an explicit f32 dequant."""
+    q = quantize_tree(tiny_params)
+    prompts = [[3, 5, 7, 11], [2, 4, 6, 8, 10]]
+    lens = [8, 8]
+    got, eng = _run(tiny_cfg, q, prompts, lens)
+    want, _ = _run(tiny_cfg, dequantize_tree(q, jnp.float32),
+                   prompts, lens)
+    assert got == want
+    assert all(len(t) == 8 for t in got)
+    # the engine holds dense (dequantized) leaves, not wrapper dicts
+    assert all(not isinstance(x, dict)
+               for x in jax.tree.leaves(eng.params))
+
+
+def test_kv_dtype_validation(tiny_cfg, tiny_params):
+    with pytest.raises(ValueError, match="kv_dtype"):
+        InferenceEngine(tiny_cfg, tiny_params, kv_dtype="fp8")
+    with pytest.raises(ValueError, match="paged"):
+        InferenceEngine(tiny_cfg, tiny_params, paged=False,
+                        kv_dtype="int8")

@@ -219,3 +219,97 @@ def test_paged_slots_exhaustion_is_explicit(lens):
     for sl in slots:
         s.release(sl)
     assert s.bp.num_used == 0
+
+
+# ---------------------------------------------------------------- int8
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+def _slots8(pool_blocks=12, block_size=4):
+    return PagedCacheSlots(CFG, max_batch=2, capacity=32,
+                           block_size=block_size,
+                           pool_tokens=pool_blocks * block_size,
+                           kv_dtype="int8")
+
+
+def _pool_bytes(s):
+    return sum(x.nbytes for x in jax.tree.leaves(s.pool))
+
+
+@pytest.mark.parametrize("pool_blocks,block_size", [(12, 4), (8, 8)])
+def test_int8_pool_accounting(pool_blocks, block_size):
+    """Same pool_tokens budget: int8 carries 2x the allocatable blocks
+    at ~half the per-block bytes (int8 payload + f32 scale sliver)."""
+    b16 = _slots(pool_blocks, block_size)
+    i8 = _slots8(pool_blocks, block_size)
+    assert i8.bp.num_blocks - 1 == 2 * (b16.bp.num_blocks - 1)
+    ratio = ((_pool_bytes(i8) / i8.bp.num_blocks)
+             / (_pool_bytes(b16) / b16.bp.num_blocks))
+    assert 0.45 < ratio < 0.6
+    # payload leaves are int8, every one paired with a f32 scale leaf
+    seen_scale = False
+    for part in i8.pool.values():
+        for k, leaf in part.items():
+            if k.endswith("_scale"):
+                assert leaf.dtype == jnp.float32
+                seen_scale = True
+            else:
+                assert leaf.dtype == jnp.int8
+                assert f"{k}_scale" in part
+    assert seen_scale
+
+
+@settings(max_examples=10)
+@given(grow_to=st.integers(min_value=1, max_value=32),
+       trim_to=st.integers(min_value=1, max_value=32))
+def test_int8_slots_grow_trim_roundtrip(grow_to, trim_to):
+    """Allocator invariants are dtype-blind: the bf16 grow/trim/release
+    round-trip holds verbatim on an int8 pool."""
+    s = _slots8()
+    slot = s.allocate("req")
+    assert s.ensure_capacity(slot, grow_to)
+    bp = s.bp
+    assert len(s.seq_blocks[slot]) == s.blocks_for(grow_to)
+    s.trim(slot, min(trim_to, grow_to))
+    kept = s.seq_blocks[slot]
+    assert list(s.tables[slot, :len(kept)]) == kept
+    assert all(b == NULL_BLOCK for b in s.tables[slot, len(kept):])
+    assert bp.num_free + bp.num_used + 1 == bp.num_blocks
+    s.release(slot)
+    assert bp.num_used == 0
+    assert s.lengths[slot] == 1
+
+
+def test_int8_prefill_gather_roundtrip():
+    """insert_prefill quantizes; export_kv gathers the int8 blocks plus
+    scales; dequantizing recovers the source within the symmetric
+    per-block error bound (<= block_scale / 2 <= global_max / 254)."""
+    L, bs = 12, 4
+    params = M.init(CFG, jax.random.PRNGKey(0), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, L), 1,
+                              CFG.vocab_size).astype(jnp.int32)
+    _, cache, _ = M.prefill(CFG, params, {
+        "tokens": toks, "prompt_lengths": jnp.full((1,), L, jnp.int32)})
+    s = _slots8(block_size=bs)
+    slot = s.allocate("req")
+    assert s.ensure_capacity(slot, L)
+    s.insert_prefill(slot, cache, L)
+    hand = s.export_kv("req")
+    assert hand.length == L
+    for part in hand.blocks.values():
+        for k, leaf in part.items():
+            assert leaf.dtype == (jnp.float32 if k.endswith("_scale")
+                                  else jnp.int8)
+    st_blocks = hand.blocks["stack"]
+    for name in ("k", "v"):
+        q = np.asarray(st_blocks[name], np.float32)      # (nb,l,bs,KV,D)
+        sc = np.asarray(st_blocks[f"{name}_scale"])      # (nb,l,KV)
+        deq = (q * sc[:, :, None, :, None]).transpose(1, 0, 2, 3, 4)
+        deq = deq.reshape(q.shape[1], -1, q.shape[3], q.shape[4])[:, :L]
+        src = np.asarray(cache["stack"][name][:, 0, :L], np.float32)
+        err = float(np.max(np.abs(deq - src)))
+        assert err <= float(np.max(np.abs(src))) / 250.0

@@ -139,3 +139,134 @@ def test_paged_property(B, KV, G, W, bs, length_frac):
     got = paged_decode_attention(q, kp, vp, bt, lengths, interpret=True)
     want = decode_ref(q, k, v, lengths)
     assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+# ---------------------------------------------------------------- int8
+from repro.kernels.paged_attention.kernel import (  # noqa: E402
+    paged_decode_attention_int8, paged_verify_attention_int8)
+from repro.kernels.paged_attention.ops import (  # noqa: E402
+    paged_decode_int8, paged_verify_int8)
+from repro.kernels.paged_attention.ref import (  # noqa: E402
+    paged_decode_int8_ref, paged_verify_int8_ref, paged_verify_ref)
+
+
+def _quantize_pool(kp, vp):
+    """Symmetric per-block-per-head int8 quantization of a f32 pool."""
+    kp, vp = np.asarray(kp), np.asarray(vp)
+    ks = (np.max(np.abs(kp), axis=(1, 3)) / 127.0).astype(np.float32)
+    vs = (np.max(np.abs(vp), axis=(1, 3)) / 127.0).astype(np.float32)
+    kq = np.clip(np.round(kp / np.maximum(ks, 1e-12)[:, None, :, None]),
+                 -127, 127).astype(np.int8)
+    vq = np.clip(np.round(vp / np.maximum(vs, 1e-12)[:, None, :, None]),
+                 -127, 127).astype(np.int8)
+    return (jnp.asarray(kq), jnp.asarray(vq),
+            jnp.asarray(ks), jnp.asarray(vs))
+
+
+@pytest.mark.parametrize("B,KV,G,W,bs,D", [
+    (2, 2, 2, 4, 16, 64),
+    (3, 1, 8, 3, 32, 32),     # MQA-style wide groups
+    (2, 2, 1, 2, 64, 16),     # MHA (G=1)
+])
+def test_paged_int8_matches_ref(B, KV, G, W, bs, D):
+    """Fused-dequant decode kernel vs the dequantize-then-attend oracle
+    on permuted tables, GQA groups, and ragged lengths."""
+    H = KV * G
+    S = W * bs
+    q = _rand(51, (B, H, D))
+    k = _rand(52, (B, S, KV, D))
+    v = _rand(53, (B, S, KV, D))
+    lens = [S, max(1, S - bs // 2 - 1), 1][:B] + [S // 2] * max(0, B - 3)
+    lengths = jnp.asarray(lens[:B], jnp.int32)
+    kp, vp, bt = _paged_layout(k, v, bs, seed=B + 7, extra_blocks=5)
+    kq, vq, ks, vs = _quantize_pool(kp, vp)
+    got = paged_decode_attention_int8(q, kq, vq, ks, vs, bt, lengths,
+                                      interpret=True)
+    want = paged_decode_int8_ref(q, kq, vq, ks, vs, bt, lengths)
+    assert float(jnp.max(jnp.abs(got - want))) < 5e-5
+    # the quantized output tracks the fp path within int8 error
+    fp = decode_ref(q, k, v, lengths)
+    assert float(jnp.max(jnp.abs(got - fp))) < 0.1
+
+
+def test_paged_int8_table_permutation_invariant():
+    B, KV, G, W, bs, D = 2, 2, 3, 4, 16, 32
+    H = KV * G
+    S = W * bs
+    q = _rand(61, (B, H, D))
+    k = _rand(62, (B, S, KV, D))
+    v = _rand(63, (B, S, KV, D))
+    lengths = jnp.asarray([S - 3, S // 2 + 1], jnp.int32)
+    out = []
+    for shuffle in (False, True):
+        kp, vp, bt = _paged_layout(k, v, bs, seed=9, extra_blocks=9,
+                                   shuffle=shuffle)
+        kq, vq, ks, vs = _quantize_pool(kp, vp)
+        out.append(paged_decode_attention_int8(q, kq, vq, ks, vs, bt,
+                                               lengths, interpret=True))
+    assert float(jnp.max(jnp.abs(out[0] - out[1]))) == 0.0
+
+
+def test_paged_verify_int8_block_straddling_tail():
+    """Multi-token verify with the T tail queries straddling a block
+    boundary (length % bs < T), against the int8 verify oracle and the
+    fp verify oracle."""
+    B, KV, G, W, bs, D, T = 2, 2, 2, 3, 8, 32, 3
+    H = KV * G
+    S = W * bs
+    q = _rand(71, (B, T, H, D))
+    k = _rand(72, (B, S, KV, D))
+    v = _rand(73, (B, S, KV, D))
+    # row 0: tail straddles blocks 0/1 (positions 7,8,9); row 1: tail
+    # entirely inside the last block
+    lengths = jnp.asarray([bs + 2, S - 1], jnp.int32)
+    kp, vp, bt = _paged_layout(k, v, bs, seed=4, extra_blocks=4)
+    kq, vq, ks, vs = _quantize_pool(kp, vp)
+    got = paged_verify_attention_int8(q, kq, vq, ks, vs, bt, lengths,
+                                      interpret=True)
+    want = paged_verify_int8_ref(q, kq, vq, ks, vs, bt, lengths)
+    assert got.shape == (B, T, H, D)
+    assert float(jnp.max(jnp.abs(got - want))) < 5e-5
+    fp = paged_verify_ref(q, kp, vp, bt, lengths)
+    assert float(jnp.max(jnp.abs(got - fp))) < 0.1
+
+
+def test_paged_int8_ops_wrappers_model_layout():
+    B, KV, G, W, bs, D, T = 2, 1, 4, 2, 16, 32, 2
+    H = KV * G
+    S = W * bs
+    k = _rand(82, (B, S, KV, D))
+    v = _rand(83, (B, S, KV, D))
+    lengths = jnp.asarray([S, S - 5], jnp.int32)
+    kp, vp, bt = _paged_layout(k, v, bs, seed=6)
+    kq, vq, ks, vs = _quantize_pool(kp, vp)
+    q1 = _rand(81, (B, 1, H, D))
+    got = paged_decode_int8(q1, kq, vq, ks, vs, bt, lengths)
+    want = paged_decode_int8_ref(q1[:, 0], kq, vq, ks, vs, bt,
+                                 lengths)[:, None]
+    assert got.shape == (B, 1, H, D)
+    assert float(jnp.max(jnp.abs(got - want))) < 5e-5
+    qt = _rand(84, (B, T, H, D))
+    gotv = paged_verify_int8(qt, kq, vq, ks, vs, bt, lengths)
+    wantv = paged_verify_int8_ref(qt, kq, vq, ks, vs, bt, lengths)
+    assert gotv.shape == (B, T, H, D)
+    assert float(jnp.max(jnp.abs(gotv - wantv))) < 5e-5
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(1, 3), KV=st.sampled_from([1, 2]),
+       G=st.sampled_from([1, 4]), W=st.integers(1, 4),
+       bs=st.sampled_from([8, 16]), length_frac=st.floats(0.05, 1.0))
+def test_paged_int8_property(B, KV, G, W, bs, length_frac):
+    H, D = KV * G, 16
+    S = W * bs
+    q = _rand(91, (B, H, D))
+    k = _rand(92, (B, S, KV, D))
+    v = _rand(93, (B, S, KV, D))
+    lengths = jnp.full((B,), max(1, int(S * length_frac)), jnp.int32)
+    kp, vp, bt = _paged_layout(k, v, bs, seed=W + 1, extra_blocks=3)
+    kq, vq, ks, vs = _quantize_pool(kp, vp)
+    got = paged_decode_attention_int8(q, kq, vq, ks, vs, bt, lengths,
+                                      interpret=True)
+    want = paged_decode_int8_ref(q, kq, vq, ks, vs, bt, lengths)
+    assert float(jnp.max(jnp.abs(got - want))) < 5e-5
